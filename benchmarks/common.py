@@ -1,0 +1,99 @@
+"""Shared benchmark substrate: oracle models, schedules, metrics, artifacts.
+
+Offline constraint (DESIGN.md §7): no pretrained EDM checkpoints or image
+datasets exist in this container, so sample quality is measured as L2/L1
+distance to the exact solution / high-NFE teacher — the paper's own auxiliary
+metric (Table 11) — on the analytic Gaussian-mixture oracle, plus a learned
+tiny denoiser for the "trained model" path.  FID rows are therefore proxies;
+every table states this.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analytic, pas, schedules, solvers
+
+ART = Path(__file__).resolve().parent / "artifacts" / "repro"
+
+DIM = 64
+T_MIN, T_MAX = 0.002, 80.0
+N_CALIB = 512
+N_EVAL = 256
+TEACHER_NFE = 100
+
+
+def oracle(kind: str = "two_mode"):
+    if kind == "two_mode":
+        return analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+    if kind == "multi":
+        return analytic.make_gmm(jax.random.key(7), DIM, n_modes=8)
+    raise ValueError(kind)
+
+
+def calib_eval_sets(gmm, nfe: int, n_calib: int = N_CALIB, n_eval: int = N_EVAL):
+    s_ts, t_ts, m = schedules.nested_teacher_schedule(nfe, TEACHER_NFE,
+                                                      T_MIN, T_MAX)
+    x_c = gmm.sample_prior(jax.random.key(0), n_calib, T_MAX)
+    gt_c = solvers.ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_c)
+    x_e = gmm.sample_prior(jax.random.key(99), n_eval, T_MAX)
+    gt_e = solvers.ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_e)
+    return s_ts, (x_c, gt_c), (x_e, gt_e)
+
+
+def final_err(x0, gt_end, metric: str = "l2") -> float:
+    d = x0 - gt_end
+    if metric == "l2":
+        return float(jnp.mean(jnp.linalg.norm(d, axis=-1)))
+    return float(jnp.mean(jnp.abs(d)))
+
+
+def default_pas_cfg(**kw) -> pas.PASConfig:
+    base = dict(lr=1e-2, n_sgd_iters=300, tolerance=1e-4, loss="l1",
+                val_fraction=0.25, final_gate=True)
+    base.update(kw)
+    return pas.PASConfig(**base)
+
+
+def run_pas(solver_name: str, nfe: int, gmm=None, cfg=None,
+            eval_metric: str = "l2"):
+    """Calibrate + evaluate PAS for one (solver, NFE). Returns a result dict."""
+    gmm = gmm or oracle()
+    cfg = cfg or default_pas_cfg()
+    s_ts, (x_c, gt_c), (x_e, gt_e) = calib_eval_sets(gmm, nfe)
+    sol = solvers.make_solver(solver_name, s_ts)
+    t0 = time.time()
+    params, diag = pas.calibrate(sol, gmm.eps, x_c, gt_c, cfg)
+    train_s = time.time() - t0
+    x_plain = solvers.sample(sol, gmm.eps, x_e)
+    x_pas, _ = pas.pas_sample_trajectory(sol, gmm.eps, x_e, params, cfg)
+    return {
+        "solver": solver_name, "nfe": nfe,
+        "err_plain": final_err(x_plain, gt_e[-1], eval_metric),
+        "err_pas": final_err(x_pas, gt_e[-1], eval_metric),
+        "corrected_steps": params.corrected_paper_steps(),
+        "n_stored_params": params.n_stored_params,
+        "calib_seconds": round(train_s, 2),
+    }
+
+
+def save_table(name: str, rows, extra: dict | None = None) -> Path:
+    ART.mkdir(parents=True, exist_ok=True)
+    path = ART / f"{name}.json"
+    path.write_text(json.dumps({"rows": rows, "extra": extra or {},
+                                "generated": time.strftime("%F %T")}, indent=1))
+    return path
+
+
+def timed_us(fn, *args, n: int = 5) -> float:
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6

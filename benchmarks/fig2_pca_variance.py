@@ -1,0 +1,50 @@
+"""Paper Fig. 2: PCA cumulative percent variance of sampling trajectories.
+
+(a) single trajectory [x_T, d_N..d_1]: saturates by ~3 PCs (the PAS premise).
+(b) K trajectories pooled: does NOT saturate (samples live in distinct
+    subspaces) — why coordinates, not basis vectors, are what generalises.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pca, schedules, solvers
+
+from . import common
+
+
+def run() -> list[dict]:
+    gmm = common.oracle()
+    ts = schedules.polynomial_schedule(100, common.T_MIN, common.T_MAX)
+    sol = solvers.make_solver("euler", ts)
+    x_t = gmm.sample_prior(jax.random.key(1), 64, common.T_MAX)
+    xs, ds = solvers.sample_trajectory(sol, gmm.eps, x_t)
+
+    rows = []
+    # (a) per-trajectory [x_T, d_i...] cumvar, averaged over samples
+    cum = []
+    for b in range(16):
+        traj = jnp.concatenate([x_t[b][None], ds[:, b]], axis=0)
+        cum.append(np.asarray(pca.cumulative_variance(traj, center=False)))
+    mean_cum = np.mean(cum, axis=0)
+    for k in range(1, 7):
+        rows.append({"panel": "a_single_trajectory", "n_components": k,
+                     "cum_variance": float(mean_cum[k - 1])})
+
+    # (b) pooled across K trajectories (states x_t)
+    pooled = xs.transpose(1, 0, 2).reshape(-1, xs.shape[-1])[: 64 * 20]
+    cv_pool = np.asarray(pca.cumulative_variance(jnp.asarray(pooled)))
+    for k in (1, 2, 3, 5, 10, 20):
+        rows.append({"panel": "b_pooled_K_trajectories", "n_components": k,
+                     "cum_variance": float(cv_pool[k - 1])})
+
+    common.save_table("fig2_pca_variance", rows)
+    # headline claims (tested in tests/test_benchmarks.py)
+    assert mean_cum[2] > 0.995, mean_cum[:4]
+    assert cv_pool[2] < 0.9, cv_pool[:4]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,65 @@
+"""Paper Fig. 6 ablations: adaptive search on/off (a), loss function (b),
+number of basis vectors (c), number of calibration trajectories (d)."""
+import dataclasses
+
+import jax
+
+from repro.core import pas, solvers
+
+from . import common
+
+
+def run(nfe: int = 10) -> list[dict]:
+    gmm = common.oracle()
+    rows = []
+
+    # (a) adaptive search: without it (tolerance=-inf => always correct,
+    # no final gate) quality degrades vs with it (paper Fig. 6a / Table 7)
+    s_ts, (x_c, gt_c), (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
+    sol = solvers.make_solver("ddim", s_ts)
+    for label, cfg in (
+        ("PAS", common.default_pas_cfg()),
+        ("PAS(-AS)", common.default_pas_cfg(tolerance=-1e9, final_gate=False,
+                                            val_fraction=0.0)),
+    ):
+        params, _ = pas.calibrate(sol, gmm.eps, x_c, gt_c, cfg)
+        x0, _ = pas.pas_sample_trajectory(sol, gmm.eps, x_e, params, cfg)
+        rows.append({"panel": "a_adaptive_search", "method": label, "nfe": nfe,
+                     "err_l2": common.final_err(x0, gt_e[-1]),
+                     "n_corrected": int(params.active.sum())})
+
+    # (b) loss functions
+    for loss in ("l1", "l2", "pseudo_huber"):
+        r = common.run_pas("ddim", nfe, gmm, common.default_pas_cfg(loss=loss))
+        rows.append({"panel": "b_loss", "loss": loss, "nfe": nfe,
+                     "err_l2": r["err_pas"]})
+
+    # (c) number of basis vectors 1..4 (paper: >=2 works, 3-4 slightly better)
+    for k in (1, 2, 3, 4):
+        r = common.run_pas("ddim", nfe, gmm, common.default_pas_cfg(n_basis=k))
+        rows.append({"panel": "c_n_basis", "n_basis": k, "nfe": nfe,
+                     "err_l2": r["err_pas"]})
+
+    # (d) number of calibration trajectories
+    for n_traj in (64, 128, 256, 512):
+        cfg = common.default_pas_cfg()
+        s_ts, (x_c, gt_c), (x_e2, gt_e2) = common.calib_eval_sets(
+            gmm, nfe, n_calib=n_traj)
+        sol = solvers.make_solver("ddim", s_ts)
+        params, _ = pas.calibrate(sol, gmm.eps, x_c, gt_c, cfg)
+        x0, _ = pas.pas_sample_trajectory(sol, gmm.eps, x_e2, params, cfg)
+        rows.append({"panel": "d_n_trajectories", "n_traj": n_traj, "nfe": nfe,
+                     "err_l2": common.final_err(x0, gt_e2[-1])})
+
+    common.save_table("fig6_ablations", rows)
+
+    plain = common.run_pas("ddim", nfe, gmm)["err_plain"]
+    k_errs = {r["n_basis"]: r["err_l2"] for r in rows if r["panel"] == "c_n_basis"}
+    assert k_errs[2] < plain * 0.6            # 2 basis vectors already help
+    assert min(k_errs[3], k_errs[4]) <= k_errs[2] * 1.1  # 3-4 at least as good
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

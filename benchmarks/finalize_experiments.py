@@ -1,0 +1,26 @@
+"""Insert the generated roofline table into EXPERIMENTS.md (idempotent)."""
+import re
+from pathlib import Path
+
+from .report_roofline import roofline_table
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def main():
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    table = roofline_table("single")
+    marker = "<!-- ROOFLINE_TABLE -->"
+    block = f"{marker}\n{table}\n<!-- /ROOFLINE_TABLE -->"
+    if "<!-- /ROOFLINE_TABLE -->" in md:
+        md = re.sub(r"<!-- ROOFLINE_TABLE -->.*?<!-- /ROOFLINE_TABLE -->",
+                    block, md, flags=re.S)
+    else:
+        md = md.replace(marker, block)
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md roofline table updated "
+          f"({table.count(chr(10)) + 1} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper §3.5 cost claim: one PCA correction is negligible vs one NFE.
+
+The paper reports 0.06 s PCA vs 30.2 s NFE on Stable Diffusion.  We measure
+the same ratio on this container: the PAS basis computation (gram-trick PCA +
+Schmidt) vs one denoiser evaluation at LM scale (reduced backbone, but the
+*ratio* scales in PAS's favour with D: PCA is O(n^2 D), the denoiser O(P D)).
+Also measures the Pallas gram kernel vs the jnp oracle (interpret mode).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import pca
+from repro.kernels import ops, ref
+
+from . import common
+
+
+def run() -> list[dict]:
+    rows = []
+    for d in (4096, 65536, 1 << 20):
+        n = 12
+        q = jax.random.normal(jax.random.key(0), (n, d))
+        mask = jnp.ones((n,))
+        dvec = jax.random.normal(jax.random.key(1), (d,))
+
+        basis = jax.jit(lambda q, m, dd: pca.pas_basis(q, m, dd, 4))
+        us_basis = common.timed_us(basis, q, mask, dvec)
+        rows.append({"op": "pas_basis(gram+eigh+schmidt)", "D": d,
+                     "us_per_call": round(us_basis, 1)})
+
+    # one denoiser NFE at (reduced) LM scale for the ratio
+    from repro import models
+    from repro.configs import get_config
+    cfg = get_config("qwen1.5-0.5b").reduced(d_model=256, n_layers=4)
+    params = models.init_params(jax.random.key(0), cfg, with_diffusion_head=True)
+    x = jax.random.normal(jax.random.key(2), (8, 64, cfg.d_model))
+    sigma = jnp.full((8,), 10.0)
+    den = jax.jit(lambda p, x, s: models.denoise(p, x, s, cfg))
+    us_nfe = common.timed_us(den, params, x, sigma)
+    d_state = 8 * 64 * cfg.d_model
+    rows.append({"op": "denoiser_nfe(reduced-lm)", "D": d_state,
+                 "us_per_call": round(us_nfe, 1)})
+
+    basis_at_same_d = common.timed_us(
+        jax.jit(lambda q, m, dd: pca.pas_basis(q, m, dd, 4)),
+        jax.random.normal(jax.random.key(3), (12, d_state)),
+        jnp.ones((12,)), jax.random.normal(jax.random.key(4), (d_state,)))
+    rows.append({"op": "pas_basis_at_same_D", "D": d_state,
+                 "us_per_call": round(basis_at_same_d, 1),
+                 "ratio_vs_nfe": round(basis_at_same_d / us_nfe, 4)})
+    common.save_table("pas_overhead", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,90 @@
+"""Render §Dry-run / §Roofline markdown tables from dryrun JSON artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report_roofline [--mesh single] [--tag X]
+"""
+import argparse
+import glob
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def load(mesh: str, tag: str = ""):
+    rows = []
+    for f in sorted(glob.glob(str(ART / "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") != mesh or r.get("tag", "") != tag:
+            continue
+        rows.append(r)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    return rows
+
+
+def roofline_table(mesh: str, tag: str = "") -> str:
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "bound step | model/impl FLOPs | mem/dev (CPU-meas) | fits 16G TPU |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh, tag):
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | skip | — | — "
+                       f"| {r['reason'][:48]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR {r['error'][:40]} |")
+            continue
+        rf = r["roofline"]
+        mem = r["memory_per_device_bytes"]["total_live"] / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} "
+            f"| {fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} "
+            f"| **{rf['dominant']}** | {fmt_s(rf['bound_step_s'])} "
+            f"| {rf['model_flops_ratio']:.2f} | {mem:.1f} GiB "
+            f"| {'yes' if r.get('fits_16g_tpu') else 'NO'} |")
+    return "\n".join(out)
+
+
+def dryrun_table(mesh: str, tag: str = "") -> str:
+    out = ["| arch | shape | status | compile s | args/dev | temps/dev | "
+           "HLO colls (loop-aware) | HLO flops/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh, tag):
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | | | | | |")
+            continue
+        m = r["memory_per_device_bytes"]
+        colls = r.get("collectives", {})
+        cstr = " ".join(f"{k.split('-')[0]}:{v['count']}x{v['bytes']/2**20:.0f}M"
+                        for k, v in colls.items() if v["count"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['seconds']['compile']} "
+            f"| {m['arguments']/2**30:.2f}G | {m['temps']/2**30:.2f}G "
+            f"| {cstr or '—'} | {r['cost'].get('flops', 0):.2e} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun", "both"])
+    args = ap.parse_args()
+    if args.table in ("roofline", "both"):
+        print(roofline_table(args.mesh, args.tag))
+    if args.table in ("dryrun", "both"):
+        print()
+        print(dryrun_table(args.mesh, args.tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark aggregator: one module per paper table/figure + the PAS overhead
+microbenchmark.  Prints ``name,us_per_call,derived`` CSV per the deliverable
+and writes per-table JSON artifacts under benchmarks/artifacts/repro/.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2,table2,...] [--fast]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,fig3,table2,table5,table6,table8,"
+                         "table9,table11,fig6,learned,overhead")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller NFE grids (CI mode)")
+    args = ap.parse_args()
+
+    from . import (fig2_pca_variance, fig3_truncation, fig6_ablations,
+                   learned_denoiser, pas_overhead, table2_solvers,
+                   table5_nfe_sweep, table6_adaptive_steps, table8_tolerance,
+                   table9_teacher, table11_l1l2)
+
+    suite = {
+        "fig2": lambda: fig2_pca_variance.run(),
+        "fig3": lambda: fig3_truncation.run(),
+        "table2": lambda: table2_solvers.run((5, 10) if args.fast
+                                             else (5, 6, 8, 10)),
+        "table5": lambda: table5_nfe_sweep.run((5, 8, 10) if args.fast
+                                               else (4, 5, 6, 7, 8, 9, 10)),
+        "table6": lambda: table6_adaptive_steps.run((5, 10) if args.fast
+                                                    else (5, 6, 8, 10)),
+        "table8": lambda: table8_tolerance.run(),
+        "table9": lambda: table9_teacher.run(),
+        "table11": lambda: table11_l1l2.run(),
+        "fig6": lambda: fig6_ablations.run(),
+        "learned": lambda: learned_denoiser.run(),
+        "overhead": lambda: pas_overhead.run(),
+    }
+    only = args.only.split(",") if args.only else list(suite)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in only:
+        t0 = time.time()
+        try:
+            rows = suite[name]()
+            us = (time.time() - t0) * 1e6
+            derived = f"rows={len(rows)}"
+            if name == "overhead":
+                ratio = next((r.get("ratio_vs_nfe") for r in rows
+                              if "ratio_vs_nfe" in r), "")
+                derived += f";pas_basis_vs_nfe_ratio={ratio}"
+            if name in ("table2", "table5"):
+                best = min((r for r in rows if "err_l2" in r),
+                           key=lambda r: r["err_l2"])
+                derived += f";best={best['method']}@{best['nfe']}:{best['err_l2']:.4f}"
+            print(f"{name},{us:.0f},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name},0,FAILED:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

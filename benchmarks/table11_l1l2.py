@@ -1,0 +1,28 @@
+"""Paper Table 11: L1/L2 metrics vs the teacher across iPNDM orders 1..4,
+with and without PAS (PAS never hurts; gains shrink as the solver improves)."""
+from repro.core import solvers
+
+from . import common
+
+
+def run(nfe: int = 10) -> list[dict]:
+    gmm = common.oracle()
+    cfg = common.default_pas_cfg()
+    rows = []
+    for order in (1, 2, 3, 4):
+        name = f"ipndm{order}"
+        for metric in ("l2", "l1"):
+            r = common.run_pas(name, nfe, gmm, cfg, eval_metric=metric)
+            rows.append({"method": name, "order": order, "metric": metric,
+                         "nfe": nfe, "plain": r["err_plain"],
+                         "pas": r["err_pas"],
+                         "corrected_steps": r["corrected_steps"]})
+    common.save_table("table11_l1l2", rows)
+    for r in rows:
+        assert r["pas"] <= r["plain"] * 1.05, r   # final gate: never worse
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,85 @@
+"""Paper Table 2 (proxy): solver quality across the zoo of fast solvers, with
+and without PAS and TP, NFE in {5, 6, 8, 10}.
+
+Offline proxy metric: mean L2 distance of the final state to the 100-NFE
+teacher endpoint on held-out trajectories (paper Table 11's auxiliary metric;
+FID needs the Inception network + 50k real images — unavailable offline).
+The paper-faithful ordering to reproduce: DDIM (worst) >> DDIM+PAS;
+iPNDM > iPNDM+PAS (small); +TP improves both; TP+PAS best.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pas, solvers, teleport
+
+from . import common
+
+
+def _tp_eval(gmm, solver_name, nfe, with_pas, cfg):
+    """DDIM+TP(+PAS): teleport to sigma_skip=10 then solve with full budget."""
+    data = gmm.sample_data(jax.random.key(5), 4096)
+    stats = teleport.gaussian_stats_from_data(data)
+    tp_ts = teleport.tp_schedule(nfe, sigma_skip=10.0, t_min=common.T_MIN)
+    sol = solvers.make_solver(solver_name, tp_ts)
+
+    s_ts, (x_c, gt_c), (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
+    x_c_skip = teleport.teleport(stats, x_c, common.T_MAX, 10.0)
+    x_e_skip = teleport.teleport(stats, x_e, common.T_MAX, 10.0)
+
+    if with_pas:
+        # teacher trajectory along the post-TP schedule
+        from repro.core import schedules
+        t_ts2, m2 = None, None
+        s2, t_ts2, m2 = schedules.nested_teacher_schedule(
+            nfe, common.TEACHER_NFE, common.T_MIN, 10.0)
+        gt_c2 = solvers.ground_truth_trajectory(gmm.eps, s2, t_ts2, m2, x_c_skip)
+        params, _ = pas.calibrate(sol, gmm.eps, x_c_skip, gt_c2, cfg)
+        x0, _ = pas.pas_sample_trajectory(sol, gmm.eps, x_e_skip, params, cfg)
+    else:
+        x0 = solvers.sample(sol, gmm.eps, x_e_skip)
+    return common.final_err(x0, gt_e[-1])
+
+
+def run(nfes=(5, 6, 8, 10)) -> list[dict]:
+    gmm = common.oracle()
+    cfg = common.default_pas_cfg()
+    rows = []
+    for nfe in nfes:
+        s_ts, _, (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
+        # training-free baselines
+        for name in ("ddim", "dpmpp2m", "deis3", "ipndm3", "ipndm2"):
+            sol = solvers.make_solver(name, s_ts)
+            rows.append({"method": name, "nfe": nfe,
+                         "err_l2": common.final_err(
+                             solvers.sample(sol, gmm.eps, x_e), gt_e[-1])})
+        # 2-eval solvers at matched NFE budget
+        if nfe % 2 == 0:
+            from repro.core import schedules
+            half = schedules.polynomial_schedule(nfe // 2, common.T_MIN,
+                                                 common.T_MAX)
+            for name in ("heun", "dpm2"):
+                sol = solvers.make_solver(name, half)
+                rows.append({"method": name, "nfe": nfe,
+                             "err_l2": common.final_err(
+                                 solvers.sample(sol, gmm.eps, x_e), gt_e[-1])})
+        # PAS-corrected
+        for name in ("ddim", "ipndm3"):
+            r = common.run_pas(name, nfe, gmm, cfg)
+            rows.append({"method": f"{name}+PAS", "nfe": nfe,
+                         "err_l2": r["err_pas"],
+                         "corrected_steps": r["corrected_steps"],
+                         "n_stored_params": r["n_stored_params"],
+                         "calib_seconds": r["calib_seconds"]})
+        # TP and TP+PAS (paper's strongest rows)
+        rows.append({"method": "ddim+TP", "nfe": nfe,
+                     "err_l2": _tp_eval(gmm, "ddim", nfe, False, cfg)})
+        rows.append({"method": "ddim+TP+PAS", "nfe": nfe,
+                     "err_l2": _tp_eval(gmm, "ddim", nfe, True, cfg)})
+    common.save_table("table2_solvers", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,22 @@
+"""Paper Table 5: NFE sweep 4..10 for DDIM / iPNDM3 with and without PAS."""
+from . import common
+
+
+def run(nfes=(4, 5, 6, 7, 8, 9, 10)) -> list[dict]:
+    gmm = common.oracle()
+    cfg = common.default_pas_cfg()
+    rows = []
+    for nfe in nfes:
+        for name in ("ddim", "ipndm3"):
+            r = common.run_pas(name, nfe, gmm, cfg)
+            rows.append({"method": name, "nfe": nfe, "err_l2": r["err_plain"]})
+            rows.append({"method": f"{name}+PAS", "nfe": nfe,
+                         "err_l2": r["err_pas"],
+                         "corrected_steps": r["corrected_steps"]})
+    common.save_table("table5_nfe_sweep", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

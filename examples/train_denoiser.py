@@ -1,0 +1,87 @@
+"""End-to-end training driver: train a small EDM denoiser for a few hundred
+steps with the production runtime (fault-tolerant loop: async checkpoints,
+resume, straggler monitor), then calibrate PAS on the *learned* model.
+
+  PYTHONPATH=src python examples/train_denoiser.py [--steps 400] [--resume]
+"""
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (PASConfig, calibrate, nested_teacher_schedule,
+                        pas_sample_trajectory, sample, make_solver,
+                        ground_truth_trajectory, two_mode_gmm)
+from repro.diffusion import (EDMConfig, edm_loss, eps_from_denoiser,
+                             init_denoiser, precondition, raw_apply)
+from repro.optim import AdamW, warmup_cosine
+from repro.runtime import TrainLoopConfig, run_train_loop
+
+DIM = 64
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="edm_ckpt_")
+
+    gmm = two_mode_gmm(DIM, sep=6.0, var=0.25)
+    edm_cfg = EDMConfig(sigma_data=float(jnp.std(
+        gmm.sample_data(jax.random.key(11), 2048))))
+    params = init_denoiser(jax.random.key(0), DIM, width=128, depth=3)
+    opt = AdamW(lr=warmup_cosine(2e-3, 20, args.steps), weight_decay=0.0)
+    opt_state = opt.init(params)
+
+    def batches():
+        step = 0
+        while True:
+            yield {"key": jax.random.key(step)}
+            step += 1
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        k1, k2 = jax.random.split(batch["key"])
+        x0 = gmm.sample_data(k1, 256)
+
+        def loss_fn(p):
+            den = precondition(lambda x, c: raw_apply(p, x, c), edm_cfg)
+            return edm_loss(den, k2, x0, edm_cfg)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, om = opt.update(grads, opt_state, params)
+        return params, opt_state, {"ce_loss": loss, **om}
+
+    cfg = TrainLoopConfig(total_steps=args.steps, ckpt_dir=ckpt_dir,
+                          ckpt_every=100, log_every=50)
+    params, _, summary = run_train_loop(step_fn, params, opt_state, batches(),
+                                        cfg)
+    print(f"trained {summary['final_step']} steps "
+          f"(resumed from {summary['resumed_from']}); "
+          f"loss {summary['history'][0]['ce_loss']:.3f} -> "
+          f"{summary['history'][-1]['ce_loss']:.3f}; ckpts in {ckpt_dir}")
+
+    # PAS on the learned model
+    den = precondition(lambda x, c: raw_apply(params, x, c), edm_cfg)
+    eps_fn = eps_from_denoiser(den)
+    s_ts, t_ts, m = nested_teacher_schedule(10, 100, 0.002, 80.0)
+    solver = make_solver("ddim", s_ts)
+    x_c = gmm.sample_prior(jax.random.key(1), 256, 80.0)
+    gt = ground_truth_trajectory(eps_fn, s_ts, t_ts, m, x_c)
+    pas_cfg = PASConfig(val_fraction=0.25)
+    pas_params, _ = calibrate(solver, eps_fn, x_c, gt, pas_cfg)
+
+    x_e = gmm.sample_prior(jax.random.key(2), 256, 80.0)
+    gt_e = ground_truth_trajectory(eps_fn, s_ts, t_ts, m, x_e)
+    err = lambda x: float(jnp.mean(jnp.linalg.norm(x - gt_e[-1], axis=-1)))
+    e0 = err(sample(solver, eps_fn, x_e))
+    e1 = err(pas_sample_trajectory(solver, eps_fn, x_e, pas_params, pas_cfg)[0])
+    print(f"learned-model DDIM err {e0:.4f} -> +PAS {e1:.4f} "
+          f"(steps {pas_params.corrected_paper_steps()})")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .checkpoint import (CheckpointError, cleanup, latest_step, restore, save,
+                         save_async)
+
+__all__ = ["CheckpointError", "cleanup", "latest_step", "restore", "save",
+           "save_async"]

@@ -1,0 +1,23 @@
+"""Architecture registry: one module per assigned architecture (+ paper's own).
+
+``--arch <id>`` anywhere in the launchers resolves through get_config().
+"""
+from . import (falcon_mamba_7b, gemma3_1b, granite_34b, internvl2_1b,
+               llama4_scout_17b_16e, mixtral_8x7b, qwen1_5_0_5b, qwen2_72b,
+               recurrentgemma_9b, whisper_small)
+from . import edm_tiny
+from .base import ARCH_IDS, LayerSpec, ModelConfig, get_config, register
+
+ARCH_MODULES = (internvl2_1b, falcon_mamba_7b, qwen2_72b, qwen1_5_0_5b,
+                granite_34b, gemma3_1b, whisper_small, llama4_scout_17b_16e,
+                mixtral_8x7b, recurrentgemma_9b, edm_tiny)
+
+# the ten assigned zoo architectures (excludes the paper's own EDM config)
+ASSIGNED_ARCHS = (
+    "internvl2-1b", "falcon-mamba-7b", "qwen2-72b", "qwen1.5-0.5b",
+    "granite-34b", "gemma3-1b", "whisper-small", "llama4-scout-17b-16e",
+    "mixtral-8x7b", "recurrentgemma-9b",
+)
+
+__all__ = ["ARCH_IDS", "ASSIGNED_ARCHS", "LayerSpec", "ModelConfig",
+           "get_config", "register"]

@@ -1,0 +1,199 @@
+"""Model configuration schema + registry for the assigned architecture zoo.
+
+Heterogeneous layer stacks (gemma3's 5 local : 1 global, recurrentgemma's
+1 attn : 2 RG-LRU) are expressed as a repeating ``pattern`` of LayerSpecs.
+The transformer scans over ``n_layers // len(pattern)`` homogeneous groups
+(keeping HLO size O(1) in depth) and unrolls the ``n_layers % len(pattern)``
+remainder — every attention call site keeps a *static* window/global config,
+so kernels never branch on traced flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["LayerSpec", "ModelConfig", "register", "get_config", "ARCH_IDS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer position inside the repeating pattern."""
+
+    kind: str = "attn"            # "attn" | "mamba" | "rglru"
+    window: Optional[int] = None  # sliding-window size (None = full attention)
+    cross_attn: bool = False      # add cross-attention (enc-dec decoders)
+
+    @property
+    def is_global(self) -> bool:
+        return self.kind == "attn" and self.window is None
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    pattern: tuple[LayerSpec, ...] = (LayerSpec("attn"),)
+    qkv_bias: bool = False
+    act: str = "swiglu"           # swiglu | geglu | gelu
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    rope_theta: Optional[float] = 1e4   # None -> learned absolute positions
+    logits_soft_cap: Optional[float] = None
+    # MoE
+    n_experts: int = 0
+    moe_top_k: int = 0
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+    # SSM (mamba-1)
+    ssm_state: int = 0
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: Optional[int] = None
+    # RG-LRU (griffin)
+    lru_width: Optional[int] = None
+    conv_width: int = 4
+    # enc-dec + modality frontend stubs
+    is_encoder_decoder: bool = False
+    frontend: str = "none"        # none | vision_patches | audio_frames
+    frontend_len: int = 0         # stub prefix length (patches / enc frames)
+    # misc
+    max_position: int = 131072
+    sub_quadratic: bool = False   # eligible for the long_500k cell
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    notes: str = ""
+
+    # ----- derived -----
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def d_inner(self) -> int:  # mamba inner width
+        return self.expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        if self.dt_rank is not None:
+            return self.dt_rank
+        return max(self.d_model // 16, 1)
+
+    @property
+    def lru_width_(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_remainder(self) -> int:
+        return self.n_layers % len(self.pattern)
+
+    @property
+    def has_decoder(self) -> bool:
+        return True  # every zoo arch has an AR decoder stack
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for roofline."""
+        e, f, v = self.d_model, self.d_ff, self.vocab_size
+        h, kv, dh = self.n_heads, self.n_kv_heads, self.head_dim_
+        per_layer = 0.0
+        for spec in self.pattern:
+            if spec.kind == "attn":
+                p = e * (h * dh) + 2 * e * (kv * dh) + (h * dh) * e
+                if spec.cross_attn:
+                    p *= 2
+            elif spec.kind == "mamba":
+                di, n, r = self.d_inner, self.ssm_state, self.dt_rank_
+                p = e * 2 * di + di * self.d_conv + di * (r + 2 * n) + r * di \
+                    + di * n + di + di * e
+            else:  # rglru
+                w = self.lru_width_
+                p = 2 * e * w + w * self.conv_width + 3 * w + w * e
+            if spec.kind != "mamba":
+                if self.n_experts > 0:
+                    n_ff = 3 if self.act in ("swiglu", "geglu") else 2
+                    p += self.n_experts * n_ff * e * f + e * self.n_experts
+                    if self.shared_expert:
+                        p += n_ff * e * f
+                else:
+                    n_ff = 3 if self.act in ("swiglu", "geglu") else 2
+                    p += n_ff * e * f
+            per_layer += p
+        per_layer /= len(self.pattern)
+        total = self.n_layers * per_layer + v * e
+        if not self.tie_embeddings:
+            total += v * e
+        if self.is_encoder_decoder:
+            total *= 1.0  # decoder-only accounting; encoder is a stub
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k of n_experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        e, f = self.d_model, self.d_ff
+        n_ff = 3 if self.act in ("swiglu", "geglu") else 2
+        inactive = (self.n_experts - self.moe_top_k) * n_ff * e * f
+        return int(self.param_count() - self.n_layers * inactive)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Smoke-test-sized config of the same family (scan path preserved)."""
+        pat = len(self.pattern)
+        small = dict(
+            n_layers=2 * pat + min(self.n_remainder, 1),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 4) if self.n_kv_heads < self.n_heads else 4),
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            n_experts=min(self.n_experts, 4),
+            moe_top_k=min(self.moe_top_k, 2),
+            # tiny token counts make capacity drops likely and nondeterministic
+            # across call shapes; smoke tests want routing-exact equivalence
+            capacity_factor=4.0 if self.n_experts else self.capacity_factor,
+            ssm_state=min(self.ssm_state, 4) if self.ssm_state else 0,
+            dt_rank=4 if self.ssm_state else None,
+            lru_width=64 if self.lru_width or any(
+                s.kind == "rglru" for s in self.pattern) else None,
+            frontend_len=8 if self.frontend != "none" else 0,
+            dtype="float32",
+            pattern=tuple(
+                dataclasses.replace(s, window=min(s.window, 8) if s.window else None)
+                for s in self.pattern),
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    from . import ARCH_MODULES  # ensure registration side effects ran
+    del ARCH_MODULES
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def ARCH_IDS() -> list[str]:
+    from . import ARCH_MODULES
+    del ARCH_MODULES
+    return sorted(_REGISTRY)

@@ -1,0 +1,26 @@
+"""edm-tiny: the paper's own model kind — a small EDM denoiser config.
+
+The PAS paper corrects sampling of EDM-parameterised diffusion models
+(CIFAR10-scale).  This config drives examples/train_denoiser.py and the
+PAS-on-a-learned-model tests: an MLP denoiser over flattened images with
+EDM preconditioning (diffusion/edm.py).  It is registered alongside the zoo
+so launchers can select it, but it is not one of the 40 dry-run cells.
+"""
+import dataclasses
+
+from .base import LayerSpec, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="edm-tiny",
+    family="diffusion",
+    n_layers=4,            # denoiser MLP depth
+    d_model=256,           # hidden width
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=512,
+    vocab_size=0,
+    pattern=(LayerSpec("attn"),),  # unused by the MLP denoiser
+    rope_theta=None,
+    dtype="float32",
+    notes="image_dim set by the diffusion example (e.g. 8x8x3).",
+))

@@ -1,0 +1,28 @@
+"""falcon-mamba-7b [ssm]: pure Mamba-1, attention-free.
+
+[arXiv:2410.05355; unverified] 64L d_model=4096 (attn-free) d_ff=0
+vocab=65024, ssm_state=16.  O(1) per-token state -> runs long_500k.
+"""
+from .base import LayerSpec, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=65024,
+    pattern=(LayerSpec("mamba"),),
+    act="swiglu",          # unused (mamba blocks have no separate MLP)
+    norm="rmsnorm",
+    rope_theta=None,
+    ssm_state=16,
+    d_conv=4,
+    expand=2,
+    max_position=1 << 20,
+    sub_quadratic=True,
+    tie_embeddings=True,
+    notes="mamba1 blocks only; d_inner=8192, dt_rank=256.",
+))

@@ -1,0 +1,33 @@
+"""gemma3-1b [dense]: 5 local : 1 global attention pattern, 128k-class context.
+
+[hf:google/gemma-3-1b-pt; unverified] 26L d_model=1152 4H (GQA kv=1)
+d_ff=6912 vocab=262144.  Local window 512; pattern-grouped scan handles the
+5:1 mix (4 groups of 6 + 2 remainder local layers).
+
+long_500k eligibility: the dominant (5/6) layers have bounded-window KV; the
+rare global layers are O(L) per decoded token — included, noted in DESIGN.md.
+"""
+from .base import LayerSpec, ModelConfig, register
+
+_LOCAL = LayerSpec("attn", window=512)
+_GLOBAL = LayerSpec("attn", window=None)
+
+CONFIG = register(ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    pattern=(_LOCAL, _LOCAL, _LOCAL, _LOCAL, _LOCAL, _GLOBAL),
+    act="geglu",
+    norm="rmsnorm",
+    rope_theta=1e6,
+    logits_soft_cap=30.0,
+    max_position=131072,
+    sub_quadratic=True,
+    tie_embeddings=True,
+))

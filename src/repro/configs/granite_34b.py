@@ -1,0 +1,24 @@
+"""granite-34b [dense]: deep MQA code model, llama-style blocks.
+
+[arXiv:2405.04324; hf] 88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152.
+"""
+from .base import LayerSpec, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-34b",
+    family="dense",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    pattern=(LayerSpec("attn"),),
+    act="gelu",            # code-model MLP (d_ff = 4x d_model)
+    norm="layernorm",
+    rope_theta=1e4,
+    max_position=8192,
+    sub_quadratic=False,
+    notes="MQA (kv=1): KV projections replicated under TP, Q sharded.",
+))

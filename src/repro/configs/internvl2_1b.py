@@ -1,0 +1,28 @@
+"""internvl2-1b [vlm]: InternViT frontend (stub) + InternLM2-1B backbone.
+
+[arXiv:2404.16821; hf] 24L d_model=896 14H (GQA kv=2) d_ff=4864 vocab=151655.
+The vision frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings (B, frontend_len, d_model) prepended to the text.
+"""
+from .base import LayerSpec, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151655,
+    pattern=(LayerSpec("attn"),),
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=1e6,
+    frontend="vision_patches",
+    frontend_len=256,
+    max_position=32768,
+    sub_quadratic=False,
+    notes="InternLM2 decoder; vision patches precomputed (frontend stub).",
+))

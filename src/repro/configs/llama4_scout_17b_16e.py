@@ -1,0 +1,28 @@
+"""llama4-scout-17b-a16e [moe]: 16 routed experts top-1 + shared expert.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified] 48L d_model=5120 40H
+(GQA kv=8) d_ff=8192 vocab=202048, MoE 16e top-1, early fusion (stub).
+"""
+from .base import LayerSpec, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama4-scout-17b-16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    pattern=(LayerSpec("attn"),),
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=5e5,
+    n_experts=16,
+    moe_top_k=1,
+    shared_expert=True,
+    max_position=131072,
+    sub_quadratic=False,
+    notes="early-fusion multimodal -> text backbone only (frontend stub rule).",
+))

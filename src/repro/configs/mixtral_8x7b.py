@@ -1,0 +1,26 @@
+"""mixtral-8x7b [moe]: 8 experts top-2, sliding-window attention.
+
+[arXiv:2401.04088; hf] 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+SWA (window 4096) bounds the decode KV cache -> long_500k eligible.
+"""
+from .base import LayerSpec, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    pattern=(LayerSpec("attn", window=4096),),
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=1e6,
+    n_experts=8,
+    moe_top_k=2,
+    max_position=131072,
+    sub_quadratic=True,
+))

@@ -1,0 +1,26 @@
+"""qwen1.5-0.5b [dense]: MHA (kv == heads) with QKV bias.
+
+[hf:Qwen/Qwen1.5-0.5B; hf] 24L d_model=1024 16H (GQA kv=16) d_ff=2816
+vocab=151936.
+"""
+from .base import LayerSpec, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen1.5-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=2816,
+    vocab_size=151936,
+    pattern=(LayerSpec("attn"),),
+    qkv_bias=True,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=1e6,
+    max_position=32768,
+    sub_quadratic=False,
+    tie_embeddings=True,
+))

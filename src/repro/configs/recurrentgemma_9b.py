@@ -1,0 +1,28 @@
+"""recurrentgemma-9b [hybrid]: Griffin — RG-LRU + local attention, 1:2.
+
+[arXiv:2402.19427; unverified] 38L d_model=4096 16H (GQA kv=1) d_ff=12288
+vocab=256000.  Pattern (rglru, rglru, local-attn) -> 12 groups + 2 remainder
+RG-LRU layers.  Fixed-size recurrent state + bounded window -> long_500k.
+"""
+from .base import LayerSpec, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    pattern=(LayerSpec("rglru"), LayerSpec("rglru"),
+             LayerSpec("attn", window=2048)),
+    act="geglu",
+    norm="rmsnorm",
+    rope_theta=1e4,
+    lru_width=4096,
+    conv_width=4,
+    max_position=1 << 20,
+    sub_quadratic=True,
+))

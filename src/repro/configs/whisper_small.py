@@ -1,0 +1,31 @@
+"""whisper-small [audio]: encoder-decoder; conv/audio frontend is a STUB.
+
+[arXiv:2212.04356; unverified] 12L d_model=768 12H (kv=12) d_ff=3072
+vocab=51865.  Per the assignment, the modality frontend provides precomputed
+frame embeddings: input_specs() supplies encoder states (B, 1500, d_model);
+the framework runs the 12-layer decoder (self-attn + cross-attn).
+decode shapes run the decoder with self+cross KV caches; long_500k skipped
+(full attention + 448-token architectural decoder context).
+"""
+from .base import LayerSpec, ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    pattern=(LayerSpec("attn", cross_attn=True),),
+    act="gelu",
+    norm="layernorm",
+    rope_theta=None,       # learned absolute positions
+    is_encoder_decoder=True,
+    frontend="audio_frames",
+    frontend_len=1500,
+    max_position=448,
+    sub_quadratic=False,
+))

@@ -1,0 +1,23 @@
+"""repro.core — PAS (PCA-based Adaptive Search) and its solver substrate."""
+
+from .analytic import GaussianMixture, gaussian_ode_solution, make_gmm, two_mode_gmm
+from .pas import (PASConfig, PASParams, calibrate, pas_sample,
+                  pas_sample_trajectory, truncation_error_curve)
+from .pca import cumulative_variance, pas_basis, schmidt, topk_right_singular
+from .schedules import nested_teacher_schedule, polynomial_schedule
+from .solvers import (SOLVER_NAMES, ground_truth_trajectory, make_solver,
+                      sample, sample_trajectory)
+from . import teleport
+from .teleport import GaussianStats, gaussian_stats_from_data, tp_schedule
+
+__all__ = [
+    "GaussianMixture", "gaussian_ode_solution", "make_gmm", "two_mode_gmm",
+    "PASConfig", "PASParams", "calibrate", "pas_sample", "pas_sample_trajectory",
+    "truncation_error_curve", "cumulative_variance", "pas_basis", "schmidt",
+    "topk_right_singular", "nested_teacher_schedule", "polynomial_schedule",
+    "SOLVER_NAMES", "ground_truth_trajectory", "make_solver", "sample",
+    "sample_trajectory", "GaussianStats", "gaussian_stats_from_data",
+    "teleport", "tp_schedule", "distributed",
+]
+
+from . import distributed  # noqa: E402  (module-level export, no heavy deps)

@@ -1,0 +1,116 @@
+"""Analytic score models under the EDM parameterisation (alpha=1, sigma=t).
+
+These stand in for pretrained diffusion models (DESIGN.md §7): for a Gaussian
+mixture data distribution the marginal q_t = sum_k w_k N(mu_k, S_k + t^2 I) has
+an exact score, hence an exact eps(x, t) = -t * score.  For a single Gaussian
+the PF-ODE additionally has a closed-form solution, giving a ground-truth
+oracle for solver-order and PAS-gain measurements.
+
+All eps functions have signature ``eps(x, t) -> eps`` with x of shape
+(..., D) and scalar t, matching the solver interface in core/solvers.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+EpsFn = Callable[[Array, Array], Array]
+
+__all__ = ["GaussianMixture", "make_gmm", "two_mode_gmm", "gaussian_ode_solution"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GaussianMixture:
+    """Diagonal-covariance Gaussian mixture q_data = sum_k w_k N(mu_k, diag(var_k))."""
+
+    means: Array     # (K, D)
+    variances: Array # (K, D) diagonal covariances
+    log_weights: Array  # (K,)
+
+    @property
+    def dim(self) -> int:
+        return self.means.shape[-1]
+
+    @property
+    def n_modes(self) -> int:
+        return self.means.shape[0]
+
+    def log_prob_t(self, x: Array, t: Array) -> Array:
+        """log q_t(x) for x (..., D), scalar t. EDM forward: x_t = x_0 + t*eps."""
+        var = self.variances + t**2  # (K, D)
+        diff = x[..., None, :] - self.means  # (..., K, D)
+        quad = jnp.sum(diff**2 / var, axis=-1)  # (..., K)
+        logdet = jnp.sum(jnp.log(var), axis=-1)  # (K,)
+        d = self.dim
+        comp = -0.5 * (quad + logdet + d * jnp.log(2 * jnp.pi))
+        return jax.nn.logsumexp(comp + self.log_weights, axis=-1)
+
+    def score(self, x: Array, t: Array) -> Array:
+        """grad_x log q_t(x): posterior-weighted Gaussian scores."""
+        var = self.variances + t**2  # (K, D)
+        diff = x[..., None, :] - self.means  # (..., K, D)
+        quad = jnp.sum(diff**2 / var, axis=-1)  # (..., K)
+        logdet = jnp.sum(jnp.log(var), axis=-1)
+        log_r = self.log_weights - 0.5 * (quad + logdet)
+        r = jax.nn.softmax(log_r, axis=-1)  # (..., K) responsibilities
+        per_mode = -diff / var  # (..., K, D)
+        return jnp.sum(r[..., None] * per_mode, axis=-2)
+
+    def eps(self, x: Array, t: Array) -> Array:
+        """Noise prediction: eps = -t * score (paper eq. 6 with sigma_t = t)."""
+        return -t * self.score(x, t)
+
+    def x0_pred(self, x: Array, t: Array) -> Array:
+        """Data prediction E[x0 | x_t] = x + t^2 * score (Tweedie)."""
+        return x + t**2 * self.score(x, t)
+
+    def sample_data(self, key: jax.Array, n: int) -> Array:
+        kk, kn = jax.random.split(key)
+        comp = jax.random.categorical(kk, self.log_weights, shape=(n,))
+        noise = jax.random.normal(kn, (n, self.dim))
+        return self.means[comp] + jnp.sqrt(self.variances[comp]) * noise
+
+    def sample_prior(self, key: jax.Array, n: int, t_max: float) -> Array:
+        """x_T ~ N(0, T^2 I) (EDM prior; data term negligible at T=80)."""
+        return t_max * jax.random.normal(key, (n, self.dim))
+
+
+def make_gmm(key: jax.Array, dim: int, n_modes: int, spread: float = 4.0,
+             var_lo: float = 0.05, var_hi: float = 0.6) -> GaussianMixture:
+    """A reproducible random mixture with well-separated modes."""
+    km, kv, kw = jax.random.split(key, 3)
+    means = spread * jax.random.normal(km, (n_modes, dim))
+    variances = jax.random.uniform(kv, (n_modes, dim), minval=var_lo, maxval=var_hi)
+    logw = jax.nn.log_softmax(0.5 * jax.random.normal(kw, (n_modes,)))
+    return GaussianMixture(means, variances, logw)
+
+
+def two_mode_gmm(dim: int, sep: float = 6.0, var: float = 0.25) -> GaussianMixture:
+    """Two well-separated modes along e_1: the minimal 'curved trajectory' model.
+
+    Produces strongly S-shaped truncation error (paper Fig. 3) because the
+    trajectory bends where posterior mass switches between modes.
+    """
+    mu = np.zeros((2, dim), np.float32)
+    mu[0, 0] = +sep / 2
+    mu[1, 0] = -sep / 2
+    variances = np.full((2, dim), var, np.float32)
+    logw = np.log(np.array([0.5, 0.5], np.float32))
+    return GaussianMixture(jnp.asarray(mu), jnp.asarray(variances), jnp.asarray(logw))
+
+
+def gaussian_ode_solution(mean: Array, variance: Array, x_t: Array,
+                          t_from: Array, t_to: Array) -> Array:
+    """Closed-form PF-ODE solution for a single diagonal Gaussian.
+
+    dx/dt = eps(x,t) = t (x - mu) / (var + t^2)  per coordinate, so
+    (x - mu)(t) = (x - mu)(T) * sqrt((var + t^2) / (var + T^2)).
+    Exact for any t_from -> t_to; used as the solver-convergence oracle.
+    """
+    scale = jnp.sqrt((variance + t_to**2) / (variance + t_from**2))
+    return mean + (x_t - mean) * scale

@@ -1,0 +1,126 @@
+"""Distributed PAS: sharded-state PCA/Schmidt/correction via shard_map + psum.
+
+The PAS state dimension D (flattened sample: S*E for diffusion-LM serving,
+C*H*W for images) is sharded across the mesh.  Every PAS reduction is over D,
+so the *entire* cross-device cost of PAS is:
+
+  * one psum of an (n+1 x n+1) Gram matrix (n <= NFE+2, so ~1 KB),
+  * ~n_basis^2 scalar psums for Gram-Schmidt inner products,
+  * one scalar psum for ||d||.
+
+Everything else is local.  This is the TPU-native formulation of the paper's
+"PCA cost is negligible" claim (DESIGN.md §3).  Two interchangeable paths:
+
+  * ``pas_basis_sharded`` — explicit collectives, for use inside shard_map
+    (serving integration, and the path the dry-run exercises at 512 devices);
+  * plain ``core.pca`` under pjit — XLA inserts the same collectives
+    automatically (tested equivalent).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .pca import _DEGENERATE_NORM, _EVAL_FLOOR
+
+Array = jax.Array
+
+__all__ = [
+    "psum_gram",
+    "topk_right_singular_sharded",
+    "schmidt_sharded",
+    "pas_basis_sharded",
+    "corrected_direction_sharded",
+    "make_sharded_pas_step",
+]
+
+
+def psum_gram(x_local: Array, axis_name) -> Array:
+    """Gram matrix of a D-sharded buffer: local contraction + tiny all-reduce."""
+    return jax.lax.psum(x_local @ x_local.T, axis_name)
+
+
+def _pdot(a: Array, b: Array, axis_name) -> Array:
+    return jax.lax.psum(jnp.vdot(a, b), axis_name)
+
+
+def topk_right_singular_sharded(x_local: Array, k: int, axis_name,
+                                mask: Array | None = None) -> Array:
+    """Sharded version of pca.topk_right_singular; x_local (n, D_local)."""
+    if mask is not None:
+        x_local = x_local * mask[:, None].astype(x_local.dtype)
+    g = psum_gram(x_local, axis_name)            # (n, n) replicated
+    evals, evecs = jnp.linalg.eigh(g)            # tiny, replicated compute
+    top = jnp.flip(evals[-k:])
+    w = jnp.flip(evecs[:, -k:], axis=1)          # (n, k)
+    s = jnp.sqrt(jnp.clip(top, _EVAL_FLOOR))
+    v = (x_local.T @ w) / s                      # (D_local, k) — local
+    ok = (top > _EVAL_FLOOR * 10).astype(x_local.dtype)
+    v = (v * ok).T
+    sgn = jnp.sign(jnp.sum(w, axis=0))[:, None]  # replicated sign convention
+    return v * jnp.where(sgn == 0, 1.0, sgn)
+
+
+def schmidt_sharded(vs_local: Array, axis_name, rel_tol: float = 1e-4) -> Array:
+    """Modified Gram-Schmidt on row-sharded vectors (k, D_local)."""
+    k = vs_local.shape[0]
+    us = []
+    for j in range(k):
+        v = vs_local[j]
+        v_in_norm = jnp.sqrt(_pdot(v, v, axis_name))
+        for u in us:
+            v = v - _pdot(u, v, axis_name) * u
+        nrm = jnp.sqrt(_pdot(v, v, axis_name))
+        floor = jnp.maximum(rel_tol * v_in_norm, _DEGENERATE_NORM)
+        u = jnp.where(nrm > floor, v / jnp.maximum(nrm, _DEGENERATE_NORM), 0.0)
+        us.append(u)
+    return jnp.stack(us, axis=0)
+
+
+def pas_basis_sharded(q_local: Array, q_mask: Array, d_local: Array,
+                      axis_name, n_basis: int = 4) -> Array:
+    """Sharded pas_basis: buffer (n, D_local) + direction (D_local,) -> (k, D_local)."""
+    xp = jnp.concatenate(
+        [q_local * q_mask[:, None].astype(q_local.dtype), d_local[None]], 0)
+    v_pca = topk_right_singular_sharded(xp, n_basis - 1, axis_name)
+    d_norm = jnp.sqrt(_pdot(d_local, d_local, axis_name))
+    v1 = d_local / jnp.maximum(d_norm, _DEGENERATE_NORM)
+    return schmidt_sharded(jnp.concatenate([v1[None], v_pca], 0), axis_name)
+
+
+def corrected_direction_sharded(u_local: Array, coords: Array, d_local: Array,
+                                axis_name, coord_mode: str = "relative") -> Array:
+    """d~ = U^T C (local contraction; coords replicated)."""
+    if coord_mode == "relative":
+        d_norm = jnp.sqrt(_pdot(d_local, d_local, axis_name))
+        coords = coords * d_norm
+    return jnp.einsum("k,kd->d", coords, u_local)
+
+
+def make_sharded_pas_step(mesh: Mesh, shard_axes, n_basis: int = 4,
+                          coord_mode: str = "relative") -> Callable:
+    """Build a jit-able, shard_map-wrapped PAS correction step.
+
+    Returns f(q_rows, q_mask, d, coords) -> d_tilde where q_rows (n, D) and
+    d (D,) are sharded over ``shard_axes`` on their last axis; coords (k,) and
+    q_mask (n,) are replicated.  This is the op the serving path calls at the
+    corrected steps and that the dry-run lowers at the production mesh.
+    """
+    axis_name = shard_axes
+
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(None, shard_axes), P(None), P(shard_axes), P(None)),
+        out_specs=P(shard_axes),
+    )
+    def step(q_local, q_mask, d_local, coords):
+        u_local = pas_basis_sharded(q_local, q_mask, d_local, axis_name, n_basis)
+        return corrected_direction_sharded(u_local, coords, d_local, axis_name,
+                                           coord_mode)
+
+    return jax.jit(step)

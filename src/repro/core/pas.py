@@ -1,0 +1,314 @@
+"""PAS: PCA-based Adaptive Search (paper Algorithms 1 and 2).
+
+Calibration (Alg. 1) learns, for each sampling step that needs it, a set of
+``n_basis`` coordinates shared across samples; sampling (Alg. 2) applies them
+to correct the solver direction.  Total stored parameters =
+(#corrected steps) x n_basis ~= 10.
+
+Coordinate parameterisation: the paper initialises c_1 = ||d||_2 per sample and
+learns a shared C.  In high dimension ||eps|| concentrates (~sqrt(D)) so a
+shared absolute c_1 is well-defined; in low-D toy problems it is not.  We
+therefore support two modes (DESIGN.md §3):
+
+* ``relative`` (default): d~ = sum_m (C[m] * ||d||) u_m with C init [1,0,0,0].
+  Exactly the paper's parameterisation for each individual sample, but scale-
+  equivariant across samples.
+* ``absolute``: d~ = sum_m C[m] u_m with C init [mean||d||, 0, 0, 0] — the
+  literal batch version of the paper's text.
+
+Both reproduce the paper's single-sample algebra; `relative` generalises
+better across samples and is used in all experiments unless noted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pca import pas_basis
+from .solvers import LinearMultistepSolver, Solver, SolverHist
+from .solvers import sample as solvers_sample
+
+Array = jax.Array
+EpsFn = Callable[[Array, Array], Array]
+
+__all__ = [
+    "PASConfig", "PASParams", "LOSS_FNS",
+    "calibrate", "pas_sample", "pas_sample_trajectory", "truncation_error_curve",
+]
+
+
+LOSS_FNS = {
+    "l1": lambda e: jnp.mean(jnp.abs(e)),
+    "l2": lambda e: jnp.mean(e**2),
+    "pseudo_huber": lambda e, c=0.03: jnp.mean(jnp.sqrt(e**2 + c**2) - c),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PASConfig:
+    n_basis: int = 4
+    lr: float = 1e-2
+    n_sgd_iters: int = 200
+    tolerance: float = 1e-4
+    loss: str = "l1"               # training loss (paper recommends L1)
+    coord_mode: str = "relative"   # "relative" | "absolute"
+    val_fraction: float = 0.0      # beyond-paper: >0 decides step adoption on a
+                                   # held-out slice of the calibration batch,
+                                   # rejecting corrections that won't generalise
+    final_gate: bool = True        # beyond-paper: after calibration, verify the
+                                   # *end-to-end* error and greedily drop the
+                                   # least-gainful corrected steps until PAS is
+                                   # no worse than the plain solver (greedy
+                                   # per-step adoption ignores how a corrected
+                                   # direction propagates through a multistep
+                                   # solver's history; cf. paper Table 11 where
+                                   # iPNDM L2 gains vanish at NFE>=7)
+
+
+class PASParams(NamedTuple):
+    """The ~10 learned parameters: per-step activity mask + coordinates."""
+
+    active: np.ndarray   # (N,) bool, host-side (drives static branch structure)
+    coords: Array        # (N, n_basis)
+
+    @property
+    def n_stored_params(self) -> int:
+        return int(self.active.sum()) * self.coords.shape[1]
+
+    def corrected_paper_steps(self) -> list[int]:
+        """Paper-convention step indices i (N..1) that get corrected (cf. Table 6)."""
+        n = len(self.active)
+        return [n - j for j in range(n) if self.active[j]]
+
+
+# ---------------------------------------------------------------------------
+# internals
+# ---------------------------------------------------------------------------
+
+
+def _corrected_direction(u: Array, c: Array, d_norm: Array, mode: str) -> Array:
+    """d~ = U^T C with optional per-sample norm scaling. u (k, D), c (k,)."""
+    scale = d_norm if mode == "relative" else jnp.asarray(1.0, u.dtype)
+    return jnp.einsum("k,kd->d", c * scale, u)
+
+
+def _init_coords(d: Array, mode: str, n_basis: int) -> Array:
+    """C init (shared across batch): [c1, 0, ...] per the paper's eq. 15."""
+    if mode == "relative":
+        c1 = jnp.asarray(1.0, jnp.float32)
+    else:
+        c1 = jnp.mean(jax.vmap(jnp.linalg.norm)(d))
+    return jnp.concatenate([c1[None], jnp.zeros((n_basis - 1,), jnp.float32)])
+
+
+class _QBuffer(NamedTuple):
+    """Fixed-capacity trajectory buffer: rows [x_T, d_N, d_{N-1}, ...]."""
+
+    rows: Array   # (cap, B, D)
+    mask: Array   # (cap,) float32 validity
+
+    @staticmethod
+    def create(x_t: Array, cap: int) -> "_QBuffer":
+        rows = jnp.zeros((cap,) + x_t.shape, x_t.dtype).at[0].set(x_t)
+        mask = jnp.zeros((cap,), jnp.float32).at[0].set(1.0)
+        return _QBuffer(rows, mask)
+
+    def push(self, d: Array, slot: Array | int) -> "_QBuffer":
+        return _QBuffer(self.rows.at[slot].set(d), self.mask.at[slot].set(1.0))
+
+
+def _batched_basis(q: _QBuffer, d: Array, n_basis: int) -> Array:
+    """vmap pas_basis over the batch axis: q.rows (cap,B,D), d (B,D) -> (B,k,D)."""
+    rows_b = jnp.moveaxis(q.rows, 1, 0)  # (B, cap, D)
+    return jax.vmap(lambda r, dd: pas_basis(r, q.mask, dd, n_basis))(rows_b, d)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1: calibration with adaptive search
+# ---------------------------------------------------------------------------
+
+
+def calibrate(
+    solver: Solver,
+    eps_fn: EpsFn,
+    x_t: Array,          # (B, D) initial noise for the calibration trajectories
+    gt: Array,           # (N+1, B, D) teacher trajectory aligned to solver.ts
+    cfg: PASConfig = PASConfig(),
+) -> tuple[PASParams, dict]:
+    """Learn PAS coordinates (paper Algorithm 1), batched over B trajectories.
+
+    Follows the paper exactly: steps are corrected *sequentially* (a corrected
+    step changes every later state), each step's coordinates are trained with
+    SGD against the teacher state, and the step is kept only if the L2 gain
+    exceeds the tolerance (adaptive search).
+    """
+    if not isinstance(solver, LinearMultistepSolver):
+        raise TypeError("PAS calibration requires a 1-eval solver (paper setup); "
+                        f"got {solver.name}")
+    n = solver.nfe
+    train_loss = LOSS_FNS[cfg.loss]
+    ts = solver.ts_jax
+
+    x = x_t
+    hist = solver.init_hist(x_t)
+    q = _QBuffer.create(x_t, cap=n + 1)
+
+    active = np.zeros(n, dtype=bool)
+    coords = np.zeros((n, cfg.n_basis), dtype=np.float32)
+    diag = {"loss_before": [], "loss_after": [], "gain": []}
+
+    sgd = _make_sgd(solver, cfg, train_loss)
+    b = x_t.shape[0]
+    n_val = int(round(b * cfg.val_fraction))
+    tr = slice(n_val, None)   # SGD trains on this slice
+    va = slice(0, n_val) if n_val > 0 else slice(None)  # adoption decided here
+
+    for j in range(n):  # paper index i = N - j
+        t = ts[j]
+        d = eps_fn(x, t)                               # (B, D)
+        u = _batched_basis(q, d, cfg.n_basis)          # (B, k, D)
+        d_norm = jax.vmap(jnp.linalg.norm)(d)          # (B,)
+        c0 = _init_coords(d, cfg.coord_mode, cfg.n_basis)
+
+        c_opt = sgd(c0, x[tr], u[tr], d_norm[tr], _hist_slice(hist, tr),
+                    gt[j + 1][tr], j)
+
+        # adaptive-search decision on the L2 metric (paper eq. 20)
+        d_tilde = jax.vmap(_corrected_direction, (0, None, 0, None))(
+            u, c_opt, d_norm, cfg.coord_mode)
+        x_plain = solver.phi(x, d, j, hist)
+        x_corr = solver.phi(x, d_tilde, j, hist)
+        l2_plain = float(jnp.mean((x_plain[va] - gt[j + 1][va]) ** 2))
+        l2_corr = float(jnp.mean((x_corr[va] - gt[j + 1][va]) ** 2))
+        adopt = (l2_plain - (l2_corr + cfg.tolerance)) > 0.0
+
+        diag["loss_before"].append(l2_plain)
+        diag["loss_after"].append(l2_corr)
+        diag["gain"].append(l2_plain - l2_corr)
+
+        if adopt:
+            active[j] = True
+            coords[j] = np.asarray(c_opt)
+            x_new, d_used = x_corr, d_tilde
+        else:
+            x_new, d_used = x_plain, d
+
+        hist = solver.push(x, d_used, j, hist)
+        q = q.push(d_used, j + 1)
+        x = x_new
+
+    params = PASParams(active=active, coords=jnp.asarray(coords))
+
+    if cfg.final_gate and active.any():
+        params, diag["final_gate_dropped"] = _final_state_gate(
+            solver, eps_fn, x_t[va], gt[:, va], params, cfg)
+
+    diag["corrected_steps_paper_index"] = params.corrected_paper_steps()
+    diag["n_stored_params"] = params.n_stored_params
+    diag["final_l2_to_gt"] = float(jnp.mean((x - gt[-1]) ** 2))
+    return params, diag
+
+
+def _final_state_gate(solver, eps_fn, x_gate, gt_gate, params: PASParams,
+                      cfg: PASConfig) -> tuple[PASParams, list[int]]:
+    """Greedily drop corrected steps until PAS's final error <= plain final error."""
+    x_plain = solvers_sample(solver, eps_fn, x_gate)
+    e_plain = float(jnp.mean(jnp.linalg.norm(x_plain - gt_gate[-1], axis=-1)))
+    active = params.active.copy()
+    dropped: list[int] = []
+    while active.any():
+        trial = PASParams(active=active, coords=params.coords)
+        x_pas, _ = pas_sample_trajectory(solver, eps_fn, x_gate, trial, cfg)
+        e_pas = float(jnp.mean(jnp.linalg.norm(x_pas - gt_gate[-1], axis=-1)))
+        if e_pas <= e_plain * (1.0 + 1e-4):
+            break
+        # drop the active step with the largest index first (latest corrections
+        # have the least downstream benefit and the most history interaction)
+        j_drop = int(np.max(np.nonzero(active)[0]))
+        active[j_drop] = False
+        dropped.append(j_drop)
+    return PASParams(active=active, coords=params.coords), dropped
+
+
+def _hist_slice(hist: SolverHist, s: slice) -> SolverHist:
+    """Slice the batch axis of the history buffer (axis 1: (H, B, D))."""
+    return SolverHist(buf=hist.buf[:, s], count=hist.count)
+
+
+def _make_sgd(solver, cfg: PASConfig, train_loss):
+    """jit-compiled SGD loop over the shared coordinates C."""
+
+    def loss_fn(c, x, u, d_norm, hist, gt_next, j):
+        d_tilde = jax.vmap(_corrected_direction, (0, None, 0, None))(
+            u, c, d_norm, cfg.coord_mode)
+        x_next = solver.phi(x, d_tilde, j, hist)
+        return train_loss(x_next - gt_next)
+
+    grad = jax.grad(loss_fn)
+
+    @jax.jit
+    def run(c0, x, u, d_norm, hist, gt_next, j):
+        def body(c, _):
+            return c - cfg.lr * grad(c, x, u, d_norm, hist, gt_next, j), None
+        c, _ = jax.lax.scan(body, c0, None, length=cfg.n_sgd_iters)
+        return c
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: corrected sampling
+# ---------------------------------------------------------------------------
+
+
+def pas_sample(solver: Solver, eps_fn: EpsFn, x_t: Array, params: PASParams,
+               cfg: PASConfig = PASConfig()) -> Array:
+    return pas_sample_trajectory(solver, eps_fn, x_t, params, cfg)[0]
+
+
+def pas_sample_trajectory(
+    solver: Solver,
+    eps_fn: EpsFn,
+    x_t: Array,          # (B, D)
+    params: PASParams,
+    cfg: PASConfig = PASConfig(),
+) -> tuple[Array, Array]:
+    """Corrected sampling (paper Algorithm 2). Returns (x_0, xs (N+1, B, D)).
+
+    ``params.active`` is host-side, so inactive steps compile to the plain
+    solver update with *zero* PAS overhead — the adaptive-search promise.
+    The Q buffer is only maintained up to the last active step.
+    """
+    n = solver.nfe
+    ts = solver.ts_jax
+    last_active = int(np.max(np.nonzero(params.active)[0])) if params.active.any() else -1
+
+    x = x_t
+    hist = solver.init_hist(x_t)
+    q = _QBuffer.create(x_t, cap=n + 1) if last_active >= 0 else None
+    xs = [x_t]
+
+    for j in range(n):
+        d = eps_fn(x, ts[j])
+        if params.active[j]:
+            u = _batched_basis(q, d, cfg.n_basis)
+            d_norm = jax.vmap(jnp.linalg.norm)(d)
+            d = jax.vmap(_corrected_direction, (0, None, 0, None))(
+                u, params.coords[j], d_norm, cfg.coord_mode)
+        x_next = solver.phi(x, d, j, hist, eps_fn)
+        hist = solver.push(x, d, j, hist)
+        if q is not None and j < last_active:
+            q = q.push(d, j + 1)
+        x = x_next
+        xs.append(x)
+
+    return x, jnp.stack(xs, axis=0)
+
+
+def truncation_error_curve(xs: Array, gt: Array) -> Array:
+    """Mean L2 distance to the teacher per step (paper Fig. 3). xs,gt (N+1,B,D)."""
+    return jnp.mean(jnp.linalg.norm(xs - gt, axis=-1), axis=-1)

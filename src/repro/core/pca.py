@@ -1,0 +1,113 @@
+"""Gram-trick PCA and Gram-Schmidt for PAS basis extraction.
+
+The trajectory buffer X has n rows (n <= NFE+2, ~12) and D columns (D = the
+flattened sample dimension, possibly billions and sharded).  The TPU-native
+formulation (DESIGN.md §3) never materialises an SVD of X: it forms the n x n
+Gram matrix G = X X^T (on a mesh: local contraction + one tiny all-reduce),
+eigendecomposes it, and reconstructs right singular vectors v_j = X^T w_j / s_j.
+
+All functions are pure jnp on a single (n, D) buffer; batching is vmap;
+the sharded variant lives in core/distributed.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = [
+    "gram_matrix",
+    "topk_right_singular",
+    "schmidt",
+    "pas_basis",
+    "cumulative_variance",
+]
+
+_EVAL_FLOOR = 1e-30
+_DEGENERATE_NORM = 1e-6
+
+
+def gram_matrix(x: Array, mask: Array | None = None) -> Array:
+    """G = X X^T over the feature axis, with optional row-validity mask."""
+    if mask is not None:
+        x = x * mask[:, None].astype(x.dtype)
+    return x @ x.T
+
+
+def topk_right_singular(x: Array, k: int, mask: Array | None = None,
+                        gram: Array | None = None,
+                        canonical_signs: bool = True) -> Array:
+    """Top-k unit right singular vectors of X (n, D) via eigh of the Gram matrix.
+
+    Returns (k, D); rows with (near-)zero singular value are zeroed — a zero
+    basis vector is inert downstream (its learned coordinate multiplies zero).
+
+    ``canonical_signs`` (beyond-paper, DESIGN.md §3): eigenvector signs are
+    arbitrary, so coordinates learned on one sample's basis could flip meaning
+    on another's.  We fix sign(v_j) by the dot with the buffer row-sum, making
+    bases *consistent across samples* — required for the shared-coordinate
+    generalisation the paper relies on.
+    """
+    if mask is not None:
+        x = x * mask[:, None].astype(x.dtype)
+    g = gram_matrix(x) if gram is None else gram
+    evals, evecs = jnp.linalg.eigh(g)          # ascending
+    top = jnp.flip(evals[-k:])                  # (k,) descending
+    w = jnp.flip(evecs[:, -k:], axis=1)         # (n, k)
+    s = jnp.sqrt(jnp.clip(top, _EVAL_FLOOR))
+    v = (x.T @ w) / s                           # (D, k)
+    ok = (top > _EVAL_FLOOR * 10).astype(x.dtype)
+    v = (v * ok).T                              # (k, D)
+    if canonical_signs:
+        # sign convention without extra collectives: w sums = v . row_sum(X)
+        sgn = jnp.sign(jnp.sum(w, axis=0))[:, None]
+        v = v * jnp.where(sgn == 0, 1.0, sgn)
+    return v
+
+
+def schmidt(vs: Array, rel_tol: float = 1e-4) -> Array:
+    """Modified Gram-Schmidt over rows of vs (k, D) -> orthonormal rows.
+
+    Degenerate residuals (norm < rel_tol * ||v_in||, i.e. *relative* — float32
+    cancellation leaves noise proportional to the input magnitude) become zero
+    rows rather than blowing up — the paper notes the pinned v1 may be
+    collinear with the PCA vectors.
+    """
+    k = vs.shape[0]
+    us = []
+    for j in range(k):
+        v = vs[j]
+        v_in_norm = jnp.linalg.norm(v)
+        for u in us:
+            v = v - jnp.vdot(u, v) * u
+        nrm = jnp.linalg.norm(v)
+        floor = jnp.maximum(rel_tol * v_in_norm, _DEGENERATE_NORM)
+        u = jnp.where(nrm > floor, v / jnp.maximum(nrm, _DEGENERATE_NORM), 0.0)
+        us.append(u)
+    return jnp.stack(us, axis=0)
+
+
+def pas_basis(q_buf: Array, q_mask: Array, d: Array, n_basis: int = 4) -> Array:
+    """The paper's PCA() (Alg. 1 lines 2-6): basis U (n_basis, D), u_0 = d/||d||.
+
+    q_buf  (n, D): trajectory buffer rows [x_T, d_{t_N}, ..., d_{t_{i+1}}]
+    q_mask (n,)  : validity (fixed-capacity buffer, scan-friendly)
+    d      (D,)  : current direction to correct
+    """
+    xp = jnp.concatenate([q_buf * q_mask[:, None].astype(q_buf.dtype), d[None]], 0)
+    v_pca = topk_right_singular(xp, n_basis - 1)              # (n_basis-1, D)
+    v1 = d / jnp.maximum(jnp.linalg.norm(d), _DEGENERATE_NORM)
+    return schmidt(jnp.concatenate([v1[None], v_pca], axis=0))  # (n_basis, D)
+
+
+def cumulative_variance(x: Array, center: bool = True) -> Array:
+    """Cumulative percent variance of the principal components of X (n, D).
+
+    Reproduces paper Fig. 2: PCA of a full trajectory saturates by 3 PCs.
+    """
+    if center:
+        x = x - jnp.mean(x, axis=0, keepdims=True)
+    evals = jnp.linalg.eigvalsh(gram_matrix(x))
+    evals = jnp.clip(jnp.flip(evals), 0.0)
+    return jnp.cumsum(evals) / jnp.maximum(jnp.sum(evals), _EVAL_FLOOR)

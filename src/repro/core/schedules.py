@@ -1,0 +1,72 @@
+"""Time schedules for PF-ODE sampling (paper eq. 19).
+
+Conventions (DESIGN.md §9): schedules are *descending* arrays of length N+1,
+``ts[0] = t_max (=T)`` down to ``ts[N] = t_min (=eps)``.  The paper indexes
+steps i = N..1 with t_N = T, t_0 = eps; our array position ``j`` corresponds to
+the paper's index ``i = N - j``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "polynomial_schedule",
+    "nested_teacher_schedule",
+    "teacher_refinement",
+    "paper_index",
+]
+
+
+def polynomial_schedule(
+    nfe: int,
+    t_min: float = 0.002,
+    t_max: float = 80.0,
+    rho: float = 7.0,
+) -> np.ndarray:
+    """EDM/Karras polynomial schedule (paper eq. 19), descending, len nfe+1.
+
+    t_i = (t0^{1/rho} + (i/N) (tN^{1/rho} - t0^{1/rho}))^rho with the paper's
+    i in [N..0]; returned as ts[j] for j = 0..N (j=0 is T, j=N is eps).
+    """
+    if nfe < 1:
+        raise ValueError(f"nfe must be >= 1, got {nfe}")
+    i = np.arange(nfe, -1, -1, dtype=np.float64)  # paper index N..0
+    a = t_min ** (1.0 / rho)
+    b = t_max ** (1.0 / rho)
+    ts = (a + (i / nfe) * (b - a)) ** rho
+    # exact endpoints (avoid fp drift so nested grids index-align bit-exactly)
+    ts[0] = t_max
+    ts[-1] = t_min
+    return ts
+
+
+def teacher_refinement(student_nfe: int, teacher_nfe: int) -> int:
+    """Smallest positive integer M with student_nfe * (M+1) >= teacher_nfe."""
+    if teacher_nfe <= student_nfe:
+        raise ValueError("teacher must use more NFE than the student")
+    m = int(np.ceil(teacher_nfe / student_nfe)) - 1
+    return max(m, 1)
+
+
+def nested_teacher_schedule(
+    student_nfe: int,
+    teacher_nfe: int,
+    t_min: float = 0.002,
+    t_max: float = 80.0,
+    rho: float = 7.0,
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Teacher grid containing the student grid as every (M+1)-th point.
+
+    Returns (student_ts, teacher_ts, M). teacher_ts has student_nfe*(M+1)+1
+    points; teacher_ts[j*(M+1)] == student_ts[j] (eq. 19 is closed under
+    sub-indexing, verified in tests to ~1e-12).
+    """
+    m = teacher_refinement(student_nfe, teacher_nfe)
+    student = polynomial_schedule(student_nfe, t_min, t_max, rho)
+    teacher = polynomial_schedule(student_nfe * (m + 1), t_min, t_max, rho)
+    return student, teacher, m
+
+
+def paper_index(nfe: int, j: int) -> int:
+    """Array position j (0..N) -> paper step index i (N..0)."""
+    return nfe - j

@@ -1,0 +1,6 @@
+from .edm import (EDMConfig, edm_loss, eps_from_denoiser, precondition,
+                  sample_training_sigmas)
+from .mlp_denoiser import init_denoiser, raw_apply
+
+__all__ = ["EDMConfig", "edm_loss", "eps_from_denoiser", "precondition",
+           "sample_training_sigmas", "init_denoiser", "raw_apply"]

@@ -1,0 +1,42 @@
+"""Tiny sigma-conditioned MLP denoiser (the "learned model" path for PAS
+validation: paper-kind EDM model trainable in seconds on CPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import sigma_embedding
+
+Array = jax.Array
+
+__all__ = ["init_denoiser", "raw_apply"]
+
+
+def init_denoiser(key, data_dim: int, width: int = 256, depth: int = 4) -> dict:
+    ks = jax.random.split(key, depth + 3)
+    p = {"in": _lin(ks[0], data_dim + width, width),
+         "temb": _lin(ks[1], width, width),
+         "out": {"w": jnp.zeros((width, data_dim)),
+                 "b": jnp.zeros((data_dim,))}}
+    p["hidden"] = [_lin(ks[2 + i], width, width) for i in range(depth)]
+    return p
+
+
+def _lin(key, fan_in, fan_out) -> dict:
+    return {"w": jax.random.normal(key, (fan_in, fan_out)) / jnp.sqrt(fan_in),
+            "b": jnp.zeros((fan_out,))}
+
+
+def _apply(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def raw_apply(params: dict, x: Array, c_noise: Array) -> Array:
+    """F(x, c_noise): x (B, D), c_noise (B,) -> (B, D)."""
+    width = params["temb"]["w"].shape[0]
+    t = sigma_embedding(jnp.exp(4.0 * c_noise), width)   # c_noise = log(s)/4
+    t = jax.nn.silu(_apply(params["temb"], t))
+    h = _apply(params["in"], jnp.concatenate([x, t], axis=-1))
+    for layer in params["hidden"]:
+        h = h + _apply(layer, jax.nn.silu(h))            # residual MLP
+    return _apply(params["out"], jax.nn.silu(h))

@@ -1,0 +1,154 @@
+"""Flash attention as a Pallas TPU kernel (online softmax, VMEM tiling).
+
+Grid: (B*H, S/block_q, T/block_kv) with the KV axis innermost/sequential
+("arbitrary" semantics) so the (block_q, head_dim) f32 accumulator + running
+max/denominator live in VMEM scratch across KV steps.  GQA is handled in the
+K/V BlockSpec index maps (query head -> kv head), so no materialised
+jnp.repeat.  Causal and sliding-window masks skip fully-masked KV blocks via
+pl.when (the compute never runs, only the O(1) scratch bookkeeping).
+
+Block sizes default to 128x128 (MXU-aligned); the wrapper pads S/T and masks
+the padding.  Validated against kernels/ref.attention in interpret mode
+(tests/test_kernels.py sweeps shapes, dtypes, masks, GQA ratios).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+_NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale: float, causal: bool, window: int | None,
+               soft_cap: float | None, block_q: int, block_kv: int,
+               n_kv_blocks: int, t_real: int, pos_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions of this tile
+    q_start = iq * block_q + pos_offset          # query positions (key-space)
+    k_start = ik * block_kv
+
+    # --- block-level skip: is any (q, k) pair in this tile unmasked? ---
+    live = jnp.bool_(True)
+    if causal:
+        live = jnp.logical_and(live, k_start <= q_start + block_q - 1)
+    if window is not None:
+        live = jnp.logical_and(
+            live, k_start + block_kv - 1 > q_start - window)
+    live = jnp.logical_and(live, k_start < t_real)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if soft_cap is not None:
+            s = soft_cap * jnp.tanh(s / soft_cap)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_kv), 1)
+        mask = k_pos < t_real
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)                        # exp(-inf-... ) guard
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        out = acc_ref[...] / jnp.where(l > 0, l, 1.0)[:, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _pad_axis(x: Array, axis: int, multiple: int) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logits_soft_cap", "scale",
+                     "block_q", "block_kv", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int | None = None,
+                    logits_soft_cap: float | None = None,
+                    scale: float | None = None, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = False) -> Array:
+    """q (B,S,H,Dh); k,v (B,T,KV,Dh) -> (B,S,H,Dh). See kernels/ref.attention."""
+    b, s, h, dh = q.shape
+    _, t, kv, _ = k.shape
+    assert h % kv == 0
+    group = h // kv
+    scale = scale if scale is not None else dh ** -0.5
+
+    block_q = min(block_q, max(s, 8))
+    block_kv = min(block_kv, max(t, 8))
+
+    # (B*H, S, Dh) query layout; (B*KV, T, Dh) for K/V
+    qr = _pad_axis(q.transpose(0, 2, 1, 3).reshape(b * h, s, dh), 1, block_q)
+    kr = _pad_axis(k.transpose(0, 2, 1, 3).reshape(b * kv, t, dh), 1, block_kv)
+    vr = _pad_axis(v.transpose(0, 2, 1, 3).reshape(b * kv, t, dh), 1, block_kv)
+    s_pad, t_pad = qr.shape[1], kr.shape[1]
+    nq, nk = s_pad // block_q, t_pad // block_kv
+
+    def kv_row(i):  # query-head row -> kv-head row (GQA)
+        return (i // h) * kv + (i % h) // group
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        soft_cap=logits_soft_cap, block_q=block_q, block_kv=block_kv,
+        n_kv_blocks=nk, t_real=t, pos_offset=t - s)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda i, j, kk: (i, j, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda i, j, kk: (kv_row(i), kk, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda i, j, kk: (kv_row(i), kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda i, j, kk: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s_pad, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running denom
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+
+    out = out[:, :s].reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,58 @@
+"""PAS Gram matrix (X X^T) as a Pallas TPU kernel.
+
+The PAS buffer is (n, D) with n ~ 12 and D huge (the flattened, possibly
+device-local sample dimension).  The kernel tiles D into VMEM-sized chunks
+and accumulates the (n x n) f32 product across the sequential grid axis —
+one pass over X, no transposed re-read (vs. the naive X @ X.T which reads X
+twice with a transposed layout).  Masked rows are zeroed on the fly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _gram_kernel(x_ref, mask_ref, o_ref, *, n_blocks: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)           # (n, block_d)
+    x = x * mask_ref[...].astype(jnp.float32)[:, None]
+    partial = jax.lax.dot_general(x, x, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _first():
+        o_ref[...] = partial
+
+    @pl.when(i > 0)
+    def _rest():
+        o_ref[...] = o_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gram(x: Array, mask: Array | None = None, *, block_d: int = 2048,
+         interpret: bool = False) -> Array:
+    """x (n, D) [+ mask (n,)] -> X X^T (n, n) in float32."""
+    n, d = x.shape
+    if mask is None:
+        mask = jnp.ones((n,), jnp.float32)
+    pad = (-d) % block_d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    n_blocks = x.shape[1] // block_d
+
+    return pl.pallas_call(
+        functools.partial(_gram_kernel, n_blocks=n_blocks),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(x, mask.astype(jnp.float32))

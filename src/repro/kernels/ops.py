@@ -1,0 +1,79 @@
+"""Public kernel entry points: dispatch between Pallas TPU kernels and oracles.
+
+Models call these, never the kernels directly.  Dispatch policy:
+  * TPU backend -> Pallas kernel (pl.pallas_call with VMEM BlockSpecs);
+  * CPU/GPU (this container, and the 512-virtual-device dry-run) -> ref.py;
+  * ``interpret=True`` forces the Pallas kernel body in interpret mode
+    (how the kernel tests run on CPU);
+  * env ``REPRO_FORCE_PALLAS=1`` / ``REPRO_DISABLE_PALLAS=1`` override.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+Array = jax.Array
+
+__all__ = ["flash_attention", "gram", "rmsnorm", "ssm_scan", "use_pallas"]
+
+
+def use_pallas() -> bool:
+    if os.environ.get("REPRO_DISABLE_PALLAS"):
+        return False
+    if os.environ.get("REPRO_FORCE_PALLAS"):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: int | None = None,
+                    logits_soft_cap: float | None = None,
+                    scale: float | None = None,
+                    interpret: bool = False) -> Array:
+    """Tiled online-softmax attention (see kernels/flash_attention.py)."""
+    if interpret or use_pallas():
+        from . import flash_attention as fa
+        return fa.flash_attention(q, k, v, causal=causal, window=window,
+                                  logits_soft_cap=logits_soft_cap, scale=scale,
+                                  interpret=interpret or not use_pallas())
+    if q.shape[1] > 2048 or k.shape[1] > 2048:
+        # chunked online-softmax path: O(chunk^2) memory, static block
+        # skipping for causal/window — keeps dry-run memory + FLOPs honest
+        from . import xla_attention
+        return xla_attention.attention(q, k, v, causal=causal, window=window,
+                                       logits_soft_cap=logits_soft_cap,
+                                       scale=scale)
+    return ref.attention(q, k, v, causal=causal, window=window,
+                         logits_soft_cap=logits_soft_cap, scale=scale)
+
+
+def gram(x: Array, mask: Array | None = None, *, interpret: bool = False) -> Array:
+    """PAS Gram matrix X X^T over a huge feature axis (kernels/gram.py)."""
+    if interpret or use_pallas():
+        from . import gram as gk
+        return gk.gram(x, mask=mask, interpret=interpret or not use_pallas())
+    return ref.gram(x, mask=mask)
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6, *,
+            interpret: bool = False) -> Array:
+    """Fused RMSNorm (kernels/rmsnorm.py)."""
+    if interpret or use_pallas():
+        from . import rmsnorm as rk
+        return rk.rmsnorm(x, scale, eps=eps, interpret=interpret or not use_pallas())
+    return ref.rmsnorm(x, scale, eps=eps)
+
+
+def ssm_scan(u: Array, delta: Array, a: Array, b: Array, c: Array,
+             d: Array | None = None, h0: Array | None = None, *,
+             interpret: bool = False) -> tuple[Array, Array]:
+    """Mamba selective scan (kernels/ssm_scan.py)."""
+    if interpret or use_pallas():
+        from . import ssm_scan as sk
+        return sk.ssm_scan(u, delta, a, b, c, d=d, h0=h0,
+                           interpret=interpret or not use_pallas())
+    return ref.ssm_scan(u, delta, a, b, c, d=d, h0=h0)

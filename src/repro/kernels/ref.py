@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness reference).
+
+These are also the implementations the CPU-hosted dry-run lowers (pallas TPU
+custom-calls cannot compile for the host platform); XLA fuses them well enough
+that the roofline FLOPs/bytes are representative.  Shapes follow the ops.py
+contracts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = ["attention", "gram", "rmsnorm", "ssm_scan"]
+
+_NEG_INF = -1e30
+
+
+def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+              window: int | None = None, logits_soft_cap: float | None = None,
+              scale: float | None = None) -> Array:
+    """Multi-head attention with GQA broadcast and optional sliding window.
+
+    q: (B, S, H, Dh); k, v: (B, T, KV, Dh) with H % KV == 0.  Returns
+    (B, S, H, Dh).  ``window=w`` keeps keys with q_pos - w < k_pos <= q_pos
+    (sliding window, causal implied within the window when causal=True).
+    Softmax is computed in float32 regardless of input dtype.
+    """
+    b, s, h, dh = q.shape
+    _, t, kv, _ = k.shape
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = scale if scale is not None else dh ** -0.5
+
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # fold GQA: (B, T, KV, Dh) -> broadcast to (B, T, H, Dh) without copy cost
+    kf = jnp.repeat(kf, group, axis=2)
+    vf = jnp.repeat(vf, group, axis=2)
+
+    logits = jnp.einsum("bshd,bthd->bhst", qf, kf)
+    if logits_soft_cap is not None:
+        logits = logits_soft_cap * jnp.tanh(logits / logits_soft_cap)
+
+    q_pos = jnp.arange(s)[:, None] + (t - s)  # right-aligned (prefill: t == s)
+    k_pos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, _NEG_INF)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def gram(x: Array, mask: Array | None = None) -> Array:
+    """G = X X^T in float32. x: (n, D); mask: (n,) row validity."""
+    xf = x.astype(jnp.float32)
+    if mask is not None:
+        xf = xf * mask[:, None].astype(jnp.float32)
+    return xf @ xf.T
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    """RMS normalisation over the last axis, computed in float32."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def ssm_scan(u: Array, delta: Array, a: Array, b: Array, c: Array,
+             d: Array | None = None, h0: Array | None = None
+             ) -> tuple[Array, Array]:
+    """Mamba-1 selective scan (the SSM recurrence), float32 state.
+
+    u, delta: (B, L, Di); a: (Di, N) (A = -exp(a) convention handled by
+    caller — this oracle takes the *continuous* A directly); b, c: (B, L, N);
+    d: (Di,) skip weight; h0: (B, Di, N) initial state.
+
+      h_t = exp(delta_t * A) * h_{t-1} + delta_t * B_t * u_t
+      y_t = (C_t . h_t) + D * u_t
+
+    Returns (y (B, L, Di), h_last (B, Di, N)).  Implemented with an
+    associative scan over L (parallel-friendly oracle).
+    """
+    bsz, ell, di = u.shape
+    n = a.shape[-1]
+    uf = u.astype(jnp.float32)
+    dt = delta.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    # decay (B, L, Di, N) and input drive
+    decay = jnp.exp(dt[..., None] * af[None, None])
+    drive = dt[..., None] * bf[:, :, None, :] * uf[..., None]
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, bx * ay + by
+
+    if h0 is not None:
+        drive = drive.at[:, 0].add(decay[:, 0] * h0.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    y = jnp.einsum("bldn,bln->bld", h, cf)
+    if d is not None:
+        y = y + d.astype(jnp.float32)[None, None] * uf
+    return y.astype(u.dtype), h[:, -1]

@@ -1,0 +1,48 @@
+"""Fused RMSNorm Pallas kernel: one VMEM pass (mean-square + scale) per row
+block instead of XLA's separate reduce + broadcast-multiply HBM round-trips.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)            # (block_r, E)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(ms + eps)
+    y = y * (1.0 + s_ref[...].astype(jnp.float32))[None, :]
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6, *,
+            block_rows: int = 256, interpret: bool = False) -> Array:
+    """x (..., E), scale (E,) -> rmsnorm(x) * (1 + scale), dtype-preserving."""
+    orig_shape = x.shape
+    e = orig_shape[-1]
+    xr = x.reshape(-1, e)
+    r = xr.shape[0]
+    block_rows = min(block_rows, r)
+    pad = (-r) % block_rows
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    nb = xr.shape[0] // block_rows
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, e), lambda i: (i, 0)),
+            pl.BlockSpec((e,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(xr, scale)
+    return out[:r].reshape(orig_shape)

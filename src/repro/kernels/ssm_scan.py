@@ -1,0 +1,102 @@
+"""Mamba selective scan as a Pallas TPU kernel.
+
+Grid: (B, Di/block_d, L/block_t) with time innermost/sequential; the
+(block_d, N) f32 state is carried in VMEM scratch across time blocks, so HBM
+traffic is exactly one read of (u, delta, B, C) and one write of y — the
+recurrence itself never touches HBM (the property that makes Mamba fast on
+real hardware; XLA's associative_scan materialises O(L log L) intermediates).
+
+Channel blocks are parallel: the state is diagonal in Di (A is (Di, N)), so
+each block owns its slice of the recurrence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ssm_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_out_ref,
+                h_ref, *, block_t: int, n_t_blocks: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...].astype(jnp.float32)                     # (bd, N)
+    d = d_ref[...].astype(jnp.float32)                     # (bd,)
+
+    def step(tt, h):
+        dt_row = dt_ref[0, tt].astype(jnp.float32)         # (bd,)
+        u_row = u_ref[0, tt].astype(jnp.float32)           # (bd,)
+        b_row = b_ref[0, tt].astype(jnp.float32)           # (N,)
+        c_row = c_ref[0, tt].astype(jnp.float32)           # (N,)
+        decay = jnp.exp(dt_row[:, None] * a)               # (bd, N)
+        h = decay * h + (dt_row * u_row)[:, None] * b_row[None, :]
+        y_row = jnp.sum(h * c_row[None, :], axis=-1) + d * u_row
+        y_ref[0, tt] = y_row.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(it == n_t_blocks - 1)
+    def _emit_state():
+        h_out_ref[0] = h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "block_t", "interpret"))
+def ssm_scan(u: Array, delta: Array, a: Array, b: Array, c: Array,
+             d: Array | None = None, h0: Array | None = None, *,
+             block_d: int = 128, block_t: int = 256,
+             interpret: bool = False) -> tuple[Array, Array]:
+    """See kernels/ref.ssm_scan for the contract. h0 must be None (TPU path
+    integrates prefill-from-scratch; decode steps don't use the kernel)."""
+    if h0 is not None:
+        raise NotImplementedError("kernel path covers prefill (h0=None)")
+    bsz, ell, di = u.shape
+    n = a.shape[-1]
+    block_d = min(block_d, di)
+    block_t = min(block_t, ell)
+    assert di % block_d == 0, (di, block_d)
+    pad_t = (-ell) % block_t
+    if pad_t:
+        # zero delta on padding -> decay=1, drive=0: state passes through
+        u = jnp.pad(u, ((0, 0), (0, pad_t), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad_t), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad_t), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad_t), (0, 0)))
+    ell_p = u.shape[1]
+    nd, nt = di // block_d, ell_p // block_t
+    if d is None:
+        d = jnp.zeros((di,), jnp.float32)
+
+    y, h_last = pl.pallas_call(
+        functools.partial(_ssm_kernel, block_t=block_t, n_t_blocks=nt),
+        grid=(bsz, nd, nt),
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda ib, id_, it: (ib, it, id_)),
+            pl.BlockSpec((1, block_t, block_d), lambda ib, id_, it: (ib, it, id_)),
+            pl.BlockSpec((block_d, n), lambda ib, id_, it: (id_, 0)),
+            pl.BlockSpec((1, block_t, n), lambda ib, id_, it: (ib, it, 0)),
+            pl.BlockSpec((1, block_t, n), lambda ib, id_, it: (ib, it, 0)),
+            pl.BlockSpec((block_d,), lambda ib, id_, it: (id_,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda ib, id_, it: (ib, it, id_)),
+            pl.BlockSpec((1, block_d, n), lambda ib, id_, it: (ib, id_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, ell_p, di), u.dtype),
+            jax.ShapeDtypeStruct((bsz, di, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(u, delta, a, b, c, d)
+    return y[:, :ell], h_last

@@ -1,0 +1,199 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# CPU-host artifact suppression (TPU never has it): XLA-CPU converts bf16 dot
+# operands to f32 and LICM hoists those converts out of the layer scan,
+# materialising f32 copies of whole scanned weight/cache stacks.  Disabling
+# the hoist keeps converts per-iteration, matching TPU's true live-set.
+os.environ["XLA_FLAGS"] += " --xla_disable_hlo_passes=while-loop-invariant-code-motion"
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes; record memory/cost/collective analysis (EXPERIMENTS.md
+§Dry-run).  MUST keep the two lines above first — jax locks the device count
+on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  ... [--out benchmarks/artifacts/dryrun] [--force] [--step denoise]
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, cell_applicability
+from repro.launch.steps import plan_cell
+from repro.parallel import axis_rules
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: Path,
+             force: bool = False, step_kind: str | None = None,
+             sp: bool | None = None, remat: str = "full",
+             serve_layout: str = "fsdp_tp", seq_chunk: int = 1024,
+             ce_dtype: str = "float32", cache_dtype: str = "native",
+             tag: str = "") -> dict:
+    suffix = f"__{tag}" if tag else ""
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": step_kind or shape.kind, "tag": tag,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }
+
+    ok, reason = cell_applicability(cfg, shape)
+    if not ok:
+        record.update(status="skip", reason=reason)
+        out_path.write_text(json.dumps(record, indent=1))
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    try:
+        t0 = time.time()
+        plan, rules = plan_cell(cfg, shape, mesh, kind_override=step_kind,
+                                sp=sp, remat=remat, serve_layout=serve_layout,
+                                seq_chunk=seq_chunk, ce_dtype=ce_dtype,
+                                cache_dtype=cache_dtype)
+        t_plan = time.time() - t0
+
+        t0 = time.time()
+        with jax.set_mesh(mesh), axis_rules(rules):
+            jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                             out_shardings=plan.out_shardings,
+                             donate_argnums=plan.donate_argnums)
+            lowered = jitted.lower(*plan.arg_specs)
+        t_lower = time.time() - t0
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        cost = dict(compiled.cost_analysis() or {})
+        hlo = compiled.as_text()
+        colls = rl.parse_collectives_loop_aware(hlo)
+        kind = step_kind or shape.kind
+        analytic = rl.analytic_cost(cfg, shape, dict(mesh.shape), kind,
+                                    serve_weight_layout=serve_layout,
+                                    ce_dtype=ce_dtype, remat=remat,
+                                    cache_dtype=cache_dtype)
+        terms = rl.roofline_terms(cost, colls)
+        mflops = rl.model_flops(cfg, shape, chips)
+        amem = rl.analytic_memory(cfg, shape, dict(mesh.shape), kind)
+        hlo_per_dev = terms["hlo_flops_per_device"]
+        useful = (mflops["model_flops_per_device"] / hlo_per_dev
+                  if hlo_per_dev else 0.0)
+
+        record.update(
+            status="ok",
+            chips=chips,
+            seconds={"plan": round(t_plan, 2), "lower": round(t_lower, 2),
+                     "compile": round(t_compile, 2)},
+            memory_per_device_bytes={
+                "arguments": ma.argument_size_in_bytes,
+                "outputs": ma.output_size_in_bytes,
+                "temps": ma.temp_size_in_bytes,
+                "aliased": ma.alias_size_in_bytes,
+                "total_live": ma.argument_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+            cost={k: cost.get(k) for k in ("flops", "bytes accessed",
+                                           "transcendentals")},
+            collectives=colls,
+            roofline_hlo=terms,          # cross-check (loop bodies ~once)
+            roofline=analytic,           # PRIMARY terms (see roofline.py)
+            model_flops=mflops,
+            useful_flops_ratio=useful,
+            analytic_memory_tpu_bytes=amem,
+            # exact (dtype-true) args/outputs + analytic TPU temps; the
+            # params/opt components of `amem` are already inside `arguments`
+            fits_16g_tpu=bool(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                - ma.alias_size_in_bytes
+                + (amem["total"] - amem.get("params", 0.0)
+                   - amem.get("opt_state", 0.0)) < 16 * 2**30),
+            static=plan.static_descr,
+            hlo_bytes=len(hlo),
+        )
+    except Exception as e:  # a failure here is a bug in the system — record it
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    out_path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", action="append", default=None,
+                    help="arch id (repeatable); default: all assigned")
+    ap.add_argument("--shape", action="append", default=None,
+                    choices=list(SHAPES), help="shape (repeatable)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--step", default=None, choices=["denoise"],
+                    help="override the step kind (paper-mode diffusion serve)")
+    ap.add_argument("--sp", default=None, type=int,
+                    help="force sequence-parallel on (1) / off (0)")
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--layout", default="fsdp_tp",
+                    choices=["fsdp_tp", "tp_stationary"],
+                    help="serving weight layout (prefill/decode cells)")
+    ap.add_argument("--seq-chunk", type=int, default=1024,
+                    help="chunked-CE sequence chunk (train cells)")
+    ap.add_argument("--ce-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="materialised CE logits dtype (train cells)")
+    ap.add_argument("--kv-dtype", default="native", choices=["native", "int8"],
+                    help="decode KV-cache storage dtype")
+    ap.add_argument("--tag", default="", help="artifact suffix (perf variants)")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = args.arch or list(ASSIGNED_ARCHS)
+    shapes = args.shape or list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    n_fail = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_name in meshes:
+                t0 = time.time()
+                rec = run_cell(arch, shape_name, mesh_name, out_dir,
+                               force=args.force, step_kind=args.step,
+                               sp=None if args.sp is None else bool(args.sp),
+                               remat=args.remat, serve_layout=args.layout,
+                               seq_chunk=args.seq_chunk,
+                               ce_dtype=args.ce_dtype,
+                               cache_dtype=args.kv_dtype, tag=args.tag)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    mem = rec["memory_per_device_bytes"]["total_live"] / 2**30
+                    dom = rec["roofline"]["dominant"]
+                    extra = f" mem/dev={mem:.2f}GiB dominant={dom}"
+                elif status == "error":
+                    n_fail += 1
+                    extra = " " + rec["error"][:120]
+                print(f"[{status:5s}] {arch:22s} {shape_name:12s} "
+                      f"{mesh_name:6s} ({time.time()-t0:6.1f}s){extra}",
+                      flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,430 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Terms (per DESIGN/EXPERIMENTS):
+  compute    = HLO_FLOPs_per_device / 197e12  (bf16 peak, v5e)
+  memory     = HLO_bytes_per_device / 819e9   (HBM bw)
+  collective = per-device collective operand bytes / 50e9 (per-link ICI,
+               single-link conservative model)
+
+``compiled.cost_analysis()`` reports post-SPMD *per-device* numbers (verified
+empirically: a 512-way-sharded matmul reports total/512).  Collective bytes
+are parsed from the post-SPMD HLO text — operand shapes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12      # bf16 / chip (v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link (conservative single-link model)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT )?(%[\w.\-]+) = ((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string: 'bf16[8,16]' or a tuple '(f32[2], ...)'."""
+    return sum(_shape_bytes(dt, dims)
+               for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict[str, Any]]:
+    """Sum operand bytes per collective kind from (post-SPMD) HLO text.
+
+    Post-optimization HLO references operands by name only, so a first pass
+    builds the name -> result-bytes table; collective operand bytes are then
+    resolved through it (falling back to the collective's own result bytes).
+    """
+    sizes: dict[str, int] = {}
+    coll_lines: list[tuple[str, str, int]] = []  # (kind, rhs, result_bytes)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str = m.groups()
+        nbytes = _type_bytes(type_str)
+        sizes[name] = nbytes
+        rhs = line.split(" = ", 1)[1]
+        for kind in _COLL_KINDS:
+            # call sites (incl. async -start); -done consumes the start token
+            mm = re.search(rf"\b{kind}(?:-start)?\(", rhs)
+            if mm and f"{kind}-done" not in rhs:
+                coll_lines.append((kind, rhs[mm.end():], nbytes))
+                break
+
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+    for kind, operand_str, result_bytes in coll_lines:
+        operand_str = operand_str.split(")", 1)[0]
+        nbytes = sum(sizes.get(op, 0) for op in _OPERAND_RE.findall(operand_str))
+        if nbytes == 0:
+            nbytes = result_bytes
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# loop-aware HLO collective accounting
+# ---------------------------------------------------------------------------
+
+# computation headers: "%name (params...) -> type {" — params may contain
+# nested parens (tuple types) and the entry is prefixed with "ENTRY "
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?(%[\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"while\(.*?condition=(%[\w.\-]+), body=(%[\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        is_header = (line.rstrip().endswith("{") and "->" in line
+                     and " = " not in line)
+        m = _COMP_RE.match(line) if is_header else None
+        if m:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def parse_collectives_loop_aware(hlo_text: str) -> dict[str, dict[str, Any]]:
+    """Like parse_collectives, but collectives inside while bodies count
+    trip_count times (jax.lax.scan layers — XLA HLO text lists the body once).
+
+    Trip counts are estimated as the largest integer constant in the loop's
+    condition computation (scan conditions compare the counter to N).
+    """
+    comps = _split_computations(hlo_text)
+    if not comps:
+        return parse_collectives(hlo_text)
+
+    # name -> result bytes across the whole module
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _type_bytes(m.group(2))
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for ln in comps.get(cond_name, ())
+                  for c in _CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    out = {k: {"count": 0, "bytes": 0} for k in _COLL_KINDS}
+
+    def walk(comp_name: str, multiplier: int, seen: frozenset):
+        if comp_name in seen:
+            return
+        seen = seen | {comp_name}
+        for line in comps.get(comp_name, ()):
+            if " = " not in line:
+                continue
+            rhs = line.split(" = ", 1)[1]
+            wm = _WHILE_RE.search(rhs)
+            if wm:
+                cond, body = wm.groups()
+                walk(body, multiplier * trip_count(cond), seen)
+                continue
+            # nested calls (fusion bodies don't contain collectives; calls may)
+            cm = re.search(r"(?:call|conditional)\(.*?to_apply=(%[\w.\-]+)", rhs)
+            if cm:
+                walk(cm.group(1), multiplier, seen)
+            for kind in _COLL_KINDS:
+                mm = re.search(rf"\b{kind}(?:-start)?\(", rhs)
+                if mm and f"{kind}-done" not in rhs:
+                    operand_str = rhs[mm.end():].split(")", 1)[0]
+                    nbytes = sum(sizes.get(op, 0)
+                                 for op in _OPERAND_RE.findall(operand_str))
+                    if nbytes == 0:
+                        dm = _DEF_RE.match(line)
+                        nbytes = _type_bytes(dm.group(2)) if dm else 0
+                    out[kind]["count"] += multiplier
+                    out[kind]["bytes"] += multiplier * nbytes
+                    break
+
+    entries = [n for n in comps if "entry" in n.lower()]
+    roots = entries or [next(iter(comps))]
+    # fall back: walk every computation not referenced as a body/cond/fusion
+    referenced = set()
+    for lines in comps.values():
+        for ln in lines:
+            for nm in re.findall(r"(?:condition|body|to_apply|calls)=(%[\w.\-]+)", ln):
+                referenced.add(nm)
+    roots = [n for n in comps if n not in referenced] or roots
+    for r in roots:
+        walk(r, 1, frozenset())
+    return out
+
+
+def roofline_terms(cost: dict, collectives: dict) -> dict[str, Any]:
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    byts = float(cost.get("bytes accessed", 0.0) or 0.0)
+    cbytes = float(sum(v["bytes"] for v in collectives.values()))
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": byts / HBM_BW,
+        "collective_s": cbytes / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values()) if any(terms.values()) else 0.0
+    return {
+        **terms,
+        "dominant": dominant.removesuffix("_s"),
+        "bound_step_s": step_s,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": byts,
+        "collective_bytes_per_device": cbytes,
+    }
+
+
+def _embed_params(cfg) -> int:
+    n = cfg.vocab_size * cfg.d_model
+    if not cfg.tie_embeddings:
+        n *= 2
+    if cfg.rope_theta is None and cfg.pattern[0].kind == "attn":
+        n += cfg.max_position * cfg.d_model
+    return n
+
+
+def _attn_layers(cfg) -> list:
+    """(count, window) pairs per pattern spec scaled to n_layers."""
+    per = cfg.n_layers / len(cfg.pattern)
+    return [(per, s.window) for s in cfg.pattern if s.kind == "attn"]
+
+
+def analytic_cost(cfg, shape, mesh_shape: dict, kind: str,
+                  serve_weight_layout: str = "fsdp_tp",
+                  ce_dtype: str = "float32", remat: str = "full",
+                  cache_dtype: str = "native") -> dict[str, Any]:
+    """Analytic per-device FLOPs / HBM bytes / collective bytes for one step.
+
+    This is the PRIMARY roofline source: XLA-CPU's cost_analysis counts
+    while-loop (layer-scan) bodies ONCE, undercounting by ~n_layers (verified:
+    measured useful_flops_ratio ~= n_layers across the zoo).  The model below
+    is explicit about every term; HLO-parsed numbers are kept as cross-checks.
+
+    serve_weight_layout: "fsdp_tp" (weights 2D-sharded, all-gathered per
+    layer — collective-heavy) | "tp2d" (weights stationary, sharded over
+    data x model as pure TP; activation collectives only).
+    """
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    tp = mesh_shape.get("model", 1)
+    chips = dp * tp
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    e, v = cfg.d_model, cfg.vocab_size
+    b, s = shape.global_batch, shape.seq_len
+    h, dh = cfg.n_heads, cfg.head_dim_
+
+    n_total = cfg.param_count()
+    n_active = cfg.active_param_count()
+    n_embed = _embed_params(cfg)
+    n_block_active = max(n_active - n_embed, 0)
+    # MoE expert matmuls run at capacity (cf x routed tokens)
+    moe_cf = cfg.capacity_factor if cfg.n_experts else 1.0
+
+    # ----- FLOPs (global) -----
+    if kind == "decode":
+        tokens = b
+        ctx = s
+    else:
+        tokens = b * s
+        ctx = None
+    matmul_fwd = 2.0 * n_block_active * tokens * (moe_cf if cfg.n_experts else 1.0)
+    attn_fwd = 0.0
+    for count, window in _attn_layers(cfg):
+        if kind == "decode":
+            pairs = min(window or ctx, ctx)          # one query vs its context
+        else:
+            w = min(window, s) if window else None
+            pairs = (w * s - w * w / 2) if w else s * s / 2.0
+        attn_fwd += count * 4.0 * b * h * dh * pairs  # QK^T + AV, 2 flop/MAC
+    ssm_fwd = 0.0
+    n_mamba = sum(1 for sp in cfg.pattern if sp.kind == "mamba") \
+        / len(cfg.pattern) * cfg.n_layers
+    if n_mamba:
+        ssm_fwd = n_mamba * tokens * cfg.d_inner * (6 * cfg.ssm_state
+                                                    + 2 * cfg.d_conv)
+    n_rg = sum(1 for sp in cfg.pattern if sp.kind == "rglru") \
+        / len(cfg.pattern) * cfg.n_layers
+    rg_fwd = n_rg * tokens * cfg.lru_width_ * 10
+    logits_fwd = 2.0 * tokens * e * v if kind != "prefill" else 2.0 * b * e * v
+    fwd = matmul_fwd + attn_fwd + ssm_fwd + rg_fwd + logits_fwd
+
+    if kind == "train":
+        # fwd + bwd(2x) + full-remat recompute (1x) + optimizer elementwise;
+        # remat="dots" saves matmul outputs -> no matmul recompute (3x)
+        passes = 4.0 if remat == "full" else 3.0
+        flops_global = passes * fwd + 20.0 * n_total
+    else:
+        flops_global = fwd
+    flops_dev = flops_global / chips
+
+    # ----- HBM bytes (per device) -----
+    byts: dict[str, float] = {}
+    tokens_dev = tokens / dp
+    if kind == "train":
+        weights_pass = n_total * dt / tp               # gathered-shard reads
+        n_passes = 3.0 if remat == "full" else 2.0
+        byts["weights"] = n_passes * weights_pass      # fwd + bwd (+ remat)
+        byts["grads"] = 2.0 * n_total * dt / (dp * tp)
+        byts["optimizer"] = n_total * 20.0 / (dp * tp)  # m,v r/w f32 + p r/w
+        byts["activations"] = cfg.n_layers * 14.0 * tokens_dev * e * dt / \
+            max(tp if kind == "train" else 1, 1)       # SP-sharded streams
+        ce_b = 2.0 if ce_dtype == "bfloat16" else 4.0
+        byts["logits_ce"] = 3.0 * tokens_dev * (v / tp) * ce_b
+    elif kind == "prefill":
+        byts["weights"] = n_total * dt / tp
+        byts["activations"] = cfg.n_layers * 8.0 * tokens_dev * e * dt
+        kv_layers = sum(c for c, _ in _attn_layers(cfg))
+        byts["kv_write"] = kv_layers * 2 * tokens_dev * cfg.n_kv_heads * dh * dt
+    else:  # decode
+        byts["weights"] = n_active * dt / tp
+        # int8 KV: 1 byte + f32/Dh per-slot scale overhead
+        kv_elt = (1.0 + 4.0 / max(dh, 1)) if cache_dtype == "int8" else dt
+        kv_bytes = 0.0
+        for count, window in _attn_layers(cfg):
+            kv_len = min(window or s, s)
+            kv_bytes += count * 2 * (b / dp) * kv_len * cfg.n_kv_heads * dh \
+                * kv_elt
+        kv_shard = tp if cfg.n_kv_heads % tp == 0 or s % tp == 0 else 1
+        byts["kv_read"] = kv_bytes / kv_shard
+        byts["state"] = (n_mamba * (b / dp) * cfg.d_inner * cfg.ssm_state * 4
+                         + n_rg * (b / dp) * cfg.lru_width_ * 4) * 2 / tp
+        byts["activations"] = cfg.n_layers * 8.0 * (b / dp) * e * dt
+    bytes_dev = float(sum(byts.values()))
+
+    # ----- collective bytes (per device) -----
+    colls: dict[str, float] = {}
+    if kind == "train":
+        # FSDP weight all-gather per pass (x3: fwd/bwd/remat) + grad RS/AG
+        colls["weight_allgather"] = 3.0 * n_total * dt / tp
+        colls["grad_reduce"] = 2.0 * n_total * dt / tp
+        if mesh_shape.get("pod", 1) > 1:
+            colls["pod_gradient_allreduce"] = 2.0 * n_total * dt / (tp * 16)
+        # SP boundary gathers: attention needs full seq per head shard
+        colls["sp_activation"] = cfg.n_layers * 2.0 * tokens_dev * e * dt
+        if cfg.n_experts:
+            colls["moe_all_to_all"] = 2.0 * tokens_dev * e * dt * moe_cf * 4
+    elif kind == "prefill":
+        if serve_weight_layout == "fsdp_tp":
+            colls["weight_allgather"] = n_total * dt / tp
+        colls["tp_activation_allreduce"] = cfg.n_layers * 2.0 * tokens_dev * e * dt
+        if cfg.n_experts:
+            colls["moe_all_to_all"] = 2.0 * tokens_dev * e * dt * moe_cf
+    else:
+        if serve_weight_layout == "fsdp_tp":
+            colls["weight_allgather"] = n_active * dt / tp
+        colls["tp_activation_allreduce"] = cfg.n_layers * 2.0 * (b / dp) * e * dt
+        if cfg.n_experts:
+            colls["moe_all_to_all"] = 2.0 * (b / dp) * e * dt * moe_cf
+    coll_dev = float(sum(colls.values()))
+
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_dev / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    useful = (2.0 if kind != "train" else 6.0) * n_active * tokens / flops_global
+    return {
+        **terms,
+        "dominant": dominant.removesuffix("_s"),
+        "bound_step_s": max(terms.values()),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "flops_breakdown_global": {
+            "matmul": matmul_fwd, "attention": attn_fwd, "ssm": ssm_fwd,
+            "rglru": rg_fwd, "logits": logits_fwd},
+        "bytes_breakdown": byts,
+        "collective_breakdown": colls,
+        "model_flops_ratio": useful,
+    }
+
+
+def analytic_memory(cfg, shape, mesh_shape: dict, kind: str) -> dict[str, float]:
+    """TPU-target per-device live-set model (bytes).
+
+    The CPU-host measurement inflates temps: XLA-CPU's float-normalization
+    pass upconverts bf16 loop-carried buffers (e.g. the layer-scan saved-
+    activation stack) to f32 — native-bf16 TPUs never materialise those.
+    arguments/outputs from memory_analysis() are exact; this model estimates
+    the true TPU temp live-set for the §Dry-run "fits" verdict.
+    """
+    dp = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    tp = mesh_shape.get("model", 1)
+    dtype_b = 2 if cfg.dtype == "bfloat16" else 4
+    e = cfg.d_model
+    n_params = cfg.param_count()
+
+    params_dev = n_params * dtype_b / (dp * tp)          # FSDP(data) x TP
+    out = {"params": params_dev}
+
+    if kind == "train":
+        tokens_dev = shape.global_batch * shape.seq_len / dp
+        out["opt_state"] = n_params * 8 / (dp * tp)       # m+v f32
+        # remat-full saves one residual per layer, seq SP-sharded over TP
+        out["saved_activations"] = cfg.n_layers * tokens_dev * e * dtype_b / tp
+        out["logits_chunk"] = (shape.global_batch / dp) * 1024 \
+            * cfg.vocab_size / tp * 4 * 2                 # fwd+bwd chunk
+        out["gathered_layer_weights"] = \
+            (n_params / max(cfg.n_layers, 1)) * dtype_b / tp * 2
+        out["transients"] = 4 * tokens_dev / tp * e * 4   # few f32 act copies
+    elif kind == "prefill":
+        tokens_dev = shape.global_batch * shape.seq_len / dp
+        kv_pairs = sum(1 for s in cfg.pattern if s.kind == "attn") \
+            / max(len(cfg.pattern), 1) * cfg.n_layers
+        kv_len = shape.seq_len
+        out["kv_cache_out"] = (shape.global_batch / dp) * kv_pairs * 2 \
+            * min(kv_len, max((s.window or kv_len) for s in cfg.pattern)) \
+            * cfg.n_kv_heads * cfg.head_dim_ * dtype_b / min(
+                tp if cfg.n_kv_heads % tp == 0 else 1, tp)
+        out["transients"] = 6 * tokens_dev * e * dtype_b
+    else:  # decode
+        out["transients"] = 64 * 2**20  # GEMV-bound: O(100MB) workspace
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def model_flops(cfg, shape, chips: int) -> dict[str, float]:
+    """MODEL_FLOPS = 6 N D (train) / 2 N_active D (serve), N = active params."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mf = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        mf = 2.0 * n_active * shape.global_batch
+    return {"model_flops_global": mf, "model_flops_per_device": mf / chips}

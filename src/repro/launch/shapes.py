@@ -1,0 +1,76 @@
+"""Assigned input-shape set + per-arch applicability + ShapeDtypeStruct specs.
+
+LM transformer shapes are seq_len x global_batch; decode_*/long_* lower
+``serve_step`` (one new token against a KV cache of seq_len), NOT train_step.
+long_500k requires sub-quadratic attention (cfg.sub_quadratic) and is skipped
+— with the reason recorded — for pure full-attention archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["ShapeCase", "SHAPES", "cell_applicability", "batch_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    kind: str      # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCase("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCase("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCase("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_applicability(cfg: ModelConfig, shape: ShapeCase) -> tuple[bool, str]:
+    """(runs?, reason).  Skips are part of the deliverable record."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("skip: pure full-attention arch — 512k decode KV is "
+                       "quadratic-history; per DESIGN.md §Shape-applicability")
+    if cfg.name == "whisper-small" and shape.name == "long_500k":
+        return False, "skip: enc-dec decoder is architecturally short-context"
+    return True, "ok"
+
+
+def _token_dtype() -> jnp.dtype:
+    return jnp.int32
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCase) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, no device allocation.  Frontend stubs per
+    the assignment: [vlm] precomputed patch embeddings, [audio] precomputed
+    encoder frame states.
+    """
+    b = shape.global_batch
+    s = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    tok = _token_dtype()
+
+    extras: dict = {}
+    if cfg.frontend == "vision_patches":
+        extras["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), dt)
+    if cfg.is_encoder_decoder:
+        extras["enc_states"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_len, cfg.d_model), dt)
+
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), tok),
+                "labels": jax.ShapeDtypeStruct((b, s), tok), **extras}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), tok), **extras}
+    # decode: one new token; the cache specs come from launch/steps.py
+    return {"token": jax.ShapeDtypeStruct((b,), tok), **extras}

@@ -1,0 +1,296 @@
+"""Step builders for the dry-run and the real launchers: train / prefill /
+decode / denoise, each with its in/out shardings for a given mesh + cell.
+
+Everything here works on ShapeDtypeStructs (no allocation): the dry-run
+lowers jax.jit(step, in_shardings=..., donate...).lower(**specs).compile().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models.rglru import RGLRUState
+from repro.models.ssm import MambaState
+from repro.optim import AdamW
+from repro.parallel import AxisRules, param_partition_specs, spec_for
+from repro.launch.shapes import ShapeCase, batch_specs
+
+__all__ = ["CellPlan", "make_rules", "plan_cell"]
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+
+    fn: Any                      # python callable (to be jit'ed)
+    arg_specs: tuple             # ShapeDtypeStructs (positional)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    static_descr: dict           # for the report
+
+
+def make_rules(mesh, cfg: ModelConfig, kind: str, sp: bool = False,
+               serve_layout: str = "fsdp_tp") -> AxisRules:
+    """Default production rules per cell kind (overridable by perf configs).
+
+    train: DP over (pod,data), FSDP weight shard over data, TP over model;
+           SP (activation seq sharding over model) for the big train cells.
+    serve: "fsdp_tp" — weights 2D-sharded, re-gathered every layer (min
+           memory, collective-heavy); "tp_stationary" — weights sharded over
+           the model axis only and never moved (the §Perf serving layout).
+    """
+    has_pod = "pod" in mesh.shape
+    batch = ("pod", "data") if has_pod else ("data",)
+    fsdp: tuple[str, ...] = ("data",)
+    if kind in ("prefill", "decode") and serve_layout == "tp_stationary":
+        fsdp = ()
+    return AxisRules(
+        mesh=mesh,
+        batch=batch,
+        model=("model",),
+        fsdp=fsdp,
+        seq=("model",) if sp else (),
+        expert=("model",),
+    )
+
+
+def _shardings(tree_specs, rules: AxisRules):
+    return jax.tree.map(
+        lambda spec: NamedSharding(rules.mesh, spec), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_shardings(bspecs: dict, rules: AxisRules) -> dict:
+    out = {}
+    for k, v in bspecs.items():
+        if k in ("tokens", "labels"):
+            out[k] = spec_for(v.shape, ("batch", None), rules)
+        elif k == "token":
+            out[k] = spec_for(v.shape, ("batch",), rules)
+        else:  # prefix_embeds / enc_states (B, F, E)
+            out[k] = spec_for(v.shape, ("batch", None, None), rules)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache partition specs (decode)
+# ---------------------------------------------------------------------------
+
+def _scale_spec(shape, rules: AxisRules) -> P:
+    """(..., B, L, KV, 1) quant scales: mirror the KV sharding sans head dim."""
+    kv_like = _kv_spec(shape[:-1] + (shape[-2],), rules)
+    return P(*kv_like[:-1], None)
+
+
+def _kv_spec(shape, rules: AxisRules) -> P:
+    """(..., B, L, KV, Dh): prefer head-TP; fall back to seq-TP; replicate."""
+    *lead, b, l, kv, dh = shape
+    model_n = rules.axes_size(rules.model)
+    bspec = spec_for((b,), ("batch",), rules)[0]
+    head_ok = model_n > 1 and kv % model_n == 0
+    seq_ok = model_n > 1 and l % model_n == 0
+    model_ax = rules.model if len(rules.model) > 1 else rules.model[0]
+    head_ax = model_ax if head_ok else None
+    seq_ax = model_ax if (not head_ok and seq_ok) else None
+    return P(*(None,) * len(lead), bspec, seq_ax, head_ax, None)
+
+
+def _cache_specs(cache_sds: models.Cache, rules: AxisRules):
+    def layer_spec(c):
+        if isinstance(c, attn_mod.QuantKVCache):
+            return attn_mod.QuantKVCache(
+                k=_kv_spec(c.k.shape, rules), v=_kv_spec(c.v.shape, rules),
+                k_scale=_scale_spec(c.k_scale.shape, rules),
+                v_scale=_scale_spec(c.v_scale.shape, rules))
+        if isinstance(c, attn_mod.KVCache):
+            return attn_mod.KVCache(k=_kv_spec(c.k.shape, rules),
+                                    v=_kv_spec(c.v.shape, rules))
+        if isinstance(c, MambaState):
+            return MambaState(
+                h=spec_for(c.h.shape, ("batch", "model", None), rules),
+                conv=spec_for(c.conv.shape, ("batch", None, "model"), rules))
+        if isinstance(c, RGLRUState):
+            return RGLRUState(
+                h=spec_for(c.h.shape, ("batch", "model"), rules),
+                conv=spec_for(c.conv.shape, ("batch", None, "model"), rules))
+        raise TypeError(type(c))
+
+    def maybe(c):
+        return None if c is None else layer_spec(c)
+
+    return models.Cache(
+        blocks=tuple(maybe(c) for c in cache_sds.blocks),
+        tail=tuple(maybe(c) for c in cache_sds.tail),
+        cross=None if cache_sds.cross is None else tuple(
+            maybe(c) for c in cache_sds.cross),
+        cross_tail=None if cache_sds.cross_tail is None else tuple(
+            maybe(c) for c in cache_sds.cross_tail),
+        pos=P(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# cell planners
+# ---------------------------------------------------------------------------
+
+def _train_plan(cfg: ModelConfig, rules: AxisRules, shape: ShapeCase,
+                remat: str, seq_chunk: int = 1024,
+                ce_dtype: str = "float32") -> CellPlan:
+    opt = AdamW(lr=3e-4)
+    pspecs_sds = models.param_specs(cfg)
+    ospecs_sds = jax.eval_shape(opt.init, pspecs_sds)
+    bspecs = batch_specs(cfg, shape)
+
+    p_part = param_partition_specs(pspecs_sds, rules)
+    o_part = type(ospecs_sds)(
+        step=P(),
+        m=param_partition_specs(ospecs_sds.m, rules),
+        v=param_partition_specs(ospecs_sds.v, rules))
+    b_part = _batch_shardings(bspecs, rules)
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            return models.lm_loss(p, batch, cfg, remat=remat, remat_group=1,
+                                  seq_chunk=seq_chunk, ce_dtype=ce_dtype)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {**metrics, **om}
+
+    return CellPlan(
+        fn=step,
+        arg_specs=(pspecs_sds, ospecs_sds, bspecs),
+        in_shardings=(_shardings(p_part, rules), _shardings(o_part, rules),
+                      _shardings(b_part, rules)),
+        out_shardings=(_shardings(p_part, rules), _shardings(o_part, rules),
+                       None),
+        donate_argnums=(0, 1),
+        static_descr={"kind": "train", "remat": remat,
+                      "seq_chunk": seq_chunk, "ce_dtype": ce_dtype},
+    )
+
+
+def _prefill_plan(cfg: ModelConfig, rules: AxisRules,
+                  shape: ShapeCase) -> CellPlan:
+    pspecs_sds = models.param_specs(cfg)
+    bspecs = batch_specs(cfg, shape)
+    p_part = param_partition_specs(pspecs_sds, rules)
+    b_part = _batch_shardings(bspecs, rules)
+
+    def step(params, batch):
+        logits, cache = models.prefill(
+            params, batch["tokens"], cfg, max_len=shape.seq_len,
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_states=batch.get("enc_states"))
+        return logits, cache
+
+    cache_sds = jax.eval_shape(step, pspecs_sds, bspecs)[1]
+    cache_part = _cache_specs(cache_sds, rules)
+
+    return CellPlan(
+        fn=step,
+        arg_specs=(pspecs_sds, bspecs),
+        in_shardings=(_shardings(p_part, rules), _shardings(b_part, rules)),
+        out_shardings=(NamedSharding(rules.mesh, spec_for(
+            (shape.global_batch, cfg.vocab_size), ("batch", "model"), rules)),
+            _shardings(cache_part, rules)),
+        donate_argnums=(),
+        static_descr={"kind": "prefill"},
+    )
+
+
+def _decode_plan(cfg: ModelConfig, rules: AxisRules, shape: ShapeCase,
+                 cache_dtype: str = "native") -> CellPlan:
+    pspecs_sds = models.param_specs(cfg)
+    bspecs = batch_specs(cfg, shape)
+    p_part = param_partition_specs(pspecs_sds, rules)
+    b_part = _batch_shardings(bspecs, rules)
+
+    # cache specs via an abstract prefill at full cache length
+    prefill_tokens = jax.ShapeDtypeStruct(
+        (shape.global_batch, shape.seq_len), jnp.int32)
+    prefill_batch = dict(bspecs)
+    prefill_batch.pop("token")
+    cache_sds = jax.eval_shape(
+        lambda p, t, b: models.prefill(
+            p, t, cfg, max_len=shape.seq_len,
+            prefix_embeds=b.get("prefix_embeds"),
+            enc_states=b.get("enc_states"), cache_dtype=cache_dtype)[1],
+        pspecs_sds, prefill_tokens, prefill_batch)
+    cache_part = _cache_specs(cache_sds, rules)
+
+    def step(params, cache, token):
+        return models.decode_step(params, cache, token, cfg)
+
+    logits_part = spec_for((shape.global_batch, cfg.vocab_size),
+                           ("batch", "model"), rules)
+    return CellPlan(
+        fn=step,
+        arg_specs=(pspecs_sds, cache_sds, bspecs["token"]),
+        in_shardings=(_shardings(p_part, rules), _shardings(cache_part, rules),
+                      NamedSharding(rules.mesh, _batch_shardings(
+                          {"token": bspecs["token"]}, rules)["token"])),
+        out_shardings=(NamedSharding(rules.mesh, logits_part),
+                       _shardings(cache_part, rules)),
+        donate_argnums=(1,),
+        static_descr={"kind": "decode", "cache_len": shape.seq_len,
+                      "cache_dtype": cache_dtype},
+    )
+
+
+def _denoise_plan(cfg: ModelConfig, rules: AxisRules,
+                  shape: ShapeCase) -> CellPlan:
+    """Diffusion-LM serve step (the paper's technique at LM scale)."""
+    pspecs_sds = models.param_specs(cfg, with_diffusion_head=True)
+    p_part = param_partition_specs(pspecs_sds, rules)
+    b, s = shape.global_batch, shape.seq_len
+    x_sds = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+    sig_sds = jax.ShapeDtypeStruct((b,), jnp.float32)
+    x_part = spec_for(x_sds.shape, ("batch", "seq", None), rules)
+
+    def step(params, x_t, sigma):
+        return models.denoise(params, x_t, sigma, cfg)
+
+    return CellPlan(
+        fn=step,
+        arg_specs=(pspecs_sds, x_sds, sig_sds),
+        in_shardings=(_shardings(p_part, rules),
+                      NamedSharding(rules.mesh, x_part),
+                      NamedSharding(rules.mesh, P())),
+        out_shardings=NamedSharding(rules.mesh, x_part),
+        donate_argnums=(),
+        static_descr={"kind": "denoise"},
+    )
+
+
+def plan_cell(cfg: ModelConfig, shape: ShapeCase, mesh,
+              kind_override: Optional[str] = None, sp: Optional[bool] = None,
+              remat: str = "full", serve_layout: str = "fsdp_tp",
+              seq_chunk: int = 1024, ce_dtype: str = "float32",
+              cache_dtype: str = "native") -> CellPlan:
+    kind = kind_override or shape.kind
+    if sp is None:
+        # SP on for big-activation train cells (see DESIGN.md §5)
+        sp = kind in ("train", "denoise") and \
+            shape.global_batch * shape.seq_len >= 2 ** 20
+    rules = make_rules(mesh, cfg, kind, sp=sp, serve_layout=serve_layout)
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            return _train_plan(cfg, rules, shape, remat, seq_chunk,
+                               ce_dtype), rules
+        if kind == "prefill":
+            return _prefill_plan(cfg, rules, shape), rules
+        if kind == "decode":
+            return _decode_plan(cfg, rules, shape, cache_dtype), rules
+        if kind == "denoise":
+            return _denoise_plan(cfg, rules, shape), rules
+    raise ValueError(kind)

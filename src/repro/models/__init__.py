@@ -1,0 +1,5 @@
+from .model import (Cache, decode_step, denoise, forward, init_params,
+                    lm_loss, param_specs, prefill)
+
+__all__ = ["Cache", "decode_step", "denoise", "forward", "init_params",
+           "lm_loss", "param_specs", "prefill"]

@@ -1,0 +1,238 @@
+"""Attention: GQA/MQA self-attention (full / sliding-window / local:global),
+cross-attention (enc-dec), and single-token decode against (ring-)KV caches.
+
+Full-sequence paths call kernels.ops.flash_attention; decode is a GEMV
+(memory-bound — no kernel needed).  Bounded windows use ring-buffer caches:
+position p lives in slot p % window (shapes in this framework keep
+S % window == 0, asserted at prefill).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.kernels import ops
+from repro.parallel import constrain
+
+from .layers import apply_rope, dense_init, rope_cos_sin, zeros
+
+Array = jax.Array
+_NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: Array  # (B, L_cache, KV, Dh)  (L_cache = window for ring buffers)
+    v: Array
+
+
+class QuantKVCache(NamedTuple):
+    """int8 KV cache with per-(slot, head) scales — halves decode HBM traffic
+    (the dominant term for MHA serving; see EXPERIMENTS.md §Perf)."""
+
+    k: Array        # int8 (B, L, KV, Dh)
+    v: Array        # int8
+    k_scale: Array  # f32 (B, L, KV, 1)
+    v_scale: Array  # f32
+
+
+def _quant(x: Array) -> tuple[Array, Array]:
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True) \
+        / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def quantize_kv(kvc: KVCache) -> QuantKVCache:
+    kq, ks = _quant(kvc.k)
+    vq, vs = _quant(kvc.v)
+    return QuantKVCache(k=kq, v=vq, k_scale=ks, v_scale=vs)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    e = cfg.d_model
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], e, (e, h * dh), dt),
+        "wk": dense_init(ks[1], e, (e, kv * dh), dt),
+        "wv": dense_init(ks[2], e, (e, kv * dh), dt),
+        "wo": dense_init(ks[3], h * dh, (h * dh, e), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p.update(bq=zeros((h * dh,), dt), bk=zeros((kv * dh,), dt),
+                 bv=zeros((kv * dh,), dt))
+    return p
+
+
+def _split_heads(x: Array, n: int, dh: int) -> Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, dh)
+
+
+def _proj_qkv(p: dict, xq: Array, xkv: Array, cfg: ModelConfig
+              ) -> tuple[Array, Array, Array]:
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (_split_heads(q, h, dh), _split_heads(k, kv, dh),
+            _split_heads(v, kv, dh))
+
+
+# ---------------------------------------------------------------------------
+# full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+def self_attention(p: dict, x: Array, positions: Array, cfg: ModelConfig,
+                   spec: LayerSpec) -> tuple[Array, KVCache]:
+    """x (B,S,E), positions (S,) -> (out (B,S,E), full-length KVCache)."""
+    q, k, v = _proj_qkv(p, x, x, cfg)
+    if cfg.rope_theta is not None:
+        cos, sin = rope_cos_sin(positions, cfg.head_dim_, cfg.rope_theta,
+                                dtype=jnp.float32)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, "model", None)
+    out = ops.flash_attention(q, k, v, causal=True, window=spec.window,
+                              logits_soft_cap=cfg.logits_soft_cap)
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    return out @ p["wo"], KVCache(k=k, v=v)
+
+
+def cross_attention(p: dict, x: Array, enc_k: Array, enc_v: Array,
+                    cfg: ModelConfig) -> Array:
+    """x (B,S,E) queries vs precomputed encoder K/V (B,F,KV,Dh)."""
+    h, dh = cfg.n_heads, cfg.head_dim_
+    q = _split_heads(x @ p["wq"], h, dh)
+    out = ops.flash_attention(q, enc_k, enc_v, causal=False, window=None)
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    return out @ p["wo"]
+
+
+def encode_cross_kv(p: dict, enc_states: Array, cfg: ModelConfig) -> KVCache:
+    kv, dh = cfg.n_kv_heads, cfg.head_dim_
+    k = _split_heads(enc_states @ p["wk"], kv, dh)
+    v = _split_heads(enc_states @ p["wv"], kv, dh)
+    return KVCache(k=k, v=v)
+
+
+def prefill_cache(kvc: KVCache, spec: LayerSpec) -> KVCache:
+    """Convert a full-length prefill KV to the decode cache layout.
+
+    Ring-buffer layers keep only the last ``window`` positions; because
+    S % window == 0 there, slot s holds position S - window + s == s (mod w).
+    """
+    if spec.window is None:
+        return kvc
+    s = kvc.k.shape[1]
+    w = spec.window
+    if s <= w:
+        return kvc
+    assert s % w == 0, (s, w)
+    return KVCache(k=kvc.k[:, -w:], v=kvc.v[:, -w:])
+
+
+def grow_cache(kvc: KVCache, spec: LayerSpec, max_len: int) -> KVCache:
+    """Pad a prefill cache out to decode capacity (full-attention layers)."""
+    if spec.window is not None:
+        return kvc  # ring buffers are already at capacity
+    b, s, kv, dh = kvc.k.shape
+    if s >= max_len:
+        return kvc
+    pad = [(0, 0), (0, max_len - s), (0, 0), (0, 0)]
+    return KVCache(k=jnp.pad(kvc.k, pad), v=jnp.pad(kvc.v, pad))
+
+
+# ---------------------------------------------------------------------------
+# decode (single token vs cache)
+# ---------------------------------------------------------------------------
+
+def self_attention_decode(p: dict, x1: Array, cache, pos: Array,
+                          cfg: ModelConfig, spec: LayerSpec):
+    """x1 (B,1,E); pos: scalar int32. cache: KVCache or QuantKVCache."""
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q, k, v = _proj_qkv(p, x1, x1, cfg)
+    if cfg.rope_theta is not None:
+        cos, sin = rope_cos_sin(pos[None], dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    quant = isinstance(cache, QuantKVCache)
+    lcache = cache.k.shape[1]
+    slot = pos % lcache if spec.window is not None else pos
+    if quant:
+        kq, ks = _quant(k)
+        vq, vs = _quant(v)
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, kq, slot, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, vq, slot, axis=1)
+        new_ks = jax.lax.dynamic_update_slice_in_dim(cache.k_scale, ks, slot,
+                                                     axis=1)
+        new_vs = jax.lax.dynamic_update_slice_in_dim(cache.v_scale, vs, slot,
+                                                     axis=1)
+    else:
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+
+    # positions actually held by each slot (ring-aware), for masking
+    slots = jnp.arange(lcache)
+    if spec.window is not None:
+        held = pos - jnp.mod(pos - slots, lcache)   # largest p<=pos, p%L==slot
+        valid = (held >= 0) & (held > pos - spec.window) & (held <= pos)
+    else:
+        valid = slots <= pos
+
+    group = h // kv
+    # cache stays in its storage dtype; accumulation in f32 via the einsum
+    # (casting a 32k-deep cache to f32 would double decode HBM traffic)
+    qg = (q * dh ** -0.5).reshape(q.shape[0], kv, group, dh)   # (B,KV,G,Dh)
+    if quant:
+        # scales factor out of the per-slot dot products exactly
+        logits = jnp.einsum("bkgd,blkd->bkgl", qg.astype(jnp.bfloat16),
+                            new_k.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        logits = logits * new_ks[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    else:
+        logits = jnp.einsum("bkgd,blkd->bkgl", qg.astype(new_k.dtype), new_k,
+                            preferred_element_type=jnp.float32)
+    if cfg.logits_soft_cap is not None:
+        logits = cfg.logits_soft_cap * jnp.tanh(logits / cfg.logits_soft_cap)
+    logits = jnp.where(valid[None, None, None, :], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if quant:
+        pw = probs * new_vs[..., 0].transpose(0, 2, 1)[:, :, None, :]
+        out = jnp.einsum("bkgl,blkd->bkgd", pw.astype(jnp.bfloat16),
+                         new_v.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+        new_cache = QuantKVCache(k=new_k, v=new_v, k_scale=new_ks,
+                                 v_scale=new_vs)
+    else:
+        out = jnp.einsum("bkgl,blkd->bkgd", probs.astype(new_v.dtype), new_v,
+                         preferred_element_type=jnp.float32)
+        new_cache = KVCache(k=new_k, v=new_v)
+    out = out.reshape(x1.shape[0], 1, h * dh).astype(x1.dtype)
+    return out @ p["wo"], new_cache
+
+
+def cross_attention_decode(p: dict, x1: Array, cross: KVCache,
+                           cfg: ModelConfig) -> Array:
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    group = h // kv
+    q = _split_heads(x1 @ p["wq"], h, dh).astype(jnp.float32) * dh ** -0.5
+    qg = q.reshape(q.shape[0], kv, group, dh)
+    logits = jnp.einsum("bkgd,blkd->bkgl", qg, cross.k.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", probs, cross.v.astype(jnp.float32))
+    out = out.reshape(x1.shape[0], 1, h * dh).astype(x1.dtype)
+    return out @ p["wo"]

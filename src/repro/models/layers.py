@@ -1,0 +1,129 @@
+"""Shared neural building blocks (pure JAX, no flax): norms, RoPE, MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.parallel import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, fan_in: int, shape, dtype) -> Array:
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.float32) -> Array:
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig) -> dict:
+    p = {"scale": zeros((cfg.d_model,))}
+    if cfg.norm == "layernorm":
+        p["bias"] = zeros((cfg.d_model,))
+    return p
+
+
+def apply_norm(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    if cfg.norm == "rmsnorm":
+        return ops.rmsnorm(x, p["scale"], eps=cfg.norm_eps)
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * (1.0 + p["scale"].astype(jnp.float32)) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions: Array, head_dim: int, theta: float,
+                 dtype=jnp.float32) -> tuple[Array, Array]:
+    """positions (...,) -> cos/sin (..., head_dim//2)."""
+    inv = theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x (B, S, H, Dh); cos/sin (S, Dh//2) or (B, S, Dh//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, Dh/2) -> broadcast over batch and heads
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:              # (B, S, Dh/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (dense FFN)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig) -> dict:
+    e, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p = {"w1": dense_init(ks[0], e, (e, f), dt),
+         "w2": dense_init(ks[1], f, (f, e), dt)}
+    if cfg.act in ("swiglu", "geglu"):
+        p["w3"] = dense_init(ks[2], e, (e, f), dt)
+    return p
+
+
+def apply_mlp(p: dict, x: Array, cfg: ModelConfig) -> Array:
+    h = x @ p["w1"]
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(h, approximate=True) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    h = constrain(h, "batch", None, "model")
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# sigma conditioning (diffusion-LM mode)
+# ---------------------------------------------------------------------------
+
+def sigma_embedding(sigma: Array, dim: int) -> Array:
+    """Sinusoidal embedding of log-sigma; sigma (B,) -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                    * (jnp.log(1e4) / max(half - 1, 1)))
+    ang = 0.25 * jnp.log(sigma.astype(jnp.float32))[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def init_film(key, cfg: ModelConfig) -> dict:
+    e = cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "head_in": dense_init(k1, e, (e, e), dt),
+        "head_out": zeros((e, e), dt),   # zero-init output head (stable start)
+        "t_mlp1": dense_init(k2, e, (e, e), dt),
+        "t_mlp2": zeros((e, 2 * e), dt),  # zero-init FiLM (identity modulation)
+    }
+
+
+def apply_film_cond(p: dict, sigma: Array, cfg: ModelConfig) -> Array:
+    """(B,) sigma -> (B, 2E) [scale||shift] modulation vector."""
+    t = sigma_embedding(sigma, cfg.d_model).astype(jnp.dtype(cfg.dtype))
+    return jax.nn.silu(t @ p["t_mlp1"]) @ p["t_mlp2"]

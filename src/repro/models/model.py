@@ -1,0 +1,505 @@
+"""Unified model: init / train-loss / prefill / decode / denoise for every
+zoo architecture (DESIGN.md §4-5).
+
+Layer stack = pattern-grouped scan (HLO size O(1) in depth) + unrolled
+remainder.  Caches mirror the params layout so decode scans over
+(params, cache) jointly.  The ``denoise`` path is the diffusion-LM mode the
+paper's technique corrects (sigma-FiLM conditioning + eps head).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.parallel import constrain
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import (apply_film_cond, apply_mlp, apply_norm, dense_init,
+                     init_film, init_mlp, init_norm, zeros)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig, spec: LayerSpec) -> dict:
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {"ln1": init_norm(cfg)}
+    if spec.kind == "attn":
+        p["attn"] = attn.init_attention(ks[0], cfg)
+    elif spec.kind == "mamba":
+        p["mamba"] = ssm_mod.init_mamba(ks[0], cfg)
+    elif spec.kind == "rglru":
+        p["rglru"] = rglru_mod.init_rglru(ks[0], cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.cross_attn:
+        p["lnc"] = init_norm(cfg)
+        p["cross"] = attn.init_attention(ks[1], cfg, cross=True)
+    if spec.kind != "mamba" and cfg.d_ff > 0:
+        p["ln2"] = init_norm(cfg)
+        if cfg.n_experts > 0:
+            p["moe"] = moe_mod.init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = init_mlp(ks[2], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, with_diffusion_head: bool = False) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    n_pat = len(cfg.pattern)
+    keys = jax.random.split(key, 5 + n_pat + cfg.n_remainder)
+
+    params: dict[str, Any] = {
+        "tok_embed": dense_init(keys[0], cfg.d_model,
+                                (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": init_norm(cfg),
+    }
+    if cfg.rope_theta is None and cfg.pattern[0].kind == "attn":
+        params["pos_embed"] = dense_init(
+            keys[1], cfg.d_model, (cfg.max_position, cfg.d_model), dt)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[2], cfg.d_model, (cfg.d_model, cfg.vocab_size), dt)
+
+    blocks = []
+    for pos, spec in enumerate(cfg.pattern):
+        if cfg.n_groups == 0:
+            blocks.append(None)
+            continue
+        gks = jax.random.split(keys[5 + pos], cfg.n_groups)
+        blocks.append(jax.vmap(
+            lambda k, s=spec: init_block(k, cfg, s))(gks))
+    params["blocks"] = tuple(blocks)
+    params["tail"] = tuple(
+        init_block(keys[5 + n_pat + i], cfg, cfg.pattern[i])
+        for i in range(cfg.n_remainder))
+    if with_diffusion_head:
+        params["diffusion"] = init_film(keys[3], cfg)
+    return params
+
+
+def param_specs(cfg: ModelConfig, with_diffusion_head: bool = False):
+    """ShapeDtypeStruct pytree of the params (no allocation — dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_params(jax.random.key(0), cfg, with_diffusion_head))
+
+
+# ---------------------------------------------------------------------------
+# block application (full sequence)
+# ---------------------------------------------------------------------------
+
+def _modulate(h: Array, t_cond: Optional[Array]) -> Array:
+    if t_cond is None:
+        return h
+    scale, shift = jnp.split(t_cond[:, None, :], 2, axis=-1)
+    return h * (1.0 + scale) + shift
+
+
+def apply_block(p: dict, x: Array, cfg: ModelConfig, spec: LayerSpec,
+                positions: Array, enc_states: Optional[Array] = None,
+                t_cond: Optional[Array] = None) -> tuple[Array, dict]:
+    aux: dict[str, Array] = {}
+    h = _modulate(apply_norm(p["ln1"], x, cfg), t_cond)
+    if spec.kind == "attn":
+        mix, _ = attn.self_attention(p["attn"], h, positions, cfg, spec)
+    elif spec.kind == "mamba":
+        mix, _ = ssm_mod.mamba_forward(p["mamba"], h, cfg)
+    else:
+        mix, _ = rglru_mod.rglru_forward(p["rglru"], h, cfg)
+    x = x + mix
+    x = constrain(x, "batch", "seq", None)
+    if spec.cross_attn and enc_states is not None:
+        hc = apply_norm(p["lnc"], x, cfg)
+        ckv = attn.encode_cross_kv(p["cross"], enc_states, cfg)
+        x = x + attn.cross_attention(p["cross"], hc, ckv.k, ckv.v, cfg)
+    if "mlp" in p or "moe" in p:
+        h2 = _modulate(apply_norm(p["ln2"], x, cfg), t_cond)
+        if "moe" in p:
+            y, aux = moe_mod.apply_moe(p["moe"], h2, cfg)
+        else:
+            y = apply_mlp(p["mlp"], h2, cfg)
+        x = x + y
+        x = constrain(x, "batch", "seq", None)
+    return x, aux
+
+
+def _remat_group_size(n_groups: int, target: int = 8) -> int:
+    """Largest divisor of n_groups <= target (keeps >= 2 scan steps)."""
+    best = 1
+    for k in range(2, target + 1):
+        if n_groups % k == 0 and n_groups // k >= 2:
+            best = k
+    return best
+
+
+def _stack_forward(params: dict, x: Array, cfg: ModelConfig, positions: Array,
+                   enc_states: Optional[Array] = None,
+                   t_cond: Optional[Array] = None,
+                   remat: str = "none",
+                   remat_group: int = 1) -> tuple[Array, dict]:
+    """Scan over pattern groups + unrolled remainder. Returns (x, aux).
+
+    remat: "none" | "full" (recompute everything in backward — training at
+    scale) | "dots" (keep matmul outputs, recompute the rest).
+    remat_group: scan over super-groups of this many pattern groups — the
+    saved-activation stack shrinks by the same factor (recompute grows within
+    the super-group).  0 -> auto (divisor of n_groups up to 8).
+    """
+    aux_acc = {"load_balance_loss": jnp.zeros((), jnp.float32),
+               "dropped_fraction": jnp.zeros((), jnp.float32)}
+
+    def one_group(x, gp):
+        a = {k: jnp.zeros((), jnp.float32) for k in aux_acc}
+        for pos, spec in enumerate(cfg.pattern):
+            x, aux = apply_block(gp[pos], x, cfg, spec, positions,
+                                 enc_states, t_cond)
+            for k, v in aux.items():
+                a[k] = a[k] + v.astype(jnp.float32)
+        return x, a
+
+    k_group = remat_group if remat_group else _remat_group_size(cfg.n_groups)
+    if cfg.n_groups % max(k_group, 1) != 0:
+        k_group = 1
+
+    def super_group(x, sgp):
+        a = {k: jnp.zeros((), jnp.float32) for k in aux_acc}
+        for i in range(k_group):
+            gp = jax.tree.map(lambda t: t[i], sgp) if k_group > 1 else sgp
+            x, aux = one_group(x, gp)
+            for k, v in aux.items():
+                a[k] = a[k] + v
+        return x, a
+
+    if remat == "full":
+        super_group = jax.checkpoint(super_group, prevent_cse=False)
+    elif remat == "dots":
+        super_group = jax.checkpoint(
+            super_group, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if cfg.n_groups > 0:
+        blocks = params["blocks"]
+        if k_group > 1:
+            blocks = jax.tree.map(
+                lambda t: t.reshape((cfg.n_groups // k_group, k_group)
+                                    + t.shape[1:]), blocks)
+        x, auxs = jax.lax.scan(super_group, x, blocks)
+        for k in aux_acc:
+            aux_acc[k] = aux_acc[k] + jnp.sum(auxs[k])
+    for i in range(cfg.n_remainder):
+        x, aux = apply_block(params["tail"][i], x, cfg, cfg.pattern[i],
+                             positions, enc_states, t_cond)
+        for k, v in aux.items():
+            aux_acc[k] = aux_acc[k] + v.astype(jnp.float32)
+    n_moe_layers = max(cfg.n_layers if cfg.n_experts else 1, 1)
+    aux_acc = {k: v / n_moe_layers for k, v in aux_acc.items()}
+    return x, aux_acc
+
+
+def _embed(params: dict, tokens: Array, cfg: ModelConfig,
+           positions: Array) -> Array:
+    x = params["tok_embed"][tokens]
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][positions][None]
+    return constrain(x, "batch", "seq", None)
+
+
+def _logits(params: dict, x: Array, cfg: ModelConfig) -> Array:
+    head = params["lm_head"] if "lm_head" in params else params["tok_embed"].T
+    # vocab-TP logits: gather the (SP-sharded) hidden over seq, shard the
+    # vocab dim instead — keeps the lm_head backward a local partial matmul
+    # + small all-reduce rather than a replicated (E, V) f32 gradient
+    x = constrain(x, "batch", None, None)
+    logits = (x @ head).astype(jnp.float32)
+    return constrain(logits, "batch", None, "model")
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def hidden_states(params: dict, tokens: Array, cfg: ModelConfig,
+                  prefix_embeds: Optional[Array] = None,
+                  enc_states: Optional[Array] = None,
+                  remat: str = "none",
+                  remat_group: int = 1) -> tuple[Array, dict]:
+    """Final-norm hidden states (B, S_total, E) + aux (no logits)."""
+    s = tokens.shape[1]
+    prefix = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    positions = jnp.arange(prefix + s)
+    x = _embed(params, tokens, cfg, positions[prefix:])
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x, aux = _stack_forward(params, x, cfg, positions, enc_states,
+                            remat=remat, remat_group=remat_group)
+    return apply_norm(params["final_norm"], x, cfg), aux
+
+
+def forward(params: dict, tokens: Array, cfg: ModelConfig,
+            prefix_embeds: Optional[Array] = None,
+            enc_states: Optional[Array] = None,
+            remat: str = "none") -> tuple[Array, dict]:
+    """Causal LM forward. tokens (B, S) -> (logits (B, S_total, V), aux)."""
+    x, aux = hidden_states(params, tokens, cfg, prefix_embeds, enc_states,
+                           remat=remat)
+    return _logits(params, x, cfg), aux
+
+
+def _ce_chunk(params, x_chunk: Array, lab_chunk: Array, cfg: ModelConfig,
+              ce_dtype: str = "float32") -> tuple[Array, Array]:
+    """Sum-NLL + valid-count for one sequence chunk (vocab-sharded logits).
+
+    ce_dtype="bfloat16" keeps the materialised logits buffer in bf16 (halving
+    the CE HBM traffic of huge-vocab models); the logsumexp/NLL reductions
+    still accumulate in f32 (the converts fuse — nothing f32 materialises).
+    """
+    head = params["lm_head"] if "lm_head" in params else params["tok_embed"].T
+    xg = constrain(x_chunk, "batch", None, None)
+    logits = (xg @ head).astype(jnp.dtype(ce_dtype))
+    logits = constrain(logits, "batch", None, "model")
+    valid = (lab_chunk >= 0)
+    lab = jnp.where(valid, lab_chunk, 0)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    one_hot = jax.nn.one_hot(lab, logits.shape[-1], dtype=logits.dtype)
+    one_hot = constrain(one_hot, "batch", None, "model")
+    picked = jnp.einsum("bsv,bsv->bs", logits, one_hot,
+                        preferred_element_type=jnp.float32)
+    nll = lse - picked
+    return (jnp.sum(jnp.where(valid, nll, 0.0)),
+            jnp.sum(valid).astype(jnp.float32))
+
+
+def ce_loss(params: dict, x: Array, labels: Array, cfg: ModelConfig,
+            seq_chunk: int = 1024, ce_dtype: str = "float32") -> Array:
+    """Chunked cross-entropy: the (B, chunk, V) logits exist one chunk at
+    a time (forward AND backward — the chunk body is rematted), instead of a
+    (B, S, V) f32 buffer.  Falls back to one chunk for short sequences."""
+    s = labels.shape[1]
+    if s % seq_chunk != 0 or s <= seq_chunk:
+        tot, cnt = _ce_chunk(params, x, labels, cfg, ce_dtype)
+        return tot / jnp.maximum(cnt, 1.0)
+
+    body = jax.checkpoint(
+        lambda carry, xs: ((carry[0] + (r := _ce_chunk(params, xs[0], xs[1],
+                                                       cfg, ce_dtype))[0],
+                            carry[1] + r[1]), None),
+        prevent_cse=False)
+    n = s // seq_chunk
+    xs = x.reshape(x.shape[0], n, seq_chunk, -1).swapaxes(0, 1)
+    ls = labels.reshape(labels.shape[0], n, seq_chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xs, ls))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig,
+            remat: str = "none", remat_group: int = 1,
+            seq_chunk: int = 1024, ce_dtype: str = "float32"
+            ) -> tuple[Array, dict]:
+    """Next-token CE. batch: tokens (B,S), labels (B,S; <0 = ignore),
+    optional prefix_embeds / enc_states.  Returns (loss, metrics)."""
+    x, aux = hidden_states(params, batch["tokens"], cfg,
+                           prefix_embeds=batch.get("prefix_embeds"),
+                           enc_states=batch.get("enc_states"), remat=remat,
+                           remat_group=remat_group)
+    labels = batch["labels"]
+    if x.shape[1] != labels.shape[1]:            # VLM prefix positions
+        x = x[:, -labels.shape[1]:]
+    loss = ce_loss(params, x, labels, cfg, seq_chunk=seq_chunk,
+                   ce_dtype=ce_dtype)
+    metrics = {"ce_loss": loss, **aux}
+    if cfg.n_experts > 0:
+        loss = loss + 1e-2 * aux["load_balance_loss"]
+    return loss, metrics
+
+
+# ----- serving -----
+
+class Cache(NamedTuple):
+    blocks: tuple          # per pattern position, stacked over groups
+    tail: tuple            # per remainder layer
+    cross: Optional[tuple] # per pattern position (whisper)
+    cross_tail: Optional[tuple]
+    pos: Array             # next position (scalar int32)
+
+
+def _layer_cache_from_prefill(kind_cache, spec: LayerSpec, max_len: int,
+                              cache_dtype: str = "native"):
+    if isinstance(kind_cache, attn.KVCache):
+        c = attn.prefill_cache(kind_cache, spec)
+        c = attn.grow_cache(c, spec, max_len)
+        if cache_dtype == "int8":
+            c = attn.quantize_kv(c)
+        return c
+    return kind_cache  # Mamba/RGLRU states are already O(1)
+
+
+def apply_block_prefill(p: dict, x: Array, cfg: ModelConfig, spec: LayerSpec,
+                        positions: Array, max_len: int,
+                        enc_states: Optional[Array] = None,
+                        cache_dtype: str = "native"):
+    """Like apply_block but returns the decode-layout cache (+cross KV)."""
+    h = apply_norm(p["ln1"], x, cfg)
+    cross_kv = None
+    if spec.kind == "attn":
+        mix, kvc = attn.self_attention(p["attn"], h, positions, cfg, spec)
+        cache = _layer_cache_from_prefill(kvc, spec, max_len, cache_dtype)
+    elif spec.kind == "mamba":
+        mix, cache = ssm_mod.mamba_forward(p["mamba"], h, cfg)
+    else:
+        mix, cache = rglru_mod.rglru_forward(p["rglru"], h, cfg)
+    x = x + mix
+    if spec.cross_attn and enc_states is not None:
+        hc = apply_norm(p["lnc"], x, cfg)
+        cross_kv = attn.encode_cross_kv(p["cross"], enc_states, cfg)
+        x = x + attn.cross_attention(p["cross"], hc, cross_kv.k, cross_kv.v, cfg)
+    if "mlp" in p or "moe" in p:
+        h2 = apply_norm(p["ln2"], x, cfg)
+        if "moe" in p:
+            y, _ = moe_mod.apply_moe(p["moe"], h2, cfg)
+        else:
+            y = apply_mlp(p["mlp"], h2, cfg)
+        x = x + y
+    return x, cache, cross_kv
+
+
+def prefill(params: dict, tokens: Array, cfg: ModelConfig, max_len: int,
+            prefix_embeds: Optional[Array] = None,
+            enc_states: Optional[Array] = None,
+            cache_dtype: str = "native") -> tuple[Array, Cache]:
+    """Process the prompt; returns (last-token logits (B,V), decode Cache).
+
+    cache_dtype="int8" quantises the attention KV caches (per-slot, per-head
+    scales) — the §Perf serving-memory optimization."""
+    s = tokens.shape[1]
+    prefix = 0 if prefix_embeds is None else prefix_embeds.shape[1]
+    positions = jnp.arange(prefix + s)
+    x = _embed(params, tokens, cfg, positions[prefix:])
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+
+    def one_group(x, gp):
+        caches, crosses = [], []
+        for pos, spec in enumerate(cfg.pattern):
+            x, c, ckv = apply_block_prefill(gp[pos], x, cfg, spec, positions,
+                                            max_len, enc_states, cache_dtype)
+            caches.append(c)
+            crosses.append(ckv)
+        return x, (tuple(caches), tuple(crosses))
+
+    block_caches, cross_caches = (), ()
+    if cfg.n_groups > 0:
+        x, (block_caches, cross_caches) = jax.lax.scan(
+            one_group, x, params["blocks"])
+    tail_caches, tail_cross = [], []
+    for i in range(cfg.n_remainder):
+        x, c, ckv = apply_block_prefill(params["tail"][i], x, cfg,
+                                        cfg.pattern[i], positions, max_len,
+                                        enc_states, cache_dtype)
+        tail_caches.append(c)
+        tail_cross.append(ckv)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _logits(params, x[:, -1:], cfg)[:, 0]
+    has_cross = any(sp.cross_attn for sp in cfg.pattern) and enc_states is not None
+    cache = Cache(
+        blocks=block_caches,
+        tail=tuple(tail_caches),
+        cross=cross_caches if has_cross else None,
+        cross_tail=tuple(tail_cross) if has_cross else None,
+        pos=jnp.asarray(prefix + s, jnp.int32),
+    )
+    return logits, cache
+
+
+def apply_block_decode(p: dict, x1: Array, cache, cross_kv, pos: Array,
+                       cfg: ModelConfig, spec: LayerSpec):
+    h = apply_norm(p["ln1"], x1, cfg)
+    if spec.kind == "attn":
+        mix, cache = attn.self_attention_decode(p["attn"], h, cache, pos,
+                                                cfg, spec)
+    elif spec.kind == "mamba":
+        mix, cache = ssm_mod.mamba_step(p["mamba"], h, cache, cfg)
+    else:
+        mix, cache = rglru_mod.rglru_step(p["rglru"], h, cache, cfg)
+    x1 = x1 + mix
+    if spec.cross_attn and cross_kv is not None:
+        hc = apply_norm(p["lnc"], x1, cfg)
+        x1 = x1 + attn.cross_attention_decode(p["cross"], hc, cross_kv, cfg)
+    if "mlp" in p or "moe" in p:
+        h2 = apply_norm(p["ln2"], x1, cfg)
+        if "moe" in p:
+            y, _ = moe_mod.apply_moe(p["moe"], h2, cfg)
+        else:
+            y = apply_mlp(p["mlp"], h2, cfg)
+        x1 = x1 + y
+    return x1, cache
+
+
+def decode_step(params: dict, cache: Cache, token: Array, cfg: ModelConfig
+                ) -> tuple[Array, Cache]:
+    """One AR step. token (B,) int32 -> (logits (B, V), updated cache)."""
+    pos = cache.pos
+    x = params["tok_embed"][token][:, None, :]            # (B,1,E)
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][pos][None, None]
+    x = constrain(x, "batch", None, None)
+
+    def one_group(x, xs):
+        gp, gcache, gcross = xs
+        new_caches = []
+        for i, spec in enumerate(cfg.pattern):
+            ckv = gcross[i] if gcross is not None else None
+            x, c = apply_block_decode(gp[i], x, gcache[i], ckv, pos, cfg, spec)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    new_blocks = cache.blocks
+    if cfg.n_groups > 0:
+        cross_xs = cache.cross if cache.cross is not None \
+            else tuple(None for _ in cfg.pattern)
+        x, new_blocks = jax.lax.scan(
+            one_group, x, (params["blocks"], cache.blocks, cross_xs))
+    new_tail = []
+    for i in range(cfg.n_remainder):
+        ckv = cache.cross_tail[i] if cache.cross_tail is not None else None
+        x, c = apply_block_decode(params["tail"][i], x, cache.tail[i], ckv,
+                                  pos, cfg, cfg.pattern[i])
+        new_tail.append(c)
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _logits(params, x, cfg)[:, 0]
+    new_cache = Cache(blocks=new_blocks, tail=tuple(new_tail),
+                      cross=cache.cross, cross_tail=cache.cross_tail,
+                      pos=pos + 1)
+    return logits, new_cache
+
+
+# ----- diffusion-LM mode (the paper's serving path) -----
+
+def denoise(params: dict, x_sigma: Array, sigma: Array, cfg: ModelConfig
+            ) -> Array:
+    """Raw denoiser F(x; sigma): x (B,S,E), sigma (B,) -> (B,S,E).
+
+    EDM preconditioning (c_in/c_skip/c_out) lives in diffusion/edm.py; PAS
+    consumes the resulting eps via repro.diffusion.lm_eps_fn.
+    """
+    if "diffusion" not in params:
+        raise ValueError("init_params(..., with_diffusion_head=True) required")
+    pd = params["diffusion"]
+    t_cond = apply_film_cond(pd, sigma, cfg)
+    x = x_sigma.astype(jnp.dtype(cfg.dtype)) @ pd["head_in"]
+    x = constrain(x, "batch", "seq", None)
+    positions = jnp.arange(x.shape[1])
+    x, _ = _stack_forward(params, x, cfg, positions, t_cond=t_cond)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x @ pd["head_out"]

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts FFN: top-k routing with grouped, sort-based capacity
+dispatch.
+
+Routing groups: tokens are routed *per sequence* (leading batch dim), so the
+argsort/bincount stay local to a data shard — a single global sort would force
+XLA to all-gather every token (catastrophic at 1M tokens; observed 80+ GiB
+per device before this formulation).  The dense (G, n_exp, capacity, E)
+dispatch buffer is the production TPU pattern: batch groups shard over DP,
+experts over the EP axis (all-to-all inserted by GSPMD at the group->expert
+transpose); when n_experts doesn't divide the EP axis (mixtral's 8 on a
+16-way axis) the capacity dim takes the axis instead (token-parallel experts).
+
+FLOPs scale with top_k * capacity_factor, not n_experts.  Aux outputs:
+Switch-style load-balance loss + dropped-token fraction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel import constrain
+
+from .layers import dense_init
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    e, f, n = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], e, (e, n), jnp.float32),
+        "experts": {
+            "w1": dense_init(ks[1], e, (n, e, f), dt),
+            "w2": dense_init(ks[2], f, (n, f, e), dt),
+        },
+    }
+    if gated:
+        p["experts"]["w3"] = dense_init(ks[3], e, (n, e, f), dt)
+    if cfg.shared_expert:
+        from .layers import init_mlp
+        p["shared"] = init_mlp(ks[4], cfg)
+    return p
+
+
+def _expert_ffn(pe: dict, xb: Array, cfg: ModelConfig) -> Array:
+    """xb (G, n_exp, cap, E) -> same, via batched expert matmuls."""
+    h = jnp.einsum("gxcd,xdf->gxcf", xb, pe["w1"].astype(xb.dtype))
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("gxcd,xdf->gxcf", xb,
+                                        pe["w3"].astype(xb.dtype))
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(h, approximate=True) * jnp.einsum(
+            "gxcd,xdf->gxcf", xb, pe["w3"].astype(xb.dtype))
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    h = constrain(h, "batch", "expert", "model", None)
+    return jnp.einsum("gxcf,xfd->gxcd", h, pe["w2"].astype(xb.dtype))
+
+
+def _route_group(xg: Array, router: Array, n: int, k: int, capacity: int):
+    """One routing group (t, E): returns dispatch indices + gates (all local)."""
+    t = xg.shape[0]
+    logits = xg.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                 # (t, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+    flat_expert = idx.reshape(-1)                       # (t*k,)
+    order = jnp.argsort(flat_expert)
+    sorted_expert = flat_expert[order]
+    counts = jnp.bincount(flat_expert, length=n)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k) - starts[sorted_expert]
+    keep = rank < capacity
+    token_of = order // k
+    slot = jnp.where(keep, rank, 0)
+    return sorted_expert, slot, keep, token_of, gate.reshape(-1)[order], probs, idx
+
+
+def apply_moe(p: dict, x: Array, cfg: ModelConfig) -> tuple[Array, dict]:
+    """x (B, S, E) -> (y (B, S, E), aux metrics)."""
+    b, s, e = x.shape
+    n, k = cfg.n_experts, cfg.moe_top_k
+    # group per sequence when sequences are long enough to fill experts;
+    # tiny-token calls (decode: S == 1) route as a single group
+    if s >= 4 * n:
+        g, t = b, s
+    else:
+        g, t = 1, b * s
+    xg = x.reshape(g, t, e)
+
+    capacity = int(max(1, round(cfg.capacity_factor * t * k / n)))
+    capacity = -(-capacity // 8) * 8
+
+    sorted_e, slot, keep, token_of, gate_s, probs, idx = jax.vmap(
+        lambda xx: _route_group(xx, p["router"], n, k, capacity))(xg)
+
+    def scatter_raw(xg_i, se, sl, kp, tok):
+        buf = jnp.zeros((n, capacity, e), x.dtype)
+        return buf.at[se, sl].add(jnp.where(kp[:, None], xg_i[tok], 0))
+
+    buf = jax.vmap(scatter_raw)(xg, sorted_e, slot, keep, token_of)
+    buf = constrain(buf, "batch", "expert", "model", None)
+
+    yb = _expert_ffn(p["experts"], buf, cfg)            # (G, n, cap, E)
+    yb = constrain(yb, "batch", "expert", "model", None)
+
+    def combine_group(yb_i, se, sl, kp, tok, gs):
+        y_tok = yb_i[se, sl] * jnp.where(kp, gs, 0.0)[:, None].astype(x.dtype)
+        return jnp.zeros((t, e), x.dtype).at[tok].add(y_tok)
+
+    y = jax.vmap(combine_group)(yb, sorted_e, slot, keep, token_of, gate_s)
+    y = y.reshape(b, s, e)
+
+    if cfg.shared_expert:
+        from .layers import apply_mlp
+        y = y + apply_mlp(p["shared"], x, cfg)
+
+    # Switch-style load-balance loss + drop fraction (monitoring / training)
+    probs_flat = probs.reshape(-1, n)
+    me = jnp.mean(probs_flat, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0].reshape(-1), n), axis=0)
+    aux = {
+        "load_balance_loss": n * jnp.sum(me * ce),
+        "dropped_fraction": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return y, aux

@@ -1,0 +1,98 @@
+"""RG-LRU temporal-mixing block (Griffin / recurrentgemma).
+
+Block: in-branch linear -> causal conv(4) -> RG-LRU recurrence; gate branch
+linear -> gelu; merged = rglru_out * gate -> out projection.
+
+RG-LRU recurrence (per channel, c = 8):
+    i_t = sigmoid(x_t W_in)            input gate
+    r_t = sigmoid(x_t W_rec)           recurrence gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Linear in h -> associative scan over time; O(1) decode state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel import constrain
+
+from .layers import dense_init, zeros
+from .ssm import _conv_scan
+
+Array = jax.Array
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: Array      # (B, W) float32 recurrent state
+    conv: Array   # (B, conv_width-1, W)
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    e, w = cfg.d_model, cfg.lru_width_
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    # Lambda init so a ~ Uniform(0.9, 0.999)^c at r=1 (griffin appendix)
+    u = jax.random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "in_proj": dense_init(ks[0], e, (e, w), dt),
+        "gate_proj": dense_init(ks[1], e, (e, w), dt),
+        "conv_w": dense_init(ks[2], cfg.conv_width, (w, cfg.conv_width), dt),
+        "conv_b": zeros((w,), dt),
+        "lru_in_gate": dense_init(ks[3], w, (w, w), dt),
+        "lru_rec_gate": dense_init(ks[4], w, (w, w), dt),
+        "lru_a": lam,
+        "out_proj": dense_init(ks[0], w, (w, e), dt),
+    }
+
+
+def _gates(p: dict, xc: Array) -> tuple[Array, Array]:
+    i = jax.nn.sigmoid(xc @ p["lru_in_gate"])
+    r = jax.nn.sigmoid(xc @ p["lru_rec_gate"])
+    a = jnp.exp(-_C * jax.nn.softplus(p["lru_a"]).astype(jnp.float32)
+                * r.astype(jnp.float32))
+    return i, a
+
+
+def rglru_forward(p: dict, x: Array, cfg: ModelConfig
+                  ) -> tuple[Array, RGLRUState]:
+    """x (B, L, E) -> (out (B, L, E), final state)."""
+    xs = x @ p["in_proj"]
+    xs = constrain(xs, "batch", None, "model")
+    gate = jax.nn.gelu(x @ p["gate_proj"], approximate=True)
+    xc = _conv_scan(xs, p["conv_w"], p["conv_b"], tail=None)
+    i, a = _gates(p, xc)
+    drive = (jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12))
+             * (i * xc).astype(jnp.float32))
+
+    def combine(u, v):
+        au, bu = u
+        av, bv = v
+        return au * av, bu * av + bv
+
+    _, h = jax.lax.associative_scan(combine, (a, drive), axis=1)
+    y = (h.astype(x.dtype) * gate) @ p["out_proj"]
+    kc = cfg.conv_width - 1
+    tail = jax.lax.dynamic_slice_in_dim(xs, xs.shape[1] - kc, kc, axis=1)
+    return y, RGLRUState(h=h[:, -1], conv=tail.astype(jnp.float32))
+
+
+def rglru_step(p: dict, x1: Array, state: RGLRUState, cfg: ModelConfig
+               ) -> tuple[Array, RGLRUState]:
+    """Single-token decode. x1 (B, 1, E)."""
+    xs = x1 @ p["in_proj"]                               # (B,1,W)
+    gate = jax.nn.gelu(x1 @ p["gate_proj"], approximate=True)
+    window = jnp.concatenate([state.conv.astype(xs.dtype), xs], axis=1)
+    xc = (jnp.einsum("bkw,wk->bw", window, p["conv_w"]) + p["conv_b"])[:, None]
+    i, a = _gates(p, xc)
+    drive = (jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12))
+             * (i * xc).astype(jnp.float32))[:, 0]
+    h = a[:, 0] * state.h + drive
+    y = (h[:, None].astype(x1.dtype) * gate) @ p["out_proj"]
+    return y, RGLRUState(h=h, conv=window[:, 1:].astype(jnp.float32))

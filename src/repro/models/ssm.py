@@ -1,0 +1,107 @@
+"""Mamba-1 block (falcon-mamba): depthwise causal conv + selective scan.
+
+The block has no separate MLP (d_ff == 0): norm -> mamba -> residual.
+Prefill returns the recurrent state + conv tail so decode continues exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.parallel import constrain
+
+from .layers import dense_init, zeros
+
+Array = jax.Array
+
+
+class MambaState(NamedTuple):
+    h: Array           # (B, Di, N) float32 SSM state
+    conv: Array        # (B, d_conv-1, Di) trailing pre-conv inputs
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    e, di, n, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A; dt bias ~ softplus^-1 of [1e-3, 1e-1]
+    a_init = jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                      (di, n)))
+    u = jax.random.uniform(ks[5], (di,), minval=1e-3, maxval=1e-1)
+    dt_bias = jnp.log(jnp.expm1(u))
+    return {
+        "in_proj": dense_init(ks[0], e, (e, 2 * di), dt),
+        "conv_w": dense_init(ks[1], cfg.d_conv, (di, cfg.d_conv), dt),
+        "conv_b": zeros((di,), dt),
+        "x_proj": dense_init(ks[2], di, (di, r + 2 * n), dt),
+        "dt_proj": dense_init(ks[3], r, (r, di), dt),
+        "dt_bias": dt_bias,
+        "a_log": a_init,
+        "skip_d": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, (di, e), dt),
+    }
+
+
+def _conv_scan(xs: Array, w: Array, b: Array, tail: Array | None) -> Array:
+    """Depthwise causal conv1d. xs (B, L, Di), w (Di, K) -> (B, L, Di)."""
+    k = w.shape[-1]
+    if tail is None:
+        pad = jnp.zeros((xs.shape[0], k - 1, xs.shape[2]), xs.dtype)
+    else:
+        pad = tail.astype(xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)  # (B, L+K-1, Di)
+    out = sum(xp[:, i:i + xs.shape[1]] * w[:, i] for i in range(k))
+    return out + b
+
+
+def _ssm_inputs(p: dict, xc: Array, cfg: ModelConfig):
+    n, r = cfg.ssm_state, cfg.dt_rank_
+    xdb = xc @ p["x_proj"]
+    dt_r, bmat, cmat = jnp.split(xdb, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(dt_r @ p["dt_proj"]
+                            + p["dt_bias"].astype(dt_r.dtype))
+    a = -jnp.exp(p["a_log"])
+    return delta, a, bmat, cmat
+
+
+def mamba_forward(p: dict, x: Array, cfg: ModelConfig
+                  ) -> tuple[Array, MambaState]:
+    """x (B, L, E) -> (out (B, L, E), final MambaState)."""
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "batch", None, "model")
+    xc = jax.nn.silu(_conv_scan(xs, p["conv_w"], p["conv_b"], tail=None))
+    delta, a, bmat, cmat = _ssm_inputs(p, xc, cfg)
+    y, h_last = ops.ssm_scan(xc, delta, a, bmat, cmat, d=p["skip_d"])
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    kc = cfg.d_conv - 1
+    tail = jax.lax.dynamic_slice_in_dim(xs, xs.shape[1] - kc, kc, axis=1)
+    return out, MambaState(h=h_last, conv=tail.astype(jnp.float32))
+
+
+def mamba_step(p: dict, x1: Array, state: MambaState, cfg: ModelConfig
+               ) -> tuple[Array, MambaState]:
+    """Single-token decode. x1 (B, 1, E)."""
+    xz = x1 @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                   # (B,1,Di)
+    window = jnp.concatenate([state.conv.astype(xs.dtype), xs], axis=1)
+    xc = jnp.einsum("bkd,dk->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None]                        # (B,1,Di)
+    delta, a, bmat, cmat = _ssm_inputs(p, xc, cfg)
+    decay = jnp.exp(delta[:, 0, :, None].astype(jnp.float32)
+                    * a[None].astype(jnp.float32))       # (B,Di,N)
+    drive = (delta[:, 0, :, None] * bmat[:, 0, None, :]
+             * xc[:, 0, :, None]).astype(jnp.float32)
+    h = decay * state.h + drive
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32))
+    y = y + p["skip_d"] * xc[:, 0].astype(jnp.float32)
+    y = (y.astype(x1.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    out = y @ p["out_proj"]
+    new_conv = window[:, 1:].astype(jnp.float32)
+    return out, MambaState(h=h, conv=new_conv)

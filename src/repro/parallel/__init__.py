@@ -1,0 +1,5 @@
+from .sharding import (AxisRules, axis_rules, constrain, current_rules,
+                       param_partition_specs, spec_for)
+
+__all__ = ["AxisRules", "axis_rules", "constrain", "current_rules",
+           "param_partition_specs", "spec_for"]

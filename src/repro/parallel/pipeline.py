@@ -1,0 +1,79 @@
+"""GPipe-style pipeline parallelism via shard_map + collective_permute.
+
+Layers are split into S stages along a "stage" mesh axis; microbatches flow
+through the classic (S + M - 1)-tick schedule: each tick every stage applies
+its layer block to the activation it holds, then activations rotate one stage
+forward with a single collective_permute.  Bubble fraction = (S-1)/(S+M-1).
+
+Opt-in (parallel/pipeline is not used by the default 40-cell dry-run config —
+scan-over-layers + FSDP is the default production layout; see DESIGN.md §5),
+but fully functional and tested (tests/test_pipeline.py, 4 virtual devices).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = ["pipeline_apply"]
+
+
+def pipeline_apply(mesh: Mesh, stage_fn: Callable, stage_params,
+                   x_microbatches: jax.Array, axis: str = "stage") -> jax.Array:
+    """Run M microbatches through S pipeline stages.
+
+    stage_fn(params_slice, x) -> x        (one stage's computation)
+    stage_params: pytree with leading axis S (one slice per stage)
+    x_microbatches: (M, mb, ...) microbatched input
+    Returns (M, mb, ...) outputs, in order.
+    """
+    s = mesh.shape[axis]
+    m = x_microbatches.shape[0]
+    if m < 1:
+        raise ValueError("need at least one microbatch")
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(axis), P(None)),       # params sharded by stage; x replicated
+        out_specs=P(None),
+    )
+    def run(params_local, xs):
+        params_local = jax.tree.map(lambda t: t[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        n_ticks = s + m - 1
+        fwd_perm = [(i, (i + 1) % s) for i in range(s)]
+
+        xs = jax.lax.pvary(xs, (axis,))    # device-varying from the start
+        buf = jnp.zeros_like(xs[0])        # activation currently held
+        outs = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, outs = carry
+            # stage 0 injects microbatch t (if any remain)
+            inject = jnp.where(t < m, t, m - 1)
+            buf = jnp.where(stage == 0,
+                            jnp.where(t < m, xs[inject], buf), buf)
+            live = jnp.logical_and(stage <= t, t - stage < m)
+            y = stage_fn(params_local, buf)
+            buf = jnp.where(live, y, buf)
+            # last stage emits its finished microbatch (select, not cond —
+            # shard_map tracks device-varyingness through both branches)
+            emit_idx = jnp.clip(t - (s - 1), 0, m - 1)
+            is_emit = jnp.logical_and(stage == s - 1, t >= s - 1)
+            emitted = jax.lax.dynamic_update_slice_in_dim(
+                outs, buf[None], emit_idx, axis=0)
+            outs = jnp.where(is_emit, emitted, outs)
+            # rotate activations forward one stage
+            buf = jax.lax.ppermute(buf, axis, fwd_perm)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, n_ticks, tick, (buf, outs))
+        # outputs live on the last stage; share them with every stage
+        outs = jax.lax.psum(
+            jnp.where(stage == s - 1, outs, jnp.zeros_like(outs)), axis)
+        return outs
+
+    return run(stage_params, x_microbatches)

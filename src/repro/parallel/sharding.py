@@ -1,0 +1,173 @@
+"""Logical-axis sharding rules (DP/FSDP/TP/EP/SP) for the model zoo.
+
+Models annotate activations with *logical* axis names ("batch", "seq",
+"model_dim", "heads", "ff", "experts", "vocab"); AxisRules maps them to
+physical mesh axes.  Parameters get PartitionSpecs from their *role* (the
+dict key path in the params pytree) — right-aligned, so scan-stacked leaves
+(leading n_groups axis) shard their trailing matrix dims and replicate the
+group axis.
+
+Divisibility: a logical rule is applied only if the mapped mesh-axis product
+divides the dimension; otherwise that dim falls back to replication (e.g.
+kv_heads=1 MQA under 16-way TP -> KV replicated, Q sharded).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["AxisRules", "axis_rules", "current_rules", "constrain",
+           "spec_for", "param_partition_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Logical -> physical axis mapping + the mesh (for divisibility checks)."""
+
+    mesh: jax.sharding.Mesh
+    batch: tuple[str, ...] = ("pod", "data")   # DP axes
+    model: tuple[str, ...] = ("model",)        # TP axes
+    fsdp: tuple[str, ...] = ()                 # weight-shard axes (ZeRO-3)
+    seq: tuple[str, ...] = ()                  # sequence-parallel axes
+    expert: tuple[str, ...] = ("model",)       # EP axes
+
+    def axes_size(self, axes: tuple[str, ...]) -> int:
+        size = 1
+        for a in axes:
+            if a in self.mesh.shape:
+                size *= self.mesh.shape[a]
+        return size
+
+    def physical(self, logical: Optional[str]) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        table = {
+            "batch": self.batch, "model": self.model, "fsdp": self.fsdp,
+            "seq": self.seq, "expert": self.expert,
+        }
+        return tuple(a for a in table.get(logical, ()) if a in self.mesh.shape)
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[AxisRules]):
+    prev = current_rules()
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def _dim_spec(rules: AxisRules, logical: Optional[str], size: int):
+    axes = rules.physical(logical)
+    if not axes:
+        return None
+    n = rules.axes_size(axes)
+    if n <= 1 or size % n != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_for(shape: tuple[int, ...], logical: tuple[Optional[str], ...],
+             rules: Optional[AxisRules] = None) -> P:
+    """PartitionSpec for `shape` given right-aligned logical dim names.
+
+    A mesh axis may appear at most once per spec; when two logical dims map
+    to the same physical axis (e.g. SP seq->model and vocab->model on logits)
+    the earlier dim wins and later dims replicate.
+    """
+    rules = rules or current_rules()
+    if rules is None:
+        return P()
+    logical = (None,) * (len(shape) - len(logical)) + tuple(logical)
+    used: set[str] = set()
+    dims = []
+    for s, l in zip(shape, logical):
+        d = _dim_spec(rules, l, s)
+        axes = (d,) if isinstance(d, str) else tuple(d or ())
+        if d is not None and any(a in used for a in axes):
+            d = None
+            axes = ()
+        used.update(axes)
+        dims.append(d)
+    return P(*dims)
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint using logical names; no-op without rules."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = spec_for(x.shape, logical, rules)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter partition specs by role
+# ---------------------------------------------------------------------------
+
+# role patterns matched against the '/'-joined params path (right-aligned
+# logical names for the trailing dims; leading scan-group dims replicate).
+# (fsdp, model) 2-D sharding for the big matrices is the MaxText-style layout.
+_PARAM_RULES: list[tuple[str, tuple[Optional[str], ...]]] = [
+    (r"tok_embed$",        ("model", "fsdp")),     # (V, E): vocab-TP
+    (r"pos_embed$",        (None, None)),
+    (r"lm_head$",          ("fsdp", "model")),     # (E, V)
+    (r"(wq|wk|wv)$",       ("fsdp", "model")),     # (E, H*Dh)
+    (r"(bq|bk|bv)$",       ("model",)),
+    (r"wo$",               ("model", "fsdp")),     # (H*Dh, E)
+    (r"router$",           (None, None)),          # (E, n_exp) tiny, replicate
+    (r"experts/(w1|w3)$",  ("expert", "fsdp", "model")),  # (n_exp, E, F)
+    (r"experts/w2$",       ("expert", "model", "fsdp")),  # (n_exp, F, E)
+    (r"(w1|w3)$",          ("fsdp", "model")),     # (E, F)
+    (r"w2$",               ("model", "fsdp")),     # (F, E)
+    (r"in_proj$",          ("fsdp", "model")),     # mamba/rglru (E, W)
+    (r"gate_proj$",        ("fsdp", "model")),
+    (r"out_proj$",         ("model", "fsdp")),     # (W, E)
+    (r"conv_w$",           ("model", None)),       # (W, k)
+    (r"conv_b$",           ("model",)),
+    (r"x_proj$",           ("model", None)),       # (Di, r+2N)
+    (r"dt_proj$",          (None, "model")),       # (r, Di)
+    (r"dt_bias$",          ("model",)),
+    (r"a_log$",            ("model", None)),       # (Di, N)
+    (r"skip_d$",           ("model",)),
+    (r"lru_a$",            ("model",)),            # (W,)
+    (r"(lru_in_gate|lru_rec_gate)$", ("model", None)),
+    (r"(scale|bias)$",     (None,)),               # norms: replicate
+    (r".*",                (None,)),               # default: replicate
+]
+
+
+def _role_logical(path: str, ndim: int) -> tuple[Optional[str], ...]:
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            return logical
+    return (None,)
+
+
+def param_partition_specs(params, rules: Optional[AxisRules] = None):
+    """PartitionSpec pytree for a params pytree (works on ShapeDtypeStructs)."""
+    rules = rules or current_rules()
+
+    def one(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        pstr = "/".join(str(k) for k in keys)
+        return spec_for(leaf.shape, _role_logical(pstr, leaf.ndim), rules)
+
+    return jax.tree_util.tree_map_with_path(one, params)

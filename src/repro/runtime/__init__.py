@@ -1,0 +1,5 @@
+from .serve_loop import DiffusionServer, Request, ServeConfig
+from .train_loop import StragglerMonitor, TrainLoopConfig, run_train_loop
+
+__all__ = ["DiffusionServer", "Request", "ServeConfig", "StragglerMonitor",
+           "TrainLoopConfig", "run_train_loop"]

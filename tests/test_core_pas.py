@@ -1,0 +1,138 @@
+"""End-to-end PAS validation against the paper's claims (on the analytic oracle).
+
+These are the paper's core mechanism claims:
+  * trajectories live in a ~3-D subspace (Fig. 2a),
+  * truncation error is S-shaped (Fig. 3a),
+  * PAS reduces truncation + final error (Tables 2/11 directionally),
+  * adaptive search selects only a few steps (~10 params, Table 1/6),
+  * correction never makes things worse (tolerance gate).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analytic, pas, pca, schedules, solvers
+
+DIM = 64
+NFE = 10
+T_MAX, T_MIN = 80.0, 0.002
+
+
+@pytest.fixture(scope="module")
+def setup():
+    gmm = analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+    s_ts, t_ts, m = schedules.nested_teacher_schedule(NFE, 100, T_MIN, T_MAX)
+    key = jax.random.key(0)
+    x_t = gmm.sample_prior(key, 256, T_MAX)
+    gt = solvers.ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_t)
+    return gmm, s_ts, x_t, gt
+
+
+def test_trajectory_low_dimensional(setup):
+    """Paper Fig. 2a: [x_T, d_N..d_1] has >=99.9% variance in 3 PCs."""
+    gmm, s_ts, x_t, gt = setup
+    sol = solvers.make_solver("euler", schedules.polynomial_schedule(100, T_MIN, T_MAX))
+    xs, ds = solvers.sample_trajectory(sol, gmm.eps, x_t[:8])
+    for b in range(4):
+        traj = jnp.concatenate([x_t[b][None], ds[:, b, :]], axis=0)
+        cv = np.asarray(pca.cumulative_variance(traj, center=False))
+        assert cv[2] > 0.995, cv[:5]
+
+
+def test_truncation_error_s_shape(setup):
+    """Paper Fig. 3a: slow growth, fast growth, then slow growth again."""
+    gmm, s_ts, x_t, gt = setup
+    sol = solvers.make_solver("euler", s_ts)
+    xs, _ = solvers.sample_trajectory(sol, gmm.eps, x_t)
+    err = np.asarray(pas.truncation_error_curve(xs, gt))
+    assert err[0] == 0.0
+    total = err[-1] - err[0]
+    # middle portion of the step range contributes the bulk of the error growth
+    third = NFE // 3
+    mid_growth = err[2 * third] - err[third]
+    assert mid_growth > 0.45 * total, err
+    # and error growth decelerates at the end (returns to slow growth)
+    end_growth = err[-1] - err[-2]
+    peak_growth = np.max(np.diff(err))
+    assert end_growth < 0.6 * peak_growth, err
+
+
+def _held_out(gmm, s_ts, nfe):
+    key = jax.random.key(99)
+    x_eval = gmm.sample_prior(key, 256, T_MAX)
+    _, t_ts, m = schedules.nested_teacher_schedule(nfe, 100, T_MIN, T_MAX)
+    gt_eval = solvers.ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_eval)
+    return x_eval, gt_eval
+
+
+@pytest.mark.parametrize("solver_name,nfe,max_ratio,must_correct", [
+    ("ddim", 10, 0.30, True),    # paper Table 2: large DDIM gains
+    ("ddim", 5, 0.30, True),
+    ("ipndm3", 5, 0.80, True),   # paper Table 11: modest iPNDM gains at low NFE
+    ("ipndm3", 10, 1.02, False), # paper Table 11: L2 gains vanish at NFE 10 —
+                                 # final gate must make PAS a no-op, not a loss
+])
+def test_pas_improves_solver(solver_name, nfe, max_ratio, must_correct):
+    """PAS cuts final L2-to-teacher error on held-out samples (Tables 2/11)."""
+    gmm = analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+    s_ts, t_ts, m = schedules.nested_teacher_schedule(nfe, 100, T_MIN, T_MAX)
+    x_t = gmm.sample_prior(jax.random.key(0), 512, T_MAX)
+    gt = solvers.ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_t)
+    sol = solvers.make_solver(solver_name, s_ts)
+    cfg = pas.PASConfig(lr=1e-2, n_sgd_iters=300, tolerance=1e-4, loss="l1",
+                        val_fraction=0.25, final_gate=True)
+    params, diag = pas.calibrate(sol, gmm.eps, x_t, gt, cfg)
+
+    x_eval, gt_eval = _held_out(gmm, s_ts, nfe)
+    x_plain = solvers.sample(sol, gmm.eps, x_eval)
+    x_corr, _ = pas.pas_sample_trajectory(sol, gmm.eps, x_eval, params, cfg)
+    e_plain = float(jnp.mean(jnp.linalg.norm(x_plain - gt_eval[-1], axis=-1)))
+    e_corr = float(jnp.mean(jnp.linalg.norm(x_corr - gt_eval[-1], axis=-1)))
+    if must_correct:
+        assert params.active.any(), "adaptive search selected no steps"
+    assert e_corr < e_plain * max_ratio, (solver_name, e_plain, e_corr, diag)
+
+
+def test_adaptive_search_selects_few_steps(setup):
+    """~10 parameters: only a small subset of steps gets corrected."""
+    gmm, s_ts, x_t, gt = setup
+    sol = solvers.make_solver("ddim", s_ts)
+    cfg = pas.PASConfig(lr=1e-2, n_sgd_iters=200, tolerance=1e-2, loss="l1")
+    params, diag = pas.calibrate(sol, gmm.eps, x_t, gt, cfg)
+    n_corr = int(params.active.sum())
+    assert 1 <= n_corr <= 6, diag
+    assert params.n_stored_params == n_corr * 4
+    steps = params.corrected_paper_steps()
+    assert all(1 <= i <= NFE for i in steps)
+
+
+def test_huge_tolerance_disables_correction(setup):
+    """Paper Table 8 (tau=1e-1 row): with a huge tolerance PAS is a no-op."""
+    gmm, s_ts, x_t, gt = setup
+    sol = solvers.make_solver("ddim", s_ts)
+    cfg = pas.PASConfig(lr=1e-2, n_sgd_iters=50, tolerance=1e9)
+    params, _ = pas.calibrate(sol, gmm.eps, x_t, gt, cfg)
+    assert not params.active.any()
+    x_corr = pas.pas_sample(sol, gmm.eps, x_t, params, cfg)
+    x_plain = solvers.sample(sol, gmm.eps, x_t)
+    # scan vs unrolled execution differ by float32 accumulation noise only
+    np.testing.assert_allclose(np.asarray(x_corr), np.asarray(x_plain),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pas_never_hurts_on_calibration_set(setup):
+    gmm, s_ts, x_t, gt = setup
+    sol = solvers.make_solver("ddim", s_ts)
+    cfg = pas.PASConfig(lr=1e-2, n_sgd_iters=200, tolerance=1e-4)
+    params, diag = pas.calibrate(sol, gmm.eps, x_t, gt, cfg)
+    assert diag["final_l2_to_gt"] <= diag["loss_before"][-1] + 1e-6
+
+
+@pytest.mark.parametrize("loss", ["l1", "l2", "pseudo_huber"])
+def test_loss_functions_all_work(setup, loss):
+    gmm, s_ts, x_t, gt = setup
+    sol = solvers.make_solver("ddim", s_ts)
+    cfg = pas.PASConfig(lr=1e-2, n_sgd_iters=100, loss=loss)
+    params, diag = pas.calibrate(sol, gmm.eps, x_t[:64], gt[:, :64], cfg)
+    assert np.isfinite(diag["final_l2_to_gt"])

@@ -1,0 +1,107 @@
+"""PCA/Gram-trick/Schmidt correctness, incl. property-based tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pca
+
+
+def test_topk_matches_numpy_svd():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(6, 97)).astype(np.float32)
+    v = np.asarray(pca.topk_right_singular(jnp.asarray(x), 3))
+    _, s_np, vt_np = np.linalg.svd(x, full_matrices=False)
+    for j in range(3):
+        # right singular vectors defined up to sign
+        dot = abs(float(np.dot(v[j], vt_np[j])))
+        np.testing.assert_allclose(dot, 1.0, atol=1e-3)
+        np.testing.assert_allclose(np.linalg.norm(v[j]), 1.0, atol=1e-4)
+
+
+def test_topk_handles_rank_deficiency():
+    x = jnp.zeros((4, 50)).at[0].set(jnp.ones(50))
+    v = pca.topk_right_singular(x, 3)
+    # one real component, rest zeroed
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(v[0])), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(v[1:]), 0.0, atol=1e-5)
+
+
+def test_masked_rows_are_ignored():
+    rng = np.random.default_rng(1)
+    x_valid = rng.normal(size=(3, 40)).astype(np.float32)
+    garbage = 1e6 * rng.normal(size=(2, 40)).astype(np.float32)
+    x_full = jnp.asarray(np.concatenate([x_valid, garbage]))
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0])
+    v_masked = pca.topk_right_singular(x_full, 2, mask=mask)
+    v_ref = pca.topk_right_singular(jnp.asarray(x_valid), 2)
+    for j in range(2):
+        dot = abs(float(jnp.vdot(v_masked[j], v_ref[j])))
+        np.testing.assert_allclose(dot, 1.0, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 8),
+    d=st.integers(8, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_schmidt_orthonormal_property(n, d, seed):
+    """Property: Schmidt output rows are orthonormal-or-zero, span input."""
+    rng = np.random.default_rng(seed)
+    vs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    u = pca.schmidt(vs)
+    g = np.asarray(u @ u.T)
+    norms = np.diag(g)
+    for i in range(n):
+        assert norms[i] == pytest.approx(1.0, abs=1e-3) or norms[i] == pytest.approx(0.0, abs=1e-6)
+    off = g - np.diag(norms)
+    np.testing.assert_allclose(off, 0.0, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_schmidt_zeroes_collinear(seed):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(32,)).astype(np.float32)
+    vs = jnp.asarray(np.stack([v, 2.0 * v, -0.5 * v]))
+    u = pca.schmidt(vs)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(u[0])), 1.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(u[1:]), 0.0, atol=1e-5)
+
+
+def test_pas_basis_pins_v1_and_is_orthonormal():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(5, 80)).astype(np.float32))
+    mask = jnp.asarray([1.0, 1.0, 1.0, 0.0, 0.0])
+    d = jnp.asarray(rng.normal(size=(80,)).astype(np.float32))
+    u = pca.pas_basis(q, mask, d, n_basis=4)
+    assert u.shape == (4, 80)
+    np.testing.assert_allclose(
+        np.asarray(u[0]), np.asarray(d / jnp.linalg.norm(d)), atol=1e-5)
+    g = np.asarray(u @ u.T)
+    np.testing.assert_allclose(g, np.diag(np.diag(g)), atol=1e-3)
+
+
+def test_pas_basis_spans_trajectory():
+    """The basis must (with the buffer) span any direction in the buffer span."""
+    rng = np.random.default_rng(4)
+    basis_true = rng.normal(size=(3, 60)).astype(np.float32)
+    coef = rng.normal(size=(4, 3)).astype(np.float32)
+    rows = coef @ basis_true  # 4 buffer rows in a 3-dim subspace
+    d = (rng.normal(size=(3,)).astype(np.float32) @ basis_true)
+    q = jnp.asarray(rows)
+    u = pca.pas_basis(q, jnp.ones(4), jnp.asarray(d), n_basis=4)
+    # project d onto U: should reconstruct it (d lies in the span)
+    proj = (u @ d) @ u
+    np.testing.assert_allclose(np.asarray(proj), d, rtol=1e-3, atol=1e-3)
+
+
+def test_cumulative_variance_monotone_and_saturating():
+    rng = np.random.default_rng(5)
+    low_rank = rng.normal(size=(20, 3)) @ rng.normal(size=(3, 100))
+    noise = 1e-4 * rng.normal(size=(20, 100))
+    cv = np.asarray(pca.cumulative_variance(jnp.asarray((low_rank + noise).astype(np.float32))))
+    assert np.all(np.diff(cv) >= -1e-6)
+    assert cv[2] > 0.999  # 3 PCs capture ~everything

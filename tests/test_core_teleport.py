@@ -1,0 +1,50 @@
+"""TP (teleportation) warm-start: exactness for Gaussians + PAS synergy."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import analytic, pas, schedules, solvers, teleport
+
+DIM = 64
+T_MAX, T_MIN = 80.0, 0.002
+
+
+def test_teleport_exact_for_gaussian():
+    mean = jnp.asarray(np.linspace(-1, 1, DIM), jnp.float32)
+    var = jnp.full((DIM,), 0.3, jnp.float32)
+    gmm = analytic.GaussianMixture(mean[None], var[None], jnp.zeros((1,)))
+    x_t = 80.0 * jax.random.normal(jax.random.key(0), (8, DIM))
+    stats = teleport.GaussianStats(mean=mean, variance=var)
+    x_skip = teleport.teleport(stats, x_t, T_MAX, 10.0)
+    # continue with a fine solver from sigma_skip and compare with closed form
+    ts = teleport.tp_schedule(64, sigma_skip=10.0, t_min=T_MIN)
+    sol = solvers.make_solver("heun", ts)
+    x0 = solvers.sample(sol, gmm.eps, x_skip)
+    exact = analytic.gaussian_ode_solution(mean, var, x_t, jnp.asarray(T_MAX),
+                                           jnp.asarray(T_MIN))
+    err = float(jnp.mean(jnp.linalg.norm(x0 - exact, axis=-1)))
+    assert err < 2e-2, err  # residual = 64-step Heun discretization, not TP
+
+
+def test_tp_improves_low_nfe_sampling():
+    """Paper Table 2 (DDIM+TP rows): TP beats plain DDIM at low NFE."""
+    gmm = analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+    key = jax.random.key(1)
+    x_t = gmm.sample_prior(key, 128, T_MAX)
+    # ground truth endpoint via fine teacher
+    s_ts, t_ts, m = schedules.nested_teacher_schedule(10, 100, T_MIN, T_MAX)
+    gt = solvers.ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_t)
+
+    # plain DDIM, NFE=10
+    x_plain = solvers.sample(solvers.make_solver("ddim", s_ts), gmm.eps, x_t)
+
+    # TP: moment-matched Gaussian, teleport to sigma_skip, then 10-NFE DDIM
+    data = gmm.sample_data(jax.random.key(2), 4096)
+    stats = teleport.gaussian_stats_from_data(data)
+    x_skip = teleport.teleport(stats, x_t, T_MAX, 10.0)
+    tp_ts = teleport.tp_schedule(10, sigma_skip=10.0, t_min=T_MIN)
+    x_tp = solvers.sample(solvers.make_solver("ddim", tp_ts), gmm.eps, x_skip)
+
+    e_plain = float(jnp.mean(jnp.linalg.norm(x_plain - gt[-1], axis=-1)))
+    e_tp = float(jnp.mean(jnp.linalg.norm(x_tp - gt[-1], axis=-1)))
+    assert e_tp < e_plain, (e_tp, e_plain)

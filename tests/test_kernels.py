@@ -1,0 +1,177 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per the deliverable: sweep shapes/dtypes per kernel, assert_allclose against
+ref.py.  Includes hypothesis property tests on kernel invariants.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gram import gram
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssm_scan import ssm_scan
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # (b, s, t, h, kv, dh, causal, window, cap, dtype)
+    (2, 64, 64, 4, 2, 32, True, None, None, jnp.float32),
+    (1, 128, 128, 4, 1, 64, True, 32, None, jnp.float32),
+    (2, 96, 96, 2, 2, 16, True, None, None, jnp.float32),   # pad path
+    (1, 64, 64, 8, 8, 128, False, None, None, jnp.float32),
+    (1, 64, 64, 4, 4, 32, True, None, 30.0, jnp.float32),   # soft cap
+    (2, 64, 64, 4, 2, 64, True, 16, None, jnp.bfloat16),
+    (1, 256, 256, 2, 1, 64, True, 64, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_attention_matches_ref(case):
+    b, s, t, h, kv, dh, causal, window, cap, dtype = case
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, t, kv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, t, kv, dh), dtype)
+    out_k = flash_attention(q, k, v, causal=causal, window=window,
+                            logits_soft_cap=cap, block_q=32, block_kv=32,
+                            interpret=True)
+    out_r = ref.attention(q, k, v, causal=causal, window=window,
+                          logits_soft_cap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_first_row_attends_self_only():
+    """Causal row 0 must equal v[0] exactly (invariant, any block size)."""
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 32))
+    k = jax.random.normal(ks[1], (1, 64, 2, 32))
+    v = jax.random.normal(ks[2], (1, 64, 2, 32))
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_kv=16,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(v[0, 0]),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gram
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,dtype", [
+    (4, 512, jnp.float32), (12, 4096, jnp.float32), (7, 1000, jnp.float32),
+    (12, 2048, jnp.bfloat16), (16, 8192, jnp.float32),
+])
+def test_gram_matches_ref(n, d, dtype):
+    x = jax.random.normal(jax.random.key(0), (n, d), dtype)
+    g_k = gram(x, block_d=512, interpret=True)
+    g_r = ref.gram(x)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r),
+                               rtol=tol, atol=tol * d ** 0.5)
+
+
+def test_gram_mask():
+    x = jax.random.normal(jax.random.key(1), (6, 700))
+    mask = jnp.asarray([1, 1, 0, 1, 0, 1], jnp.float32)
+    g_k = gram(x, mask=mask, block_d=256, interpret=True)
+    g_r = ref.gram(x, mask=mask)
+    np.testing.assert_allclose(np.asarray(g_k), np.asarray(g_r), rtol=1e-4,
+                               atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 12), d=st.integers(64, 600),
+       seed=st.integers(0, 2**31 - 1))
+def test_gram_psd_and_symmetric_property(n, d, seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n, d)),
+                    jnp.float32)
+    g = np.asarray(gram(x, block_d=128, interpret=True))
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-4)
+    evals = np.linalg.eigvalsh(g)
+    assert evals.min() > -1e-2 * max(evals.max(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,dtype", [
+    ((4, 16, 128), jnp.float32), ((3, 100), jnp.float32),
+    ((2, 8, 256), jnp.bfloat16), ((1, 1, 64), jnp.float32),
+])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = jax.random.normal(jax.random.key(0), shape, dtype)
+    scale = 0.1 * jax.random.normal(jax.random.key(1), (shape[-1],))
+    y_k = rmsnorm(x, scale, block_rows=32, interpret=True)
+    y_r = ref.rmsnorm(x, scale)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 64), e=st.sampled_from([32, 64, 128]),
+       seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm_unit_rms_property(rows, e, seed):
+    """With scale=0 the output rows have RMS ~= 1."""
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(rows, e)) * 3,
+                    jnp.float32)
+    y = rmsnorm(x, jnp.zeros((e,)), block_rows=16, interpret=True)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,l,di,n,dtype", [
+    (2, 64, 128, 8, jnp.float32),
+    (1, 100, 128, 16, jnp.float32),   # time padding path
+    (2, 128, 256, 4, jnp.bfloat16),
+])
+def test_ssm_scan_matches_ref(b, l, di, n, dtype):
+    ks = jax.random.split(jax.random.key(0), 5)
+    u = jax.random.normal(ks[0], (b, l, di), dtype)
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (b, l, di), dtype))
+    a = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, l, n), dtype)
+    cc = jax.random.normal(ks[4], (b, l, n), dtype)
+    d = jnp.ones((di,), jnp.float32)
+    y_k, h_k = ssm_scan(u, delta, a, bb, cc, d, block_d=64, block_t=32,
+                        interpret=True)
+    y_r, h_r = ref.ssm_scan(u, delta, a, bb, cc, d)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32), rtol=tol,
+                               atol=tol * 10)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), rtol=tol,
+                               atol=tol * 10)
+
+
+def test_ssm_scan_state_continuation():
+    """Scanning [x1; x2] == scanning x1 then x2 seeded with h(x1) (oracle)."""
+    ks = jax.random.split(jax.random.key(3), 5)
+    b, l, di, n = 1, 32, 16, 4
+    u = jax.random.normal(ks[0], (b, 2 * l, di))
+    delta = jax.nn.softplus(jax.random.normal(ks[1], (b, 2 * l, di)))
+    a = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, 2 * l, n))
+    cc = jax.random.normal(ks[4], (b, 2 * l, n))
+    y_full, h_full = ref.ssm_scan(u, delta, a, bb, cc)
+    y1, h1 = ref.ssm_scan(u[:, :l], delta[:, :l], a, bb[:, :l], cc[:, :l])
+    y2, h2 = ref.ssm_scan(u[:, l:], delta[:, l:], a, bb[:, l:], cc[:, l:],
+                          h0=h1)
+    np.testing.assert_allclose(np.asarray(y_full[:, l:]), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_full), np.asarray(h2), rtol=1e-4,
+                               atol=1e-4)

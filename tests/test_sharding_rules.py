@@ -1,0 +1,64 @@
+"""Sharding-rule unit tests: divisibility fallbacks, dedup, param roles."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import models
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.parallel import AxisRules, axis_rules, param_partition_specs, spec_for
+
+
+@pytest.fixture(scope="module")
+def rules():
+    mesh = make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:  # divisibility math only needs .shape
+        shape = {"data": 16, "model": 16}
+
+    return AxisRules(mesh=FakeMesh(), batch=("data",), model=("model",),
+                     fsdp=("data",), seq=("model",))
+
+
+def test_spec_divisibility_fallback(rules):
+    # 8 kv heads don't divide the 16-way model axis -> replicate that dim
+    assert spec_for((128, 32768, 8, 128), ("batch", None, "model", None),
+                    rules) == P("data", None, None, None)
+    # 16 divides -> sharded
+    assert spec_for((128, 32768, 16, 128), ("batch", None, "model", None),
+                    rules) == P("data", None, "model", None)
+
+
+def test_spec_dedup_first_wins(rules):
+    # seq->model and vocab->model collide; earlier dim keeps the axis
+    s = spec_for((16, 4096, 152064), ("batch", "seq", "model"), rules)
+    assert s == P("data", "model", None)
+
+
+def test_param_roles_right_aligned(rules):
+    cfg = get_config("qwen2-72b")
+    specs_sds = models.param_specs(cfg)
+    parts = param_partition_specs(specs_sds, rules)
+    blocks0 = parts["blocks"][0]
+    # scan-stacked (n_groups, E, H*Dh): group dim replicated, (fsdp, model)
+    assert blocks0["attn"]["wq"] == P(None, "data", "model")
+    assert blocks0["attn"]["wo"] == P(None, "model", "data")
+    assert blocks0["mlp"]["w2"] == P(None, "model", "data")
+    assert parts["tok_embed"] == P("model", "data")
+    # norms replicate
+    assert blocks0["ln1"]["scale"] == P(None, None)
+
+
+def test_moe_expert_sharding(rules):
+    cfg = get_config("llama4-scout-17b-16e")   # 16 experts == 16-way axis
+    specs_sds = models.param_specs(cfg)
+    parts = param_partition_specs(specs_sds, rules)
+    w1 = parts["blocks"][0]["moe"]["experts"]["w1"]
+    assert w1 == P(None, "model", "data", None)  # (groups, n_exp, E, F)
+
+
+def test_no_rules_is_noop():
+    from repro.parallel import constrain
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", "model") is x

@@ -1,0 +1,99 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The full pipeline: calibrate PAS offline -> serialise the ~10 parameters ->
+hot-swap them into the serving loop -> serve batched requests -> verify the
+quality gain and that the correction round-trips through checkpointing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.core import (PASConfig, PASParams, calibrate,
+                        ground_truth_trajectory, nested_teacher_schedule,
+                        two_mode_gmm)
+from repro.core import solvers
+from repro.runtime import DiffusionServer, Request, ServeConfig
+
+DIM, NFE = 64, 10
+
+
+def _setup():
+    gmm = two_mode_gmm(DIM, sep=6.0, var=0.25)
+    s_ts, t_ts, m = nested_teacher_schedule(NFE, 100, 0.002, 80.0)
+    x_c = gmm.sample_prior(jax.random.key(0), 256, 80.0)
+    gt = ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_c)
+    return gmm, s_ts, t_ts, m, x_c, gt
+
+
+def test_end_to_end_calibrate_serialize_serve(tmp_path):
+    gmm, s_ts, t_ts, m, x_c, gt = _setup()
+    cfg = ServeConfig(nfe=NFE, use_pas=True,
+                      pas=PASConfig(n_sgd_iters=200, val_fraction=0.25))
+    server = DiffusionServer(gmm.eps, DIM, cfg)
+
+    params, diag = calibrate(server.solver, gmm.eps, x_c, gt, cfg.pas)
+    assert 1 <= params.n_stored_params <= 24      # "approximately 10"
+
+    # round-trip the learned parameters through the checkpoint system
+    ckpt.save(tmp_path, 1, {"active": jnp.asarray(params.active),
+                            "coords": params.coords})
+    restored, _ = ckpt.restore(tmp_path, {"active": jnp.asarray(params.active),
+                                          "coords": params.coords})
+    params2 = PASParams(active=np.asarray(restored["active"]),
+                        coords=restored["coords"])
+    assert params2.corrected_paper_steps() == params.corrected_paper_steps()
+
+    server.set_pas(params2)
+    reqs = [Request(seed=7, n_samples=32), Request(seed=8, n_samples=16)]
+    outs_pas = server.serve(reqs)
+
+    server_plain = DiffusionServer(gmm.eps, DIM,
+                                   ServeConfig(nfe=NFE, use_pas=False))
+    outs_plain = server_plain.serve(reqs)
+
+    # quality: both batches closer to the teacher with PAS
+    for req, o_pas, o_plain in zip(reqs, outs_pas, outs_plain):
+        x_t = 80.0 * jax.random.normal(jax.random.key(req.seed),
+                                       (req.n_samples, DIM))
+        gt_req = ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_t)
+        e_pas = float(np.mean(np.linalg.norm(o_pas - np.asarray(gt_req[-1]),
+                                             axis=-1)))
+        e_plain = float(np.mean(np.linalg.norm(o_plain - np.asarray(gt_req[-1]),
+                                               axis=-1)))
+        assert e_pas < 0.5 * e_plain, (e_pas, e_plain)
+
+
+def test_pas_is_plug_and_play_across_solvers():
+    """The same server serves ddim and ipndm3 with per-solver coordinates."""
+    gmm, s_ts, t_ts, m, x_c, gt = _setup()
+    for name in ("ddim", "ipndm3"):
+        cfg = ServeConfig(nfe=NFE, solver=name, use_pas=True,
+                          pas=PASConfig(n_sgd_iters=150, val_fraction=0.25))
+        server = DiffusionServer(gmm.eps, DIM, cfg)
+        params, _ = calibrate(server.solver, gmm.eps, x_c, gt, cfg.pas)
+        server.set_pas(params)
+        outs = server.serve([Request(seed=1, n_samples=8)])
+        assert outs[0].shape == (8, DIM)
+        assert np.isfinite(outs[0]).all()
+
+
+def test_trajectory_interpolation_preserved():
+    """Paper §3.5: PAS preserves the ODE trajectory family — the corrected
+    endpoint stays close to the *true* endpoint of its own trajectory, so
+    noise-space interpolation still lands in the teacher's mode basins."""
+    gmm, s_ts, t_ts, m, x_c, gt = _setup()
+    cfg = PASConfig(n_sgd_iters=200, val_fraction=0.25)
+    sol = solvers.make_solver("ddim", s_ts)
+    params, _ = calibrate(sol, gmm.eps, x_c, gt, cfg)
+
+    from repro.core import pas as pas_mod
+    a = 80.0 * jax.random.normal(jax.random.key(3), (1, DIM))
+    b = 80.0 * jax.random.normal(jax.random.key(4), (1, DIM))
+    lam = jnp.linspace(0.0, 1.0, 9)[:, None]
+    x_interp = (1 - lam) * a + lam * b
+    gt_i = ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_interp)
+    x0, _ = pas_mod.pas_sample_trajectory(sol, gmm.eps, x_interp, params, cfg)
+    # same mode (sign of coordinate 0) as the exact solution, for every lambda
+    assert np.array_equal(np.sign(np.asarray(x0[:, 0])),
+                          np.sign(np.asarray(gt_i[-1][:, 0])))
