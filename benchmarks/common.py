@@ -15,9 +15,9 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import analytic, pas, schedules, solvers
+from repro.engine import engine_for_solver
 
 ART = Path(__file__).resolve().parent / "artifacts" / "repro"
 
@@ -70,8 +70,9 @@ def run_pas(solver_name: str, nfe: int, gmm=None, cfg=None,
     t0 = time.time()
     params, diag = pas.calibrate(sol, gmm.eps, x_c, gt_c, cfg)
     train_s = time.time() - t0
-    x_plain = solvers.sample(sol, gmm.eps, x_e)
-    x_pas, _ = pas.pas_sample_trajectory(sol, gmm.eps, x_e, params, cfg)
+    engine = engine_for_solver(sol)
+    x_plain = engine.sample(gmm.eps, x_e)
+    x_pas = engine.sample(gmm.eps, x_e, params=params, cfg=cfg)
     return {
         "solver": solver_name, "nfe": nfe,
         "err_plain": final_err(x_plain, gt_e[-1], eval_metric),

@@ -1,0 +1,94 @@
+"""Engine throughput: fused SamplingEngine vs the seed sampling path.
+
+Measures end-to-end samples/sec for a full PAS-corrected trajectory at batch
+{1, 16, 128}, comparing:
+
+* ``seed``   — the pre-engine path exactly as the serve loop dispatched it:
+  ``solvers.sample`` (plain) / ``pas.pas_sample_trajectory`` (corrected),
+  re-traced on every call;
+* ``engine`` — ``SamplingEngine.sample``: one cached jitted scan with the
+  fused step kernel and the PAS projection folded in.
+
+  PYTHONPATH=src python -m benchmarks.engine_throughput [--dry-run]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pas, solvers
+from repro.engine import engine_for_solver
+
+from . import common
+
+NFE = 10
+SOLVER = "ipndm3"
+
+
+def _throughput(fn, x, n_rep: int) -> float:
+    """Samples/sec over n_rep calls (first call compiles and is excluded)."""
+    jax.block_until_ready(fn(x))
+    t0 = time.time()
+    for _ in range(n_rep):
+        out = fn(x)
+    jax.block_until_ready(out)
+    return x.shape[0] * n_rep / (time.time() - t0)
+
+
+def _synthetic_params(n: int) -> pas.PASParams:
+    """A realistic correction pattern (2 active steps) without calibration."""
+    active = np.zeros(n, dtype=bool)
+    active[[1, 3]] = True
+    coords = np.zeros((n, 4), np.float32)
+    coords[1] = [1.0, 0.05, 0.0, 0.0]
+    coords[3] = [0.98, -0.04, 0.0, 0.0]
+    return pas.PASParams(active=active, coords=jnp.asarray(coords))
+
+
+def run(dry_run: bool = False) -> list[dict]:
+    gmm = common.oracle()
+    s_ts = common.schedules.polynomial_schedule(NFE, common.T_MIN, common.T_MAX)
+    sol = solvers.make_solver(SOLVER, s_ts)
+    engine = engine_for_solver(sol)
+    params = _synthetic_params(NFE)
+    cfg = pas.PASConfig()
+
+    batches = (1, 16) if dry_run else (1, 16, 128)
+    n_rep = 3 if dry_run else 10
+    rows = []
+    for b in batches:
+        x = gmm.sample_prior(jax.random.key(0), b, common.T_MAX)
+        pairs = {
+            "plain": (
+                lambda x: solvers.sample(sol, gmm.eps, x),
+                lambda x: engine.sample(gmm.eps, x),
+            ),
+            "pas": (
+                lambda x: pas.pas_sample_trajectory(
+                    sol, gmm.eps, x, params, cfg)[0],
+                lambda x: engine.sample(gmm.eps, x, params=params, cfg=cfg),
+            ),
+        }
+        for mode, (seed_fn, engine_fn) in pairs.items():
+            sps_seed = _throughput(seed_fn, x, n_rep)
+            sps_engine = _throughput(engine_fn, x, n_rep)
+            rows.append({
+                "mode": mode, "batch": b, "solver": SOLVER, "nfe": NFE,
+                "seed_samples_per_s": round(sps_seed, 1),
+                "engine_samples_per_s": round(sps_engine, 1),
+                "speedup": round(sps_engine / max(sps_seed, 1e-9), 2),
+            })
+    if not dry_run:
+        common.save_table("engine_throughput", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small batch set + few repeats (CI smoke)")
+    args = ap.parse_args()
+    for r in run(dry_run=args.dry_run):
+        print(r)

@@ -1,7 +1,5 @@
 """Paper Fig. 3: the cumulative truncation error is S-shaped (a), and PAS
 corrects exactly the high-curvature region (b)."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pas, solvers

@@ -1,9 +1,5 @@
 """Paper Fig. 6 ablations: adaptive search on/off (a), loss function (b),
 number of basis vectors (c), number of calibration trajectories (d)."""
-import dataclasses
-
-import jax
-
 from repro.core import pas, solvers
 
 from . import common

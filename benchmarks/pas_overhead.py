@@ -4,20 +4,55 @@ The paper reports 0.06 s PCA vs 30.2 s NFE on Stable Diffusion.  We measure
 the same ratio on this container: the PAS basis computation (gram-trick PCA +
 Schmidt) vs one denoiser evaluation at LM scale (reduced backbone, but the
 *ratio* scales in PAS's favour with D: PCA is O(n^2 D), the denoiser O(P D)).
-Also measures the Pallas gram kernel vs the jnp oracle (interpret mode).
+Also measures the fused engine step (kernels/fused_step.py) against the
+seed's unfused phi composition — the projection + multistep update that the
+engine folds into one kernel pass.
+
+  PYTHONPATH=src python -m benchmarks.pas_overhead [--dry-run]
+
+``--dry-run`` (the CI smoke mode) runs the smallest config of every
+measurement so the harness can't silently rot.
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import pca
-from repro.kernels import ops, ref
+from repro.core import pca, solvers
+from repro.kernels import ops
 
 from . import common
 
 
-def run() -> list[dict]:
+def _fused_step_rows(d: int, batch: int = 16) -> list[dict]:
+    """Fused engine step vs the seed's unfused phi for one ipndm3 update."""
+    ts = jax.numpy.linspace(80.0, 0.002, 11)
+    sol = solvers.make_solver("ipndm3", jax.device_get(ts))
+    x = jax.random.normal(jax.random.key(0), (batch, d))
+    dvec = jax.random.normal(jax.random.key(1), (batch, d))
+    hist = jax.random.normal(jax.random.key(2), (2, batch, d))
+    coef = jnp.concatenate([sol.alpha[3][None], sol.beta[3],
+                            sol.ts_jax[3][None]])
+
+    def seed_phi(x, dvec, hist):
+        return sol.phi(x, dvec, 3, solvers.SolverHist(hist, jnp.int32(2)))
+
+    us_seed = common.timed_us(jax.jit(seed_phi), x, dvec, hist)
+    us_fused = common.timed_us(
+        jax.jit(lambda x, n, h: ops.fused_step(x, n, h, coef)), x, dvec, hist)
+    return [
+        {"op": "seed_phi(unfused)", "D": d, "B": batch,
+         "us_per_call": round(us_seed, 1)},
+        {"op": "engine_fused_step", "D": d, "B": batch,
+         "us_per_call": round(us_fused, 1),
+         "speedup_vs_seed": round(us_seed / max(us_fused, 1e-9), 3)},
+    ]
+
+
+def run(dry_run: bool = False) -> list[dict]:
     rows = []
-    for d in (4096, 65536, 1 << 20):
+    dims = (4096,) if dry_run else (4096, 65536, 1 << 20)
+    for d in dims:
         n = 12
         q = jax.random.normal(jax.random.key(0), (n, d))
         mask = jnp.ones((n,))
@@ -28,10 +63,14 @@ def run() -> list[dict]:
         rows.append({"op": "pas_basis(gram+eigh+schmidt)", "D": d,
                      "us_per_call": round(us_basis, 1)})
 
+    rows.extend(_fused_step_rows(dims[-1]))
+
     # one denoiser NFE at (reduced) LM scale for the ratio
     from repro import models
     from repro.configs import get_config
-    cfg = get_config("qwen1.5-0.5b").reduced(d_model=256, n_layers=4)
+    reduced = dict(d_model=128, n_layers=2) if dry_run \
+        else dict(d_model=256, n_layers=4)
+    cfg = get_config("qwen1.5-0.5b").reduced(**reduced)
     params = models.init_params(jax.random.key(0), cfg, with_diffusion_head=True)
     x = jax.random.normal(jax.random.key(2), (8, 64, cfg.d_model))
     sigma = jnp.full((8,), 10.0)
@@ -48,10 +87,15 @@ def run() -> list[dict]:
     rows.append({"op": "pas_basis_at_same_D", "D": d_state,
                  "us_per_call": round(basis_at_same_d, 1),
                  "ratio_vs_nfe": round(basis_at_same_d / us_nfe, 4)})
-    common.save_table("pas_overhead", rows)
+    if not dry_run:
+        common.save_table("pas_overhead", rows)
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="smallest config of every measurement (CI smoke)")
+    args = ap.parse_args()
+    for r in run(dry_run=args.dry_run):
         print(r)

@@ -1,7 +1,5 @@
 """Paper Table 11: L1/L2 metrics vs the teacher across iPNDM orders 1..4,
 with and without PAS (PAS never hurts; gains shrink as the solver improves)."""
-from repro.core import solvers
-
 from . import common
 
 

@@ -8,10 +8,9 @@ The paper-faithful ordering to reproduce: DDIM (worst) >> DDIM+PAS;
 iPNDM > iPNDM+PAS (small); +TP improves both; TP+PAS best.
 """
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import pas, solvers, teleport
+from repro.engine import engine_for_solver, get_engine
 
 from . import common
 
@@ -27,17 +26,17 @@ def _tp_eval(gmm, solver_name, nfe, with_pas, cfg):
     x_c_skip = teleport.teleport(stats, x_c, common.T_MAX, 10.0)
     x_e_skip = teleport.teleport(stats, x_e, common.T_MAX, 10.0)
 
+    engine = engine_for_solver(sol)
     if with_pas:
         # teacher trajectory along the post-TP schedule
         from repro.core import schedules
-        t_ts2, m2 = None, None
         s2, t_ts2, m2 = schedules.nested_teacher_schedule(
             nfe, common.TEACHER_NFE, common.T_MIN, 10.0)
         gt_c2 = solvers.ground_truth_trajectory(gmm.eps, s2, t_ts2, m2, x_c_skip)
         params, _ = pas.calibrate(sol, gmm.eps, x_c_skip, gt_c2, cfg)
-        x0, _ = pas.pas_sample_trajectory(sol, gmm.eps, x_e_skip, params, cfg)
+        x0 = engine.sample(gmm.eps, x_e_skip, params=params, cfg=cfg)
     else:
-        x0 = solvers.sample(sol, gmm.eps, x_e_skip)
+        x0 = engine.sample(gmm.eps, x_e_skip)
     return common.final_err(x0, gt_e[-1])
 
 
@@ -47,22 +46,22 @@ def run(nfes=(5, 6, 8, 10)) -> list[dict]:
     rows = []
     for nfe in nfes:
         s_ts, _, (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
-        # training-free baselines
+        # training-free baselines (each engine binding is cached by schedule)
         for name in ("ddim", "dpmpp2m", "deis3", "ipndm3", "ipndm2"):
-            sol = solvers.make_solver(name, s_ts)
+            engine = get_engine(name, s_ts)
             rows.append({"method": name, "nfe": nfe,
                          "err_l2": common.final_err(
-                             solvers.sample(sol, gmm.eps, x_e), gt_e[-1])})
+                             engine.sample(gmm.eps, x_e), gt_e[-1])})
         # 2-eval solvers at matched NFE budget
         if nfe % 2 == 0:
             from repro.core import schedules
             half = schedules.polynomial_schedule(nfe // 2, common.T_MIN,
                                                  common.T_MAX)
             for name in ("heun", "dpm2"):
-                sol = solvers.make_solver(name, half)
+                engine = get_engine(name, half)
                 rows.append({"method": name, "nfe": nfe,
                              "err_l2": common.final_err(
-                                 solvers.sample(sol, gmm.eps, x_e), gt_e[-1])})
+                                 engine.sample(gmm.eps, x_e), gt_e[-1])})
         # PAS-corrected
         for name in ("ddim", "ipndm3"):
             r = common.run_pas(name, nfe, gmm, cfg)

@@ -2,16 +2,17 @@
 
 Calibrates PCA-based Adaptive Search (paper Alg. 1) for a 10-NFE DDIM sampler
 against a 100-NFE teacher, then samples with the learned ~10 parameters
-(Alg. 2) and reports the truncation-error reduction on held-out noise.
+(Alg. 2) through the fused SamplingEngine and reports the truncation-error
+reduction on held-out noise.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import (PASConfig, calibrate, pas_sample_trajectory,
-                        nested_teacher_schedule, sample, make_solver,
-                        ground_truth_trajectory, two_mode_gmm)
+from repro.core import (PASConfig, calibrate, nested_teacher_schedule,
+                        make_solver, ground_truth_trajectory, two_mode_gmm)
+from repro.engine import engine_for_solver
 
 DIM, NFE = 64, 10
 
@@ -36,8 +37,10 @@ def main():
     gt_eval = ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_eval)
     err = lambda x: float(jnp.mean(jnp.linalg.norm(x - gt_eval[-1], axis=-1)))
 
-    x_plain = sample(solver, gmm.eps, x_eval)
-    x_pas, _ = pas_sample_trajectory(solver, gmm.eps, x_eval, params, cfg)
+    # one engine, one entry point: plain and corrected are the same scan
+    engine = engine_for_solver(solver)
+    x_plain = engine.sample(gmm.eps, x_eval)
+    x_pas = engine.sample(gmm.eps, x_eval, params=params, cfg=cfg)
     e0, e1 = err(x_plain), err(x_pas)
     print(f"final L2 to teacher  DDIM: {e0:.4f}   DDIM+PAS: {e1:.4f} "
           f"({e0 / max(e1, 1e-9):.1f}x better)")

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (PASConfig, calibrate, nested_teacher_schedule,
-                        make_solver, ground_truth_trajectory, two_mode_gmm)
+                        ground_truth_trajectory, two_mode_gmm)
 from repro.runtime import DiffusionServer, Request, ServeConfig
 
 DIM = 64

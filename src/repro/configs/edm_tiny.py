@@ -6,8 +6,6 @@ PAS-on-a-learned-model tests: an MLP denoiser over flattened images with
 EDM preconditioning (diffusion/edm.py).  It is registered alongside the zoo
 so launchers can select it, but it is not one of the 40 dry-run cells.
 """
-import dataclasses
-
 from .base import LayerSpec, ModelConfig, register
 
 CONFIG = register(ModelConfig(

@@ -23,7 +23,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from .pca import _DEGENERATE_NORM, _EVAL_FLOOR
 

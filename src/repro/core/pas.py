@@ -267,7 +267,15 @@ def _make_sgd(solver, cfg: PASConfig, train_loss):
 
 def pas_sample(solver: Solver, eps_fn: EpsFn, x_t: Array, params: PASParams,
                cfg: PASConfig = PASConfig()) -> Array:
-    return pas_sample_trajectory(solver, eps_fn, x_t, params, cfg)[0]
+    """Corrected sampling via the fused engine (the production entry point).
+
+    Delegates to ``repro.engine.SamplingEngine`` — one jitted scan with the
+    PAS projection folded into the fused step kernel.  The unfused
+    ``pas_sample_trajectory`` below remains the reference implementation the
+    engine is parity-tested against (tests/test_engine.py).
+    """
+    from repro.engine import engine_for_solver  # deferred: engine imports core
+    return engine_for_solver(solver).sample(eps_fn, x_t, params=params, cfg=cfg)
 
 
 def pas_sample_trajectory(

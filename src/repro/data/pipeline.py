@@ -12,8 +12,6 @@ import queue
 import threading
 from typing import Callable, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["TokenStream", "ImageStream", "Prefetcher"]

@@ -1,0 +1,12 @@
+"""repro.engine — the fused, cached sampling surface (see engine.py)."""
+
+from .engine import (SamplingEngine, clear_engine_cache, engine_cache_stats,
+                     engine_for_solver, get_engine)
+
+__all__ = [
+    "SamplingEngine",
+    "clear_engine_cache",
+    "engine_cache_stats",
+    "engine_for_solver",
+    "get_engine",
+]

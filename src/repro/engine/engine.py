@@ -1,0 +1,300 @@
+"""SamplingEngine: the single compiled sampling surface for PAS solvers.
+
+The seed repo had three overlapping sampling paths (``solvers.sample``, the
+per-step Python dispatch in ``pas.pas_sample_trajectory``, and the serve
+loop's ad-hoc branch between them), each re-tracing per call and each
+materialising the PAS projection as a separate XLA round-trip.  The engine
+replaces all of them with one object per (solver, schedule, NFE, dtype):
+
+* the solver's (N, K) coefficient tables are packed once, host-side, into a
+  single ``(N, K+2)`` row layout ``[alpha, beta_0..beta_{K-1}, t]`` that both
+  fused kernels consume (kernels/fused_step.py);
+* plain sampling is one jitted ``lax.scan`` whose body is a single fused
+  multiply-add kernel pass — batch rides natively through the kernel tiles;
+* PAS-corrected sampling compiles the corrected prefix (active steps are few
+  by construction — the adaptive search keeps ~10 parameters) with static
+  branches, folds the coordinate application into the same kernel pass, and
+  finishes with the same plain scan for the correction-free tail.  Inactive
+  steps therefore keep the paper's zero-overhead promise;
+* engines and their compiled callables are cached:
+  ``get_engine(name, ts, dtype)`` is keyed on (solver name, schedule bytes,
+  NFE, dtype) and per-engine jitted functions are keyed on the eps-model and
+  the static correction pattern.
+
+``TwoEvalSolver`` teachers (heun, dpm2) are served by the same entry point
+via a scan over ``solver.step`` so callers never branch on solver family;
+PAS params on a 2-eval solver raise, as in calibration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pas import _batched_basis, _QBuffer
+from repro.core.solvers import (LinearMultistepSolver, Solver, TwoEvalSolver,
+                                make_solver)
+from repro.kernels import ops
+
+Array = jax.Array
+EpsFn = Callable[[Array, Array], Array]
+
+__all__ = [
+    "SamplingEngine",
+    "get_engine",
+    "engine_for_solver",
+    "clear_engine_cache",
+    "engine_cache_stats",
+]
+
+
+def _fn_key(fn: Callable) -> Any:
+    """Stable hashable identity for an eps model.
+
+    Bound methods (``gmm.eps``) create a fresh object per attribute access, so
+    ``id(fn)`` alone would defeat the compiled-fn cache; key on the underlying
+    (instance, function) pair instead.
+    """
+    self_obj = getattr(fn, "__self__", None)
+    if self_obj is not None:
+        return (id(self_obj), getattr(fn, "__func__", fn))
+    return id(fn)
+
+
+def _scaled_coords(coords: Array, d: Array, mode: str) -> Array:
+    """Fold coord_mode into the kernel input: cs (B, k) = coords * scale_b."""
+    if mode == "relative":
+        scale = jnp.sqrt(jnp.sum(d * d, axis=-1))          # (B,) = ||d||
+        return coords[None, :] * scale[:, None]
+    return jnp.broadcast_to(coords[None, :], (d.shape[0], coords.shape[0]))
+
+
+class SamplingEngine:
+    """One compiled, batch-vmapped sampling surface for a bound solver."""
+
+    def __init__(self, solver: Solver, dtype: jnp.dtype = jnp.float32):
+        self.solver = solver
+        self.dtype = jnp.dtype(dtype)
+        self.name = solver.name
+        self.ts = np.asarray(solver.ts, dtype=np.float64)
+        self.nfe = solver.nfe          # evals, not steps: 2x for heun/dpm2
+        self._compiled: dict[Any, tuple[Callable, Callable]] = {}
+
+        if isinstance(solver, LinearMultistepSolver):
+            alpha = np.asarray(solver.alpha, np.float64)      # (N,)
+            beta = np.asarray(solver.beta, np.float64)        # (N, K)
+            self.k = int(beta.shape[1])
+            self.hist_len = max(self.k - 1, 1)
+            self.native_x0 = solver.native == "x0"
+            # the packed table both fused kernels consume
+            coef = np.concatenate(
+                [alpha[:, None], beta, self.ts[:-1, None]], axis=1)
+            self.coef = jnp.asarray(coef, self.dtype)         # (N, K+2)
+        else:
+            self.k = 0
+            self.hist_len = 0
+            self.native_x0 = False
+            self.coef = None
+
+    # -- construction-time helpers -----------------------------------------
+
+    @property
+    def ts_jax(self) -> Array:
+        return jnp.asarray(self.ts, self.dtype)
+
+    def _hist0(self, x: Array) -> Array:
+        return jnp.zeros((self.hist_len,) + x.shape, x.dtype)
+
+    def _push_hist(self, hist: Array, nat: Array) -> Array:
+        if self.k <= 1:   # ddim/euler keep no history
+            return hist
+        return jnp.roll(hist, 1, axis=0).at[0].set(nat)
+
+    def _native(self, x: Array, d: Array, t: Array) -> Array:
+        return x - t * d if self.native_x0 else d
+
+    # -- compiled paths ------------------------------------------------------
+
+    def _plain_body(self, eps_fn: EpsFn):
+        def body(carry, inp):
+            x, hist = carry
+            t, cf = inp
+            d = eps_fn(x, t)
+            nat = self._native(x, d, t)
+            x_next = ops.fused_step(x, nat, hist, cf)
+            return (x_next, self._push_hist(hist, nat)), None
+        return body
+
+    def _build_plain(self, eps_fn: EpsFn) -> Callable:
+        if isinstance(self.solver, TwoEvalSolver):
+            solver = self.solver
+            ts = self.ts_jax
+
+            def run(x_t: Array) -> Array:
+                def body(carry, j):
+                    x, hist = carry
+                    x, hist, _ = solver.step(eps_fn, x, j, hist)
+                    return (x, hist), None
+                (x, _), _ = jax.lax.scan(
+                    body, (x_t, solver.init_hist(x_t)),
+                    jnp.arange(len(ts) - 1))
+                return x
+            return jax.jit(run)
+
+        body = self._plain_body(eps_fn)
+        ts = self.ts_jax[:-1]
+        coef = self.coef
+
+        def run(x_t: Array) -> Array:
+            (x, _), _ = jax.lax.scan(body, (x_t, self._hist0(x_t)), (ts, coef))
+            return x
+        return jax.jit(run)
+
+    def _build_pas(self, eps_fn: EpsFn, active: tuple[bool, ...],
+                   coord_mode: str, n_basis: int) -> Callable:
+        if not isinstance(self.solver, LinearMultistepSolver):
+            raise TypeError(
+                f"PAS correction requires a 1-eval solver; got {self.name}")
+        n = len(self.ts) - 1
+        last = max(j for j in range(n) if active[j])
+        ts = self.ts_jax
+        coef = self.coef
+        body = self._plain_body(eps_fn)
+
+        def run(x_t: Array, coords: Array) -> Array:
+            x = x_t
+            hist = self._hist0(x_t)
+            # the calibration-time Q buffer and batched basis, verbatim
+            # (shared with pas.py so the layouts can never drift apart)
+            q = _QBuffer.create(x_t, cap=n + 1)
+
+            for j in range(last + 1):     # static unroll: ~#corrected steps
+                t = ts[j]
+                d = eps_fn(x, t)
+                if active[j]:
+                    u = _batched_basis(q, d, n_basis)          # (B, k, D)
+                    cs = _scaled_coords(coords[j], d, coord_mode)
+                    x, d_used, nat = ops.fused_pas_step(
+                        x, u, cs, hist, coef[j], native_x0=self.native_x0)
+                else:
+                    nat = self._native(x, d, t)
+                    d_used = d
+                    x = ops.fused_step(x, nat, hist, coef[j])
+                hist = self._push_hist(hist, nat)
+                if j < last:
+                    q = q.push(d_used, j + 1)
+
+            if last + 1 < n:              # correction-free tail: plain scan
+                (x, _), _ = jax.lax.scan(
+                    body, (x, hist), (ts[last + 1:-1], coef[last + 1:]))
+            return x
+        return jax.jit(run)
+
+    # -- public API ----------------------------------------------------------
+
+    def sample(self, eps_fn: EpsFn, x_t: Array, params=None, cfg=None) -> Array:
+        """Sample ts[0] -> ts[N].  The one sampling entry point.
+
+        ``params``/``cfg`` are ``pas.PASParams``/``pas.PASConfig``; omit them
+        (or pass params with no active step) for the uncorrected solver.
+        """
+        if params is not None and bool(np.asarray(params.active).any()):
+            if cfg is None:
+                from repro.core.pas import PASConfig
+                cfg = PASConfig()
+            key = ("pas", _fn_key(eps_fn),
+                   tuple(bool(a) for a in np.asarray(params.active)),
+                   cfg.coord_mode, int(params.coords.shape[1]))
+            fn = self._get_compiled(key, lambda: self._build_pas(
+                eps_fn, key[2], cfg.coord_mode, key[4]), eps_fn)
+            return fn(x_t, jnp.asarray(params.coords, self.dtype))
+
+        key = ("plain", _fn_key(eps_fn))
+        fn = self._get_compiled(key, lambda: self._build_plain(eps_fn), eps_fn)
+        return fn(x_t)
+
+    def _get_compiled(self, key, build, eps_fn) -> Callable:
+        """Compiled-program cache; pins eps_fn so id-based keys stay valid.
+
+        Bounded LRU (least-recently-used variant evicted) so processes that
+        rotate models or correction patterns don't pin every model forever.
+        """
+        entry = self._compiled.get(key)
+        if entry is None:
+            if len(self._compiled) >= _MAX_COMPILED_PER_ENGINE:
+                self._compiled.pop(next(iter(self._compiled)))
+            entry = (eps_fn, build())
+        else:
+            del self._compiled[key]    # re-insert: dict order tracks recency
+        self._compiled[key] = entry
+        return entry[1]
+
+    def compiled_variants(self) -> int:
+        """Number of distinct (model, correction-pattern) programs cached."""
+        return len(self._compiled)
+
+
+# ---------------------------------------------------------------------------
+# engine cache
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+
+_ENGINES: dict[Any, SamplingEngine] = {}
+_STATS = _CacheStats()
+_MAX_ENGINES = 64
+_MAX_COMPILED_PER_ENGINE = 16
+
+
+def _cache_key(name: str, ts: np.ndarray, dtype) -> Any:
+    ts = np.asarray(ts, np.float64)
+    return (name, ts.tobytes(), len(ts) - 1, jnp.dtype(dtype).name)
+
+
+def _lookup(key: Any, build: Callable[[], SamplingEngine]) -> SamplingEngine:
+    """Bounded LRU cache (callers holding an evicted engine keep it alive)."""
+    eng = _ENGINES.get(key)
+    if eng is None:
+        _STATS.misses += 1
+        if len(_ENGINES) >= _MAX_ENGINES:
+            _ENGINES.pop(next(iter(_ENGINES)))
+        eng = build()
+    else:
+        _STATS.hits += 1
+        del _ENGINES[key]              # re-insert: dict order tracks recency
+    _ENGINES[key] = eng
+    return eng
+
+
+def get_engine(name: str, ts: np.ndarray,
+               dtype: jnp.dtype = jnp.float32) -> SamplingEngine:
+    """Engine for (solver name, schedule, dtype); coefficient tables are
+    bound exactly once per key and every later lookup is a cache hit."""
+    return _lookup(_cache_key(name, ts, dtype),
+                   lambda: SamplingEngine(make_solver(name, np.asarray(ts)),
+                                          dtype))
+
+
+def engine_for_solver(solver: Solver,
+                      dtype: jnp.dtype = jnp.float32) -> SamplingEngine:
+    """Engine for an already-bound solver (shares the get_engine cache)."""
+    return _lookup(_cache_key(solver.name, solver.ts, dtype),
+                   lambda: SamplingEngine(solver, dtype))
+
+
+def clear_engine_cache() -> None:
+    _ENGINES.clear()
+    _STATS.hits = _STATS.misses = 0
+
+
+def engine_cache_stats() -> dict[str, int]:
+    return {"engines": len(_ENGINES), "hits": _STATS.hits,
+            "misses": _STATS.misses}

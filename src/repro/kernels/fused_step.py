@@ -1,0 +1,138 @@
+"""Fused PAS-corrected linear-multistep update as a Pallas TPU kernel.
+
+Every 1-NFE solver the paper corrects reduces (core/solvers.py) to
+
+    x_{j+1} = alpha[j] * x_j + beta[j, 0] * native_0 + sum_m beta[j, m] * hist_m
+
+and PAS (core/pas.py) replaces the current direction with d~ = U^T (C * s)
+before the native-space mapping.  The seed path materialised d~, the native
+direction, and each multiply-add as separate XLA ops with an HBM round-trip
+between the projection and the update; these kernels do the whole step in one
+pass over VMEM-resident tiles of the flattened state.
+
+Two kernels, one coefficient layout:
+
+* ``fused_step``      — the plain multistep update (inactive PAS steps, and
+  every step of an uncorrected sampler).
+* ``fused_pas_step``  — folds the PAS coordinate application (d~ = sum_k
+  cs[b, k] * u[b, k, :]) and the native-space mapping into the same tile pass,
+  emitting (x_next, d~, native) so the history/Q pushes reuse the tile.
+
+Coefficient rows are packed ``[alpha, beta_0 .. beta_{K-1}, t]`` (length K+2,
+see engine/engine.py) so one (N, K+2) table drives the whole trajectory scan.
+The D axis is tiled into ``block_d`` lanes; batch rides whole in each block
+(B is the microbatch, D the flattened sample dim — the huge axis).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+__all__ = ["fused_step", "fused_pas_step"]
+
+_DEF_BLOCK_D = 1024
+
+
+def _step_kernel(coef_ref, x_ref, nat_ref, hist_ref, o_ref, *, k: int):
+    a = coef_ref[0, 0]
+    out = a * x_ref[...] + coef_ref[0, 1] * nat_ref[...]
+    for m in range(1, k):
+        out = out + coef_ref[0, 1 + m] * hist_ref[m - 1]
+    o_ref[...] = out
+
+
+def _pas_step_kernel(coef_ref, x_ref, u_ref, cs_ref, hist_ref,
+                     x_out, d_out, nat_out, *, k: int, native_x0: bool):
+    x = x_ref[...]
+    cs = cs_ref[...]                                   # (B, n_basis)
+    u = u_ref[...]                                     # (B, n_basis, blk)
+    d = jnp.sum(cs[:, :, None] * u, axis=1)            # d~ tile
+    if native_x0:
+        nat = x - coef_ref[0, k + 1] * d               # t is the last slot
+    else:
+        nat = d
+    out = coef_ref[0, 0] * x + coef_ref[0, 1] * nat
+    for m in range(1, k):
+        out = out + coef_ref[0, 1 + m] * hist_ref[m - 1]
+    x_out[...] = out
+    d_out[...] = d
+    nat_out[...] = nat
+
+
+def _pad_d(x: Array, block_d: int) -> tuple[Array, int]:
+    d = x.shape[-1]
+    pad = (-d) % block_d
+    if pad:
+        widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, widths)
+    return x, d
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fused_step(x: Array, nat: Array, hist: Array, coef: Array, *,
+               block_d: int = _DEF_BLOCK_D, interpret: bool = False) -> Array:
+    """x, nat (B, D); hist (H, B, D); coef (K+2,) -> x_next (B, D)."""
+    k = coef.shape[0] - 2
+    b = x.shape[0]
+    h = hist.shape[0]
+    x_p, d = _pad_d(x, block_d)
+    nat_p, _ = _pad_d(nat, block_d)
+    hist_p, _ = _pad_d(hist, block_d)
+    n_blocks = x_p.shape[-1] // block_d
+
+    out = pl.pallas_call(
+        functools.partial(_step_kernel, k=k),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, k + 2), lambda i: (0, 0)),
+            pl.BlockSpec((b, block_d), lambda i: (0, i)),
+            pl.BlockSpec((b, block_d), lambda i: (0, i)),
+            pl.BlockSpec((h, b, block_d), lambda i: (0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((b, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(x_p.shape, x.dtype),
+        interpret=interpret,
+    )(coef.astype(x.dtype)[None], x_p, nat_p, hist_p)
+    return out[..., :d]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("native_x0", "block_d", "interpret"))
+def fused_pas_step(x: Array, u: Array, cs: Array, hist: Array, coef: Array, *,
+                   native_x0: bool = False, block_d: int = _DEF_BLOCK_D,
+                   interpret: bool = False) -> tuple[Array, Array, Array]:
+    """PAS-corrected step in one pass.
+
+    x (B, D); u (B, n_basis, D) orthonormal basis; cs (B, n_basis) coordinates
+    pre-scaled by the per-sample norm (coord_mode folding happens upstream);
+    hist (H, B, D); coef (K+2,).  Returns (x_next, d_tilde, native).
+    """
+    k = coef.shape[0] - 2
+    b, n_basis, _ = u.shape
+    h = hist.shape[0]
+    x_p, d = _pad_d(x, block_d)
+    u_p, _ = _pad_d(u, block_d)
+    hist_p, _ = _pad_d(hist, block_d)
+    n_blocks = x_p.shape[-1] // block_d
+
+    shape = jax.ShapeDtypeStruct(x_p.shape, x.dtype)
+    x_next, d_tilde, nat = pl.pallas_call(
+        functools.partial(_pas_step_kernel, k=k, native_x0=native_x0),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, k + 2), lambda i: (0, 0)),
+            pl.BlockSpec((b, block_d), lambda i: (0, i)),
+            pl.BlockSpec((b, n_basis, block_d), lambda i: (0, 0, i)),
+            pl.BlockSpec((b, n_basis), lambda i: (0, 0)),
+            pl.BlockSpec((h, b, block_d), lambda i: (0, 0, i)),
+        ],
+        out_specs=[pl.BlockSpec((b, block_d), lambda i: (0, i))] * 3,
+        out_shape=[shape, shape, shape],
+        interpret=interpret,
+    )(coef.astype(x.dtype)[None], x_p, u_p, cs.astype(x.dtype), hist_p)
+    return x_next[..., :d], d_tilde[..., :d], nat[..., :d]

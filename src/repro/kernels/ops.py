@@ -12,13 +12,13 @@ from __future__ import annotations
 import os
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 
 Array = jax.Array
 
-__all__ = ["flash_attention", "gram", "rmsnorm", "ssm_scan", "use_pallas"]
+__all__ = ["flash_attention", "fused_pas_step", "fused_step", "gram",
+           "rmsnorm", "ssm_scan", "use_pallas"]
 
 
 def use_pallas() -> bool:
@@ -49,6 +49,27 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
                                        scale=scale)
     return ref.attention(q, k, v, causal=causal, window=window,
                          logits_soft_cap=logits_soft_cap, scale=scale)
+
+
+def fused_step(x: Array, nat: Array, hist: Array, coef: Array, *,
+               interpret: bool = False) -> Array:
+    """Fused multistep update (kernels/fused_step.py); the engine hot path."""
+    if interpret or use_pallas():
+        from . import fused_step as fs
+        return fs.fused_step(x, nat, hist, coef,
+                             interpret=interpret or not use_pallas())
+    return ref.fused_step(x, nat, hist, coef)
+
+
+def fused_pas_step(x: Array, u: Array, cs: Array, hist: Array, coef: Array, *,
+                   native_x0: bool = False, interpret: bool = False
+                   ) -> tuple[Array, Array, Array]:
+    """PAS projection folded into the multistep update (kernels/fused_step.py)."""
+    if interpret or use_pallas():
+        from . import fused_step as fs
+        return fs.fused_pas_step(x, u, cs, hist, coef, native_x0=native_x0,
+                                 interpret=interpret or not use_pallas())
+    return ref.fused_pas_step(x, u, cs, hist, coef, native_x0=native_x0)
 
 
 def gram(x: Array, mask: Array | None = None, *, interpret: bool = False) -> Array:

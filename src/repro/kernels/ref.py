@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-__all__ = ["attention", "gram", "rmsnorm", "ssm_scan"]
+__all__ = ["attention", "fused_pas_step", "fused_step", "gram", "rmsnorm",
+           "ssm_scan"]
 
 _NEG_INF = -1e30
 
@@ -58,6 +59,33 @@ def attention(q: Array, k: Array, v: Array, *, causal: bool = True,
     return out.astype(q.dtype)
 
 
+def fused_step(x: Array, nat: Array, hist: Array, coef: Array) -> Array:
+    """Linear-multistep update x_next = a*x + b0*nat + sum_m b_m*hist[m-1].
+
+    x, nat: (B, D); hist: (H, B, D); coef: (K+2,) packed
+    [alpha, beta_0..beta_{K-1}, t].  Accumulation order matches
+    ``LinearMultistepSolver.phi`` so the engine is bit-compatible with the
+    seed sampling path in float32.
+    """
+    k = coef.shape[0] - 2
+    out = coef[0] * x + coef[1] * nat
+    for m in range(1, k):
+        out = out + coef[1 + m] * hist[m - 1]
+    return out
+
+
+def fused_pas_step(x: Array, u: Array, cs: Array, hist: Array, coef: Array,
+                   *, native_x0: bool = False) -> tuple[Array, Array, Array]:
+    """PAS projection + native mapping + multistep update in one fused graph.
+
+    u: (B, n_basis, D) orthonormal basis rows; cs: (B, n_basis) coordinates
+    already scaled by the per-sample norm.  Returns (x_next, d_tilde, native).
+    """
+    d_tilde = jnp.einsum("bk,bkd->bd", cs, u)
+    nat = x - coef[-1] * d_tilde if native_x0 else d_tilde
+    return fused_step(x, nat, hist, coef), d_tilde, nat
+
+
 def gram(x: Array, mask: Array | None = None) -> Array:
     """G = X X^T in float32. x: (n, D); mask: (n,) row validity."""
     xf = x.astype(jnp.float32)
@@ -90,7 +118,6 @@ def ssm_scan(u: Array, delta: Array, a: Array, b: Array, c: Array,
     associative scan over L (parallel-friendly oracle).
     """
     bsz, ell, di = u.shape
-    n = a.shape[-1]
     uf = u.astype(jnp.float32)
     dt = delta.astype(jnp.float32)
     af = a.astype(jnp.float32)

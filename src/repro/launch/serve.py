@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.core import (PASConfig, calibrate, ground_truth_trajectory,
                         nested_teacher_schedule, two_mode_gmm)
+from repro.engine import engine_cache_stats
 from repro.runtime import DiffusionServer, Request, ServeConfig
 
 
@@ -77,6 +78,9 @@ def main() -> None:
     print(f"served {server.stats['samples']} samples / "
           f"{server.stats['requests']} requests in "
           f"{server.stats['batches']} batches, {server.stats['wall_s']:.2f}s")
+    print(f"engine: {server.engine.name} @ {server.engine.nfe} NFE, "
+          f"{server.engine.compiled_variants()} compiled variant(s), "
+          f"cache {engine_cache_stats()}")
     assert len(outs) == args.requests
     print("OK")
 

@@ -213,7 +213,6 @@ def _decode_plan(cfg: ModelConfig, rules: AxisRules, shape: ShapeCase,
     pspecs_sds = models.param_specs(cfg)
     bspecs = batch_specs(cfg, shape)
     p_part = param_partition_specs(pspecs_sds, rules)
-    b_part = _batch_shardings(bspecs, rules)
 
     # cache specs via an abstract prefill at full cache length
     prefill_tokens = jax.ShapeDtypeStruct(

@@ -8,7 +8,7 @@ S % window == 0, asserted at prefill).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ paper's technique corrects (sigma-FiLM conditioning + eps head).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -22,7 +21,7 @@ from . import moe as moe_mod
 from . import rglru as rglru_mod
 from . import ssm as ssm_mod
 from .layers import (apply_film_cond, apply_mlp, apply_norm, dense_init,
-                     init_film, init_mlp, init_norm, zeros)
+                     init_film, init_mlp, init_norm)
 
 Array = jax.Array
 

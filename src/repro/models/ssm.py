@@ -71,7 +71,6 @@ def _ssm_inputs(p: dict, xc: Array, cfg: ModelConfig):
 def mamba_forward(p: dict, x: Array, cfg: ModelConfig
                   ) -> tuple[Array, MambaState]:
     """x (B, L, E) -> (out (B, L, E), final MambaState)."""
-    di = cfg.d_inner
     xz = x @ p["in_proj"]
     xs, z = jnp.split(xz, 2, axis=-1)
     xs = constrain(xs, "batch", None, "model")

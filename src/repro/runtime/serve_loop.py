@@ -4,6 +4,11 @@ Requests (each: a PRNG seed + sample count) are micro-batched up to
 ``max_batch``; a batch runs the PAS-corrected solver once for all requests.
 The PAS coordinate table (~10 floats) is part of the server state — hot-
 swappable without touching model weights (plug-and-play, paper §3.5).
+
+Sampling goes through the fused ``SamplingEngine`` (repro/engine): the
+coefficient tables are bound once at server construction, every batch reuses
+the same compiled scan, and hot-swapping PAS params only re-specialises the
+corrected prefix (the compiled plain path is untouched).
 """
 from __future__ import annotations
 
@@ -15,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PASConfig, PASParams, pas_sample_trajectory, solvers
+from repro.core import PASConfig, PASParams, solvers
+from repro.engine import engine_for_solver
 
 __all__ = ["ServeConfig", "DiffusionServer", "Request"]
 
@@ -46,6 +52,7 @@ class DiffusionServer:
         self.eps_fn = eps_fn
         ts = polynomial_schedule(cfg.nfe, cfg.t_min, cfg.t_max)
         self.solver = solvers.make_solver(cfg.solver, ts)
+        self.engine = engine_for_solver(self.solver)
         self.pas_params = pas_params
         self.stats = {"requests": 0, "samples": 0, "batches": 0,
                       "nfe_total": 0, "wall_s": 0.0}
@@ -55,12 +62,9 @@ class DiffusionServer:
         self.pas_params = params
 
     def _run_batch(self, x_t: jnp.ndarray) -> jnp.ndarray:
-        if self.cfg.use_pas and self.pas_params is not None \
-                and self.pas_params.active.any():
-            x0, _ = pas_sample_trajectory(self.solver, self.eps_fn, x_t,
-                                          self.pas_params, self.cfg.pas)
-            return x0
-        return solvers.sample(self.solver, self.eps_fn, x_t)
+        params = self.pas_params if self.cfg.use_pas else None
+        return self.engine.sample(self.eps_fn, x_t, params=params,
+                                  cfg=self.cfg.pas)
 
     def serve(self, requests: list[Request]) -> list[np.ndarray]:
         """Micro-batches requests; returns one array of samples per request."""

@@ -1,6 +1,5 @@
 """Checkpointing (integrity, atomicity, resume) + fault-tolerant train loop."""
 import json
-import os
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,11 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.core import distributed, pca
+from repro.core import distributed
+
+# distributed.py wraps steps with top-level jax.shard_map (jax>=0.5)
+pytestmark = pytest.mark.skipif(not hasattr(jax, "shard_map"),
+                                reason="needs jax>=0.5 top-level shard_map")
 
 _COMPARE_SNIPPET = r"""
 import jax, jax.numpy as jnp, numpy as np

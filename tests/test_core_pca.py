@@ -1,9 +1,11 @@
 """PCA/Gram-trick/Schmidt correctness, incl. property-based tests (hypothesis)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import pca
 

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import analytic, pas, schedules, solvers, teleport
+from repro.core import analytic, schedules, solvers, teleport
 
 DIM = 64
 T_MAX, T_MIN = 80.0, 0.002

@@ -7,13 +7,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.kernels import ref
-from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gram import gram
-from repro.kernels.rmsnorm import rmsnorm
-from repro.kernels.ssm_scan import ssm_scan
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import ref  # noqa: E402
+from repro.kernels.flash_attention import flash_attention  # noqa: E402
+from repro.kernels.gram import gram  # noqa: E402
+from repro.kernels.rmsnorm import rmsnorm  # noqa: E402
+from repro.kernels.ssm_scan import ssm_scan  # noqa: E402
 
 
 # ---------------------------------------------------------------------------

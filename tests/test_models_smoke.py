@@ -58,10 +58,14 @@ def test_train_grad_step(arch):
     assert np.isfinite(float(loss))
     flat = jax.tree_util.tree_leaves(grads)
     assert all(np.isfinite(np.asarray(g)).all() for g in flat), arch
-    # sanity: a gradient step reduces loss
-    lr = 0.5
-    new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
-    assert float(loss_fn(new_params)) < float(loss) + 1e-6, arch
+    # sanity: gradients point downhill — some step size must reduce the loss
+    # (a single fixed lr overshoots on the stiffest archs, e.g. gemma3-1b)
+    for lr in (0.5, 0.1, 0.02):
+        new_params = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        if float(loss_fn(new_params)) < float(loss) + 1e-6:
+            break
+    else:
+        pytest.fail(f"{arch}: no step size in (0.5, 0.1, 0.02) reduced loss")
 
 
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)

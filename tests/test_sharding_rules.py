@@ -1,19 +1,15 @@
 """Sharding-rule unit tests: divisibility fallbacks, dedup, param roles."""
-import jax
 import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro import models
 from repro.configs import get_config
-from repro.launch.mesh import make_mesh
-from repro.parallel import AxisRules, axis_rules, param_partition_specs, spec_for
+from repro.parallel import AxisRules, param_partition_specs, spec_for
 
 
 @pytest.fixture(scope="module")
 def rules():
-    mesh = make_mesh((1, 1), ("data", "model"))
-
     class FakeMesh:  # divisibility math only needs .shape
         shape = {"data": 16, "model": 16}
 
