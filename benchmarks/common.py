@@ -1,4 +1,8 @@
-"""Shared benchmark substrate: oracle models, schedules, metrics, artifacts.
+"""Shared benchmark substrate: oracle models, specs/pipelines, metrics,
+artifacts.
+
+All sampler construction goes through ``repro.api`` (SamplerSpec →
+Pipeline); benchmarks never hand-wire make_solver/calibrate/engine lookups.
 
 Offline constraint (DESIGN.md §7): no pretrained EDM checkpoints or image
 datasets exist in this container, so sample quality is measured as L2/L1
@@ -16,8 +20,9 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.core import analytic, pas, schedules, solvers
-from repro.engine import engine_for_solver
+from repro.api import (Pipeline, SamplerSpec, ScheduleSpec, TeacherSpec,
+                       teacher_trajectory)
+from repro.core import analytic, pas
 
 ART = Path(__file__).resolve().parent / "artifacts" / "repro"
 
@@ -36,14 +41,35 @@ def oracle(kind: str = "two_mode"):
     raise ValueError(kind)
 
 
-def calib_eval_sets(gmm, nfe: int, n_calib: int = N_CALIB, n_eval: int = N_EVAL):
-    s_ts, t_ts, m = schedules.nested_teacher_schedule(nfe, TEACHER_NFE,
-                                                      T_MIN, T_MAX)
+def spec_for(solver: str, nfe: int, *, t_min: float = T_MIN,
+             t_max: float = T_MAX, teacher: str = "heun",
+             teacher_nfe: int = TEACHER_NFE,
+             pas_cfg: pas.PASConfig | None = None,
+             dtype: str = "float32") -> SamplerSpec:
+    """The benchmark-default SamplerSpec for one (solver, NFE)."""
+    return SamplerSpec(
+        solver=solver, nfe=nfe,
+        schedule=ScheduleSpec(t_min=t_min, t_max=t_max),
+        dtype=dtype,
+        teacher=TeacherSpec(solver=teacher, nfe=teacher_nfe),
+        pas=pas_cfg if pas_cfg is not None else default_pas_cfg())
+
+
+def pipeline_for(eps_fn, solver: str, nfe: int, **kw) -> Pipeline:
+    return Pipeline.from_spec(spec_for(solver, nfe, **kw), eps_fn, dim=DIM)
+
+
+def calib_eval_sets(gmm, nfe: int, n_calib: int = N_CALIB,
+                    n_eval: int = N_EVAL, teacher: str = "heun",
+                    eps_fn=None):
+    """(student_ts, (x_c, gt_c), (x_e, gt_e)) on the benchmark spec's grids."""
+    eps_fn = eps_fn if eps_fn is not None else gmm.eps
+    spec = spec_for("ddim", nfe, teacher=teacher)
     x_c = gmm.sample_prior(jax.random.key(0), n_calib, T_MAX)
-    gt_c = solvers.ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_c)
+    gt_c = teacher_trajectory(spec, eps_fn, x_c)
     x_e = gmm.sample_prior(jax.random.key(99), n_eval, T_MAX)
-    gt_e = solvers.ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_e)
-    return s_ts, (x_c, gt_c), (x_e, gt_e)
+    gt_e = teacher_trajectory(spec, eps_fn, x_e)
+    return spec.ts(), (x_c, gt_c), (x_e, gt_e)
 
 
 def final_err(x0, gt_end, metric: str = "l2") -> float:
@@ -65,20 +91,22 @@ def run_pas(solver_name: str, nfe: int, gmm=None, cfg=None,
     """Calibrate + evaluate PAS for one (solver, NFE). Returns a result dict."""
     gmm = gmm or oracle()
     cfg = cfg or default_pas_cfg()
-    s_ts, (x_c, gt_c), (x_e, gt_e) = calib_eval_sets(gmm, nfe)
-    sol = solvers.make_solver(solver_name, s_ts)
+    pipe = pipeline_for(gmm.eps, solver_name, nfe, pas_cfg=cfg)
+    x_c = gmm.sample_prior(jax.random.key(0), N_CALIB, T_MAX)
+    gt_c = pipe.teacher_trajectory(x_c)     # teacher solve outside the timer
     t0 = time.time()
-    params, diag = pas.calibrate(sol, gmm.eps, x_c, gt_c, cfg)
+    pipe.calibrate(x_t=x_c, gt=gt_c)
     train_s = time.time() - t0
-    engine = engine_for_solver(sol)
-    x_plain = engine.sample(gmm.eps, x_e)
-    x_pas = engine.sample(gmm.eps, x_e, params=params, cfg=cfg)
+    x_e = gmm.sample_prior(jax.random.key(99), N_EVAL, T_MAX)
+    gt_e = pipe.teacher_trajectory(x_e)
+    x_plain = pipe.sample(x_e, use_pas=False)
+    x_pas = pipe.sample(x_e)
     return {
         "solver": solver_name, "nfe": nfe,
         "err_plain": final_err(x_plain, gt_e[-1], eval_metric),
         "err_pas": final_err(x_pas, gt_e[-1], eval_metric),
-        "corrected_steps": params.corrected_paper_steps(),
-        "n_stored_params": params.n_stored_params,
+        "corrected_steps": pipe.params.corrected_paper_steps(),
+        "n_stored_params": pipe.params.n_stored_params,
         "calib_seconds": round(train_s, 2),
     }
 

@@ -5,8 +5,9 @@ Measures end-to-end samples/sec for a full PAS-corrected trajectory at batch
 
 * ``seed``   — the pre-engine path exactly as the serve loop dispatched it:
   ``solvers.sample`` (plain) / ``pas.pas_sample_trajectory`` (corrected),
-  re-traced on every call;
-* ``engine`` — ``SamplingEngine.sample``: one cached jitted scan with the
+  re-traced on every call (kept as the measured baseline — the one sampling
+  construction that intentionally does NOT go through repro.api);
+* ``engine`` — the ``repro.api`` Pipeline: one cached jitted scan with the
   fused step kernel and the PAS projection folded in.
 
   PYTHONPATH=src python -m benchmarks.engine_throughput [--dry-run]
@@ -19,7 +20,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pas, solvers
-from repro.engine import engine_for_solver
 
 from . import common
 
@@ -49,11 +49,10 @@ def _synthetic_params(n: int) -> pas.PASParams:
 
 def run(dry_run: bool = False) -> list[dict]:
     gmm = common.oracle()
-    s_ts = common.schedules.polynomial_schedule(NFE, common.T_MIN, common.T_MAX)
-    sol = solvers.make_solver(SOLVER, s_ts)
-    engine = engine_for_solver(sol)
+    pipe = common.pipeline_for(gmm.eps, SOLVER, NFE)
+    sol = pipe.solver                       # the seed path's bound solver
     params = _synthetic_params(NFE)
-    cfg = pas.PASConfig()
+    cfg = pipe.spec.pas
 
     batches = (1, 16) if dry_run else (1, 16, 128)
     n_rep = 3 if dry_run else 10
@@ -63,12 +62,12 @@ def run(dry_run: bool = False) -> list[dict]:
         pairs = {
             "plain": (
                 lambda x: solvers.sample(sol, gmm.eps, x),
-                lambda x: engine.sample(gmm.eps, x),
+                lambda x: pipe.sample(x, use_pas=False),
             ),
             "pas": (
                 lambda x: pas.pas_sample_trajectory(
                     sol, gmm.eps, x, params, cfg)[0],
-                lambda x: engine.sample(gmm.eps, x, params=params, cfg=cfg),
+                lambda x: pipe.set_params(params).sample(x),
             ),
         }
         for mode, (seed_fn, engine_fn) in pairs.items():

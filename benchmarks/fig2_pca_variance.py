@@ -8,15 +8,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import pca, schedules, solvers
+from repro.core import pca, solvers
 
 from . import common
 
 
 def run() -> list[dict]:
     gmm = common.oracle()
-    ts = schedules.polynomial_schedule(100, common.T_MIN, common.T_MAX)
-    sol = solvers.make_solver("euler", ts)
+    sol = common.spec_for("euler", 100).make_solver()
     x_t = gmm.sample_prior(jax.random.key(1), 64, common.T_MAX)
     xs, ds = solvers.sample_trajectory(sol, gmm.eps, x_t)
 

@@ -2,7 +2,7 @@
 corrects exactly the high-curvature region (b)."""
 import numpy as np
 
-from repro.core import pas, solvers
+from repro.core.pas import truncation_error_curve
 
 from . import common
 
@@ -10,21 +10,20 @@ from . import common
 def run(nfe: int = 10) -> list[dict]:
     gmm = common.oracle()
     s_ts, (x_c, gt_c), (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
-    sol = solvers.make_solver("ddim", s_ts)
+    pipe = common.pipeline_for(gmm.eps, "ddim", nfe)
 
-    xs_plain, _ = solvers.sample_trajectory(sol, gmm.eps, x_e)
-    err_plain = np.asarray(pas.truncation_error_curve(xs_plain, gt_e))
+    _, xs_plain = pipe.trajectory(x_e, use_pas=False)
+    err_plain = np.asarray(truncation_error_curve(xs_plain, gt_e))
 
-    cfg = common.default_pas_cfg()
-    params, _ = pas.calibrate(sol, gmm.eps, x_c, gt_c, cfg)
-    _, xs_pas = pas.pas_sample_trajectory(sol, gmm.eps, x_e, params, cfg)
-    err_pas = np.asarray(pas.truncation_error_curve(xs_pas, gt_e))
+    pipe.calibrate(x_t=x_c, gt=gt_c)
+    _, xs_pas = pipe.trajectory(x_e)
+    err_pas = np.asarray(truncation_error_curve(xs_pas, gt_e))
 
     rows = [{"step": j, "t": float(s_ts[j]),
              "err_euler": float(err_plain[j]), "err_pas": float(err_pas[j])}
             for j in range(nfe + 1)]
     common.save_table("fig3_truncation", rows, extra={
-        "corrected_steps_paper_index": params.corrected_paper_steps()})
+        "corrected_steps_paper_index": pipe.params.corrected_paper_steps()})
 
     # S-shape: the middle third of steps contributes the bulk of the growth
     third = nfe // 3

@@ -1,7 +1,5 @@
 """Paper Fig. 6 ablations: adaptive search on/off (a), loss function (b),
 number of basis vectors (c), number of calibration trajectories (d)."""
-from repro.core import pas, solvers
-
 from . import common
 
 
@@ -11,18 +9,18 @@ def run(nfe: int = 10) -> list[dict]:
 
     # (a) adaptive search: without it (tolerance=-inf => always correct,
     # no final gate) quality degrades vs with it (paper Fig. 6a / Table 7)
-    s_ts, (x_c, gt_c), (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
-    sol = solvers.make_solver("ddim", s_ts)
+    _, (x_c, gt_c), (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
     for label, cfg in (
         ("PAS", common.default_pas_cfg()),
         ("PAS(-AS)", common.default_pas_cfg(tolerance=-1e9, final_gate=False,
                                             val_fraction=0.0)),
     ):
-        params, _ = pas.calibrate(sol, gmm.eps, x_c, gt_c, cfg)
-        x0, _ = pas.pas_sample_trajectory(sol, gmm.eps, x_e, params, cfg)
+        pipe = common.pipeline_for(gmm.eps, "ddim", nfe, pas_cfg=cfg)
+        pipe.calibrate(x_t=x_c, gt=gt_c)
+        x0, _ = pipe.trajectory(x_e)
         rows.append({"panel": "a_adaptive_search", "method": label, "nfe": nfe,
                      "err_l2": common.final_err(x0, gt_e[-1]),
-                     "n_corrected": int(params.active.sum())})
+                     "n_corrected": int(pipe.params.active.sum())})
 
     # (b) loss functions
     for loss in ("l1", "l2", "pseudo_huber"):
@@ -38,12 +36,11 @@ def run(nfe: int = 10) -> list[dict]:
 
     # (d) number of calibration trajectories
     for n_traj in (64, 128, 256, 512):
-        cfg = common.default_pas_cfg()
-        s_ts, (x_c, gt_c), (x_e2, gt_e2) = common.calib_eval_sets(
+        _, (x_c, gt_c), (x_e2, gt_e2) = common.calib_eval_sets(
             gmm, nfe, n_calib=n_traj)
-        sol = solvers.make_solver("ddim", s_ts)
-        params, _ = pas.calibrate(sol, gmm.eps, x_c, gt_c, cfg)
-        x0, _ = pas.pas_sample_trajectory(sol, gmm.eps, x_e2, params, cfg)
+        pipe = common.pipeline_for(gmm.eps, "ddim", nfe)
+        pipe.calibrate(x_t=x_c, gt=gt_c)
+        x0, _ = pipe.trajectory(x_e2)
         rows.append({"panel": "d_n_trajectories", "n_traj": n_traj, "nfe": nfe,
                      "err_l2": common.final_err(x0, gt_e2[-1])})
 

@@ -6,7 +6,6 @@ eps_theta with approximation error (the paper's real-world claim)."""
 import jax
 import jax.numpy as jnp
 
-from repro.core import pas, schedules, solvers
 from repro.diffusion import (EDMConfig, edm_loss, eps_from_denoiser, init_denoiser,
                              precondition, raw_apply)
 from repro.optim import AdamW
@@ -46,25 +45,19 @@ def run(nfe: int = 10) -> list[dict]:
     gmm = common.oracle()
     eps_fn, train_loss = train_denoiser(gmm)
 
-    s_ts, t_ts, m = schedules.nested_teacher_schedule(
-        nfe, common.TEACHER_NFE, common.T_MIN, common.T_MAX)
-    x_c = gmm.sample_prior(jax.random.key(0), common.N_CALIB, common.T_MAX)
-    gt_c = solvers.ground_truth_trajectory(eps_fn, s_ts, t_ts, m, x_c)
-    x_e = gmm.sample_prior(jax.random.key(99), common.N_EVAL, common.T_MAX)
-    gt_e = solvers.ground_truth_trajectory(eps_fn, s_ts, t_ts, m, x_e)
-
-    cfg = common.default_pas_cfg()
-    sol = solvers.make_solver("ddim", s_ts)
-    params, diag = pas.calibrate(sol, eps_fn, x_c, gt_c, cfg)
-    x_plain = solvers.sample(sol, eps_fn, x_e)
-    x_pas, _ = pas.pas_sample_trajectory(sol, eps_fn, x_e, params, cfg)
+    _, (x_c, gt_c), (x_e, gt_e) = common.calib_eval_sets(gmm, nfe,
+                                                         eps_fn=eps_fn)
+    pipe = common.pipeline_for(eps_fn, "ddim", nfe)
+    pipe.calibrate(x_t=x_c, gt=gt_c)
+    x_plain = pipe.sample(x_e, use_pas=False)
+    x_pas, _ = pipe.trajectory(x_e)
 
     rows = [{
         "model": "learned-mlp-edm", "nfe": nfe, "edm_train_loss": train_loss,
         "err_plain": common.final_err(x_plain, gt_e[-1]),
         "err_pas": common.final_err(x_pas, gt_e[-1]),
-        "corrected_steps": params.corrected_paper_steps(),
-        "n_stored_params": params.n_stored_params,
+        "corrected_steps": pipe.params.corrected_paper_steps(),
+        "n_stored_params": pipe.params.n_stored_params,
     }]
     common.save_table("learned_denoiser", rows)
     assert rows[0]["err_pas"] < rows[0]["err_plain"] * 0.7, rows

@@ -26,8 +26,7 @@ from . import common
 
 def _fused_step_rows(d: int, batch: int = 16) -> list[dict]:
     """Fused engine step vs the seed's unfused phi for one ipndm3 update."""
-    ts = jax.numpy.linspace(80.0, 0.002, 11)
-    sol = solvers.make_solver("ipndm3", jax.device_get(ts))
+    sol = common.spec_for("ipndm3", 10).make_solver()
     x = jax.random.normal(jax.random.key(0), (batch, d))
     dvec = jax.random.normal(jax.random.key(1), (batch, d))
     hist = jax.random.normal(jax.random.key(2), (2, batch, d))

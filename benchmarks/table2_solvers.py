@@ -9,8 +9,8 @@ iPNDM > iPNDM+PAS (small); +TP improves both; TP+PAS best.
 """
 import jax
 
-from repro.core import pas, solvers, teleport
-from repro.engine import engine_for_solver, get_engine
+from repro.api import Pipeline
+from repro.core import teleport
 
 from . import common
 
@@ -19,24 +19,17 @@ def _tp_eval(gmm, solver_name, nfe, with_pas, cfg):
     """DDIM+TP(+PAS): teleport to sigma_skip=10 then solve with full budget."""
     data = gmm.sample_data(jax.random.key(5), 4096)
     stats = teleport.gaussian_stats_from_data(data)
-    tp_ts = teleport.tp_schedule(nfe, sigma_skip=10.0, t_min=common.T_MIN)
-    sol = solvers.make_solver(solver_name, tp_ts)
 
-    s_ts, (x_c, gt_c), (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
+    _, (x_c, _), (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
     x_c_skip = teleport.teleport(stats, x_c, common.T_MAX, 10.0)
     x_e_skip = teleport.teleport(stats, x_e, common.T_MAX, 10.0)
 
-    engine = engine_for_solver(sol)
+    # post-teleport spec: the full NFE budget on [t_min, sigma_skip]
+    spec = common.spec_for(solver_name, nfe, t_max=10.0, pas_cfg=cfg)
+    pipe = Pipeline.from_spec(spec, gmm.eps, dim=common.DIM)
     if with_pas:
-        # teacher trajectory along the post-TP schedule
-        from repro.core import schedules
-        s2, t_ts2, m2 = schedules.nested_teacher_schedule(
-            nfe, common.TEACHER_NFE, common.T_MIN, 10.0)
-        gt_c2 = solvers.ground_truth_trajectory(gmm.eps, s2, t_ts2, m2, x_c_skip)
-        params, _ = pas.calibrate(sol, gmm.eps, x_c_skip, gt_c2, cfg)
-        x0 = engine.sample(gmm.eps, x_e_skip, params=params, cfg=cfg)
-    else:
-        x0 = engine.sample(gmm.eps, x_e_skip)
+        pipe.calibrate(x_t=x_c_skip)   # teacher runs on the post-TP schedule
+    x0 = pipe.sample(x_e_skip, use_pas=with_pas)
     return common.final_err(x0, gt_e[-1])
 
 
@@ -45,23 +38,20 @@ def run(nfes=(5, 6, 8, 10)) -> list[dict]:
     cfg = common.default_pas_cfg()
     rows = []
     for nfe in nfes:
-        s_ts, _, (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
-        # training-free baselines (each engine binding is cached by schedule)
+        _, _, (x_e, gt_e) = common.calib_eval_sets(gmm, nfe)
+        # training-free baselines (each spec binding is engine-cached)
         for name in ("ddim", "dpmpp2m", "deis3", "ipndm3", "ipndm2"):
-            engine = get_engine(name, s_ts)
+            pipe = common.pipeline_for(gmm.eps, name, nfe)
             rows.append({"method": name, "nfe": nfe,
                          "err_l2": common.final_err(
-                             engine.sample(gmm.eps, x_e), gt_e[-1])})
+                             pipe.sample(x_e), gt_e[-1])})
         # 2-eval solvers at matched NFE budget
         if nfe % 2 == 0:
-            from repro.core import schedules
-            half = schedules.polynomial_schedule(nfe // 2, common.T_MIN,
-                                                 common.T_MAX)
             for name in ("heun", "dpm2"):
-                engine = get_engine(name, half)
+                pipe = common.pipeline_for(gmm.eps, name, nfe // 2)
                 rows.append({"method": name, "nfe": nfe,
                              "err_l2": common.final_err(
-                                 engine.sample(gmm.eps, x_e), gt_e[-1])})
+                                 pipe.sample(x_e), gt_e[-1])})
         # PAS-corrected
         for name in ("ddim", "ipndm3"):
             r = common.run_pas(name, nfe, gmm, cfg)

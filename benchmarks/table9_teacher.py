@@ -2,8 +2,6 @@
 matters (any ~100-NFE solve approximates the true trajectory well)."""
 import jax
 
-from repro.core import pas, schedules, solvers
-
 from . import common
 
 
@@ -11,24 +9,21 @@ def run(nfe: int = 10) -> list[dict]:
     gmm = common.oracle()
     cfg = common.default_pas_cfg()
     rows = []
+    # eval gt always from heun; hoisted — only the calibration teacher is swept
+    _, _, (x_e, gt_e) = common.calib_eval_sets(gmm, nfe, teacher="heun")
+    x_c = gmm.sample_prior(jax.random.key(0), common.N_CALIB, common.T_MAX)
     for teacher in ("heun", "euler", "dpm2"):
-        s_ts, t_ts, m = schedules.nested_teacher_schedule(
-            nfe, common.TEACHER_NFE, common.T_MIN, common.T_MAX)
-        x_c = gmm.sample_prior(jax.random.key(0), common.N_CALIB, common.T_MAX)
-        gt_c = solvers.ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_c,
-                                               teacher=teacher)
-        x_e = gmm.sample_prior(jax.random.key(99), common.N_EVAL, common.T_MAX)
-        gt_e = solvers.ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_e,
-                                               teacher="heun")
-        sol = solvers.make_solver("ddim", s_ts)
-        err_plain = common.final_err(solvers.sample(sol, gmm.eps, x_e),
+        pipe = common.pipeline_for(gmm.eps, "ddim", nfe, teacher=teacher,
+                                   pas_cfg=cfg)
+        gt_c = pipe.teacher_trajectory(x_c)     # swept-teacher calibration gt
+        err_plain = common.final_err(pipe.sample(x_e, use_pas=False),
                                      gt_e[-1])
-        params, _ = pas.calibrate(sol, gmm.eps, x_c, gt_c, cfg)
-        x0, _ = pas.pas_sample_trajectory(sol, gmm.eps, x_e, params, cfg)
+        pipe.calibrate(x_t=x_c, gt=gt_c)
+        x0, _ = pipe.trajectory(x_e)
         rows.append({"teacher": teacher, "nfe": nfe,
                      "err_plain": err_plain,
                      "err_pas": common.final_err(x0, gt_e[-1]),
-                     "corrected_steps": params.corrected_paper_steps()})
+                     "corrected_steps": pipe.params.corrected_paper_steps()})
     common.save_table("table9_teacher", rows)
     # paper Table 9: every ~100-NFE teacher yields a large PAS gain; the
     # second-order teachers (heun/dpm2) agree closely, euler slightly behind

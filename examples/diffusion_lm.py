@@ -12,10 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import models
+from repro.api import PASConfig, Pipeline, SamplerSpec, TeacherSpec
 from repro.configs import get_config
-from repro.core import (PASConfig, calibrate, nested_teacher_schedule,
-                        make_solver, ground_truth_trajectory,
-                        pas_sample_trajectory, sample)
 from repro.diffusion import EDMConfig, eps_from_denoiser, precondition
 
 SEQ = 32
@@ -43,21 +41,19 @@ def main():
     denoiser = precondition(raw_fn, EDMConfig(sigma_data=1.0))
     eps_fn = jax.jit(eps_from_denoiser(denoiser))
 
-    s_ts, t_ts, m = nested_teacher_schedule(NFE, 64, 0.002, 80.0)
-    solver = make_solver("ddim", s_ts)
-    x_c = 80.0 * jax.random.normal(jax.random.key(1), (32, d_state))
-    gt = ground_truth_trajectory(eps_fn, s_ts, t_ts, m, x_c)
-
-    pas_cfg = PASConfig(n_sgd_iters=100, val_fraction=0.25)
-    pas_params, diag = calibrate(solver, eps_fn, x_c, gt, pas_cfg)
-    print(f"corrected steps: {pas_params.corrected_paper_steps()} "
-          f"({pas_params.n_stored_params} params)")
+    spec = SamplerSpec(solver="ddim", nfe=NFE,
+                       teacher=TeacherSpec(solver="heun", nfe=64),
+                       pas=PASConfig(n_sgd_iters=100, val_fraction=0.25))
+    pipe = Pipeline.from_spec(spec, eps_fn, dim=d_state)
+    pipe.calibrate(key=jax.random.key(1), batch=32)
+    print(f"corrected steps: {pipe.params.corrected_paper_steps()} "
+          f"({pipe.params.n_stored_params} params)")
 
     x_e = 80.0 * jax.random.normal(jax.random.key(2), (16, d_state))
-    gt_e = ground_truth_trajectory(eps_fn, s_ts, t_ts, m, x_e)
+    gt_e = pipe.teacher_trajectory(x_e)
     err = lambda x: float(jnp.mean(jnp.linalg.norm(x - gt_e[-1], axis=-1)))
-    e0 = err(sample(solver, eps_fn, x_e))
-    e1 = err(pas_sample_trajectory(solver, eps_fn, x_e, pas_params, pas_cfg)[0])
+    e0 = err(pipe.sample(x_e, use_pas=False))
+    e1 = err(pipe.sample(x_e))
     print(f"DDIM err {e0:.4f} -> +PAS {e1:.4f}")
     print("OK" if e1 <= e0 * 1.01 else "WARN: no gain on this random model")
 

@@ -1,50 +1,64 @@
-"""Quickstart: PAS in ~60 seconds on CPU.
+"""Quickstart: PAS in ~60 seconds on CPU, through the public repro.api.
 
-Calibrates PCA-based Adaptive Search (paper Alg. 1) for a 10-NFE DDIM sampler
-against a 100-NFE teacher, then samples with the learned ~10 parameters
-(Alg. 2) through the fused SamplingEngine and reports the truncation-error
-reduction on held-out noise.
+One spec, one pipeline: calibrate PCA-based Adaptive Search (paper Alg. 1)
+for a 10-NFE DDIM sampler against a 100-NFE teacher, sample with the learned
+~10 parameters (Alg. 2) through the fused SamplingEngine, report the
+truncation-error reduction on held-out noise — then make the paper's storage
+claim literal: save the calibrated sampler as a ~10-float PASArtifact and
+reload it bit-for-bit.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import (PASConfig, calibrate, nested_teacher_schedule,
-                        make_solver, ground_truth_trajectory, two_mode_gmm)
-from repro.engine import engine_for_solver
+from repro.api import PASConfig, Pipeline, SamplerSpec, TeacherSpec
+from repro.core import two_mode_gmm
 
 DIM, NFE = 64, 10
 
 
 def main():
     gmm = two_mode_gmm(DIM, sep=6.0, var=0.25)        # exact eps(x, t) oracle
-    s_ts, t_ts, m = nested_teacher_schedule(NFE, 100, 0.002, 80.0)
-    solver = make_solver("ddim", s_ts)
+
+    spec = SamplerSpec(
+        solver="ddim", nfe=NFE,
+        teacher=TeacherSpec(solver="heun", nfe=100),
+        pas=PASConfig(lr=1e-2, n_sgd_iters=300, tolerance=1e-4, loss="l1",
+                      val_fraction=0.25))
+    pipe = Pipeline.from_spec(spec, gmm.eps, dim=DIM)
 
     print(f"== PAS quickstart: DDIM @ {NFE} NFE, D={DIM} ==")
-    x_calib = gmm.sample_prior(jax.random.key(0), 512, 80.0)
-    gt = ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_calib)
-
-    cfg = PASConfig(lr=1e-2, n_sgd_iters=300, tolerance=1e-4, loss="l1",
-                    val_fraction=0.25)
-    params, diag = calibrate(solver, gmm.eps, x_calib, gt, cfg)
-    print(f"corrected steps (paper index i): {params.corrected_paper_steps()}")
-    print(f"stored parameters: {params.n_stored_params} "
+    pipe.calibrate(key=jax.random.key(0), batch=512)
+    print(f"corrected steps (paper index i): "
+          f"{pipe.params.corrected_paper_steps()}")
+    print(f"stored parameters: {pipe.params.n_stored_params} "
           f"(~10, as the title promises)")
 
     x_eval = gmm.sample_prior(jax.random.key(99), 256, 80.0)
-    gt_eval = ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_eval)
+    gt_eval = pipe.teacher_trajectory(x_eval)
     err = lambda x: float(jnp.mean(jnp.linalg.norm(x - gt_eval[-1], axis=-1)))
 
-    # one engine, one entry point: plain and corrected are the same scan
-    engine = engine_for_solver(solver)
-    x_plain = engine.sample(gmm.eps, x_eval)
-    x_pas = engine.sample(gmm.eps, x_eval, params=params, cfg=cfg)
+    # one pipeline, one entry point: plain and corrected are the same scan
+    x_plain = pipe.sample(x_eval, use_pas=False)
+    x_pas = pipe.sample(x_eval)
     e0, e1 = err(x_plain), err(x_pas)
     print(f"final L2 to teacher  DDIM: {e0:.4f}   DDIM+PAS: {e1:.4f} "
           f"({e0 / max(e1, 1e-9):.1f}x better)")
     assert e1 < e0
+
+    # the storage claim, literally: a calibrated sampler is a ~10-float file
+    with tempfile.TemporaryDirectory() as d:
+        pipe.save(d)
+        pipe2 = Pipeline.load(d, gmm.eps, dim=DIM)
+        assert pipe2.spec == spec
+        x_loaded = pipe2.sample(x_eval)
+        assert np.array_equal(np.asarray(x_loaded), np.asarray(x_pas))
+        print(f"artifact round-trip: {pipe2.params.n_stored_params} params "
+              f"reloaded, samples bit-identical")
     print("OK")
 
 

@@ -1,7 +1,9 @@
 """Serving driver (the paper's kind): batched diffusion sampling requests
-through the DiffusionServer, with hot-swappable PAS correction.
+through the DiffusionServer, with hot-swappable PAS correction — all built
+through the repro.api Pipeline.
 
   PYTHONPATH=src python examples/serve_diffusion.py [--nfe 10] [--no-pas]
+      [--artifact-dir DIR]
 """
 import argparse
 
@@ -9,8 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (PASConfig, calibrate, nested_teacher_schedule,
-                        ground_truth_trajectory, two_mode_gmm)
+from repro.api import PASArtifact, PASConfig, Pipeline
+from repro.core import two_mode_gmm
 from repro.runtime import DiffusionServer, Request, ServeConfig
 
 DIM = 64
@@ -21,23 +23,32 @@ def main():
     ap.add_argument("--nfe", type=int, default=10)
     ap.add_argument("--no-pas", action="store_true")
     ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--artifact-dir", default=None,
+                    help="save/load the calibrated PASArtifact here")
     args = ap.parse_args()
 
     gmm = two_mode_gmm(DIM, sep=6.0, var=0.25)
     cfg = ServeConfig(nfe=args.nfe, use_pas=not args.no_pas, max_batch=128,
                       pas=PASConfig(val_fraction=0.25))
-    server = DiffusionServer(gmm.eps, DIM, cfg)
 
-    if not args.no_pas:
+    if args.no_pas:
+        server = DiffusionServer(gmm.eps, DIM, cfg)
+    elif args.artifact_dir and PASArtifact.exists(args.artifact_dir):
+        pipe = Pipeline.load(args.artifact_dir, gmm.eps, dim=DIM,
+                             expected_spec=cfg.to_spec())
+        server = DiffusionServer.from_pipeline(pipe, cfg)
+        print(f"PAS artifact loaded: steps "
+              f"{pipe.params.corrected_paper_steps()}, "
+              f"{pipe.params.n_stored_params} stored params")
+    else:
         # offline calibration: sub-minute, ~10 parameters (paper §3.5)
-        s_ts, t_ts, m = nested_teacher_schedule(args.nfe, 100, cfg.t_min,
-                                                cfg.t_max)
-        x_c = gmm.sample_prior(jax.random.key(0), 512, cfg.t_max)
-        gt = ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_c)
-        pas_params, _ = calibrate(server.solver, gmm.eps, x_c, gt, cfg.pas)
-        server.set_pas(pas_params)
-        print(f"PAS hot-swapped: steps {pas_params.corrected_paper_steps()}, "
-              f"{pas_params.n_stored_params} stored params")
+        pipe = Pipeline.from_spec(cfg.to_spec(), gmm.eps, dim=DIM)
+        pipe.calibrate(x_t=gmm.sample_prior(jax.random.key(0), 512, cfg.t_max))
+        server = DiffusionServer.from_pipeline(pipe, cfg)
+        print(f"PAS hot-swapped: steps {pipe.params.corrected_paper_steps()}, "
+              f"{pipe.params.n_stored_params} stored params")
+        if args.artifact_dir:
+            print(f"PAS artifact saved to {pipe.save(args.artifact_dir)}")
 
     reqs = [Request(seed=i, n_samples=8 + 8 * (i % 3))
             for i in range(args.requests)]
@@ -45,10 +56,9 @@ def main():
     assert len(outs) == len(reqs)
 
     # quality report vs the teacher endpoint for the first request
-    s_ts, t_ts, m = nested_teacher_schedule(args.nfe, 100, cfg.t_min, cfg.t_max)
     x_t = cfg.t_max * jax.random.normal(jax.random.key(reqs[0].seed),
                                         (reqs[0].n_samples, DIM))
-    gt = ground_truth_trajectory(gmm.eps, s_ts, t_ts, m, x_t)
+    gt = server.pipeline.teacher_trajectory(x_t)
     err = float(jnp.mean(jnp.linalg.norm(outs[0] - np.asarray(gt[-1]), axis=-1)))
     print(f"served {server.stats['samples']} samples in "
           f"{server.stats['batches']} batches "

@@ -10,9 +10,8 @@ import tempfile
 import jax
 import jax.numpy as jnp
 
-from repro.core import (PASConfig, calibrate, nested_teacher_schedule,
-                        pas_sample_trajectory, sample, make_solver,
-                        ground_truth_trajectory, two_mode_gmm)
+from repro.api import PASConfig, Pipeline, SamplerSpec
+from repro.core import two_mode_gmm
 from repro.diffusion import (EDMConfig, edm_loss, eps_from_denoiser,
                              init_denoiser, precondition, raw_apply)
 from repro.optim import AdamW, warmup_cosine
@@ -63,23 +62,21 @@ def main():
           f"loss {summary['history'][0]['ce_loss']:.3f} -> "
           f"{summary['history'][-1]['ce_loss']:.3f}; ckpts in {ckpt_dir}")
 
-    # PAS on the learned model
+    # PAS on the learned model, through the public api
     den = precondition(lambda x, c: raw_apply(params, x, c), edm_cfg)
     eps_fn = eps_from_denoiser(den)
-    s_ts, t_ts, m = nested_teacher_schedule(10, 100, 0.002, 80.0)
-    solver = make_solver("ddim", s_ts)
-    x_c = gmm.sample_prior(jax.random.key(1), 256, 80.0)
-    gt = ground_truth_trajectory(eps_fn, s_ts, t_ts, m, x_c)
-    pas_cfg = PASConfig(val_fraction=0.25)
-    pas_params, _ = calibrate(solver, eps_fn, x_c, gt, pas_cfg)
+    spec = SamplerSpec(solver="ddim", nfe=10,
+                       pas=PASConfig(val_fraction=0.25))
+    pipe = Pipeline.from_spec(spec, eps_fn, dim=DIM)
+    pipe.calibrate(key=jax.random.key(1), batch=256)
 
     x_e = gmm.sample_prior(jax.random.key(2), 256, 80.0)
-    gt_e = ground_truth_trajectory(eps_fn, s_ts, t_ts, m, x_e)
+    gt_e = pipe.teacher_trajectory(x_e)
     err = lambda x: float(jnp.mean(jnp.linalg.norm(x - gt_e[-1], axis=-1)))
-    e0 = err(sample(solver, eps_fn, x_e))
-    e1 = err(pas_sample_trajectory(solver, eps_fn, x_e, pas_params, pas_cfg)[0])
+    e0 = err(pipe.sample(x_e, use_pas=False))
+    e1 = err(pipe.sample(x_e))
     print(f"learned-model DDIM err {e0:.4f} -> +PAS {e1:.4f} "
-          f"(steps {pas_params.corrected_paper_steps()})")
+          f"(steps {pipe.params.corrected_paper_steps()})")
     print("OK")
 
 

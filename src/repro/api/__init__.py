@@ -1,0 +1,25 @@
+"""repro.api — the public surface: SamplerSpec → Pipeline → PASArtifact.
+
+Everything downstream (launchers, serving, examples, benchmarks) builds PAS
+samplers through this package; the per-module wiring underneath
+(``repro.core`` / ``repro.engine``) is internal.
+"""
+
+from repro.core.pas import PASConfig, PASParams
+
+from .artifact import (ARTIFACT_DIRNAME, ARTIFACT_VERSION, ArtifactError,
+                       PASArtifact)
+from .pipeline import Pipeline, teacher_trajectory
+from .spec import (SamplerSpec, ScheduleSpec, TeacherSpec, register_schedule,
+                   register_solver, register_teacher, schedule_kinds,
+                   solver_names, spec_from_schedule, teacher_names)
+
+__all__ = [
+    "SamplerSpec", "ScheduleSpec", "TeacherSpec",
+    "Pipeline", "teacher_trajectory",
+    "PASArtifact", "ArtifactError", "ARTIFACT_VERSION", "ARTIFACT_DIRNAME",
+    "PASConfig", "PASParams",
+    "register_solver", "register_schedule", "register_teacher",
+    "solver_names", "schedule_kinds", "teacher_names",
+    "spec_from_schedule",
+]

@@ -1,0 +1,128 @@
+"""PASArtifact: the paper's ~10 learned floats as a durable, versioned file.
+
+An artifact is the triple ``(SamplerSpec, PASParams, calibration diag)``
+persisted under ``<dir>/pas_artifact/`` through the ``repro.checkpoint``
+primitives — per-leaf sha256 checksums, atomic rename commit — so a
+calibrated sampler becomes a hot-swappable file a few hundred bytes of
+payload large.  Loading re-verifies checksums (tampering raises) and the
+spec header round-trips exactly, so ``Pipeline.load(dir, eps_fn)`` rebuilds
+a sampler whose output is bit-identical to the in-memory calibrated one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointError, latest_step, restore, save
+from repro.core.pas import PASParams
+
+from .spec import SamplerSpec
+
+__all__ = ["PASArtifact", "ArtifactError", "ARTIFACT_VERSION",
+           "ARTIFACT_DIRNAME"]
+
+ARTIFACT_VERSION = 1
+ARTIFACT_DIRNAME = "pas_artifact"
+_FORMAT = "pas-artifact"
+
+
+class ArtifactError(CheckpointError):
+    pass
+
+
+def _jsonable(obj: Any) -> Any:
+    """Best-effort conversion of calibration diagnostics to JSON types."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.generic,)):
+        return obj.item()
+    if isinstance(obj, (np.ndarray, jax.Array)):
+        return np.asarray(obj).tolist()
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return str(obj)
+
+
+@dataclasses.dataclass(frozen=True)
+class PASArtifact:
+    """(spec, params, diag) with save/load under ``<dir>/pas_artifact/``."""
+
+    spec: SamplerSpec
+    params: PASParams
+    diag: dict = dataclasses.field(default_factory=dict)
+
+    # -- paths -------------------------------------------------------------
+
+    @staticmethod
+    def root(base_dir: str | Path) -> Path:
+        return Path(base_dir) / ARTIFACT_DIRNAME
+
+    @staticmethod
+    def exists(base_dir: str | Path) -> bool:
+        d = PASArtifact.root(base_dir)
+        return d.is_dir() and latest_step(d) is not None
+
+    # -- save / load -------------------------------------------------------
+
+    def save(self, base_dir: str | Path) -> Path:
+        """Checksummed, atomically-committed write. Returns the payload dir."""
+        tree = {
+            "active": np.asarray(self.params.active, bool),
+            "coords": np.asarray(self.params.coords),
+        }
+        extra = {
+            "format": _FORMAT,
+            "version": ARTIFACT_VERSION,
+            "spec": self.spec.to_dict(),
+            "diag": _jsonable(self.diag),
+            "n_stored_params": int(self.params.n_stored_params),
+        }
+        return save(self.root(base_dir), step=0, tree=tree, extra=extra)
+
+    @classmethod
+    def load(cls, base_dir: str | Path,
+             expected_spec: SamplerSpec | None = None) -> "PASArtifact":
+        """Load + verify. Raises ``ArtifactError`` on a missing/foreign/
+        version-incompatible artifact and ``CheckpointError`` on corruption."""
+        d = cls.root(base_dir)
+        step = latest_step(d) if d.is_dir() else None
+        if step is None:
+            raise ArtifactError(f"no PAS artifact under {d}")
+        manifest = json.loads(
+            (d / f"step_{step:08d}" / "manifest.json").read_text())
+        extra = manifest.get("extra", {})
+        if extra.get("format") != _FORMAT:
+            raise ArtifactError(f"{d} is not a PAS artifact "
+                                f"(format={extra.get('format')!r})")
+        if extra.get("version") != ARTIFACT_VERSION:
+            raise ArtifactError(
+                f"unsupported artifact version {extra.get('version')!r} "
+                f"(this build reads version {ARTIFACT_VERSION})")
+        spec = SamplerSpec.from_dict(extra["spec"])
+        if expected_spec is not None and spec != expected_spec:
+            raise ArtifactError(
+                f"artifact spec does not match the expected spec:\n"
+                f"  artifact: {spec.to_json()}\n"
+                f"  expected: {expected_spec.to_json()}")
+
+        # shapes/dtypes come from the manifest itself, so the payload
+        # round-trips bit-exactly whatever dtype it was calibrated in
+        metas = sorted(manifest["leaves"].values(), key=lambda v: v["index"])
+        like = {
+            "active": jax.ShapeDtypeStruct(tuple(metas[0]["shape"]),
+                                           jnp.dtype(metas[0]["dtype"])),
+            "coords": jax.ShapeDtypeStruct(tuple(metas[1]["shape"]),
+                                           jnp.dtype(metas[1]["dtype"])),
+        }
+        tree, _ = restore(d, like, step=step, verify=True)
+        params = PASParams(active=np.asarray(tree["active"], bool),
+                           coords=tree["coords"])
+        return cls(spec=spec, params=params, diag=extra.get("diag", {}))

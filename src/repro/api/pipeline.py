@@ -1,0 +1,191 @@
+"""Pipeline: solver + schedule + correction as one object.
+
+``Pipeline.from_spec(spec, eps_fn)`` is the repo's single public entry point
+for PAS sampling.  It owns the fused ``SamplingEngine`` binding (shared
+through the spec-keyed engine cache), runs calibration (paper Algorithm 1)
+against the spec's teacher in one call, samples through the engine (Algorithm
+2 folded into the fused kernels), and persists/restores the learned ~10
+floats as a ``PASArtifact``:
+
+    spec = SamplerSpec(solver="ddim", nfe=10)
+    pipe = Pipeline.from_spec(spec, eps_fn, dim=D)
+    pipe.calibrate(key=jax.random.key(0), batch=512)
+    x0 = pipe.sample(key=jax.random.key(1), batch=64)
+    pipe.save(run_dir)                       # ~10 floats + spec, checksummed
+    pipe2 = Pipeline.load(run_dir, eps_fn)   # bit-identical sampler
+
+The old per-module wiring (``make_solver`` → ``ground_truth_trajectory`` →
+``calibrate`` → ``engine_for_solver``) remains available but is internal;
+new call sites should go through this module.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Callable, Optional
+
+import jax
+
+from repro.core import pas as pas_mod
+from repro.core import solvers as solvers_mod
+from repro.core.pas import PASParams
+from repro.engine import get_engine_for_spec
+
+from .artifact import PASArtifact
+from .spec import SamplerSpec
+
+Array = jax.Array
+EpsFn = Callable[[Array, Array], Array]
+
+__all__ = ["Pipeline", "teacher_trajectory"]
+
+
+def teacher_trajectory(spec: SamplerSpec, eps_fn: EpsFn, x_t: Array) -> Array:
+    """Ground-truth trajectory on the spec's nested teacher grid (§3.3).
+
+    Runs the registry-resolved ``spec.teacher`` on the refined grid and
+    indexes every (M+1)-th state; returns gt (N+1, B, D) aligned to the
+    student grid, gt[0] = x_t.
+    """
+    s_ts, t_ts, m = spec.teacher_grid()
+    return solvers_mod.ground_truth_trajectory(
+        eps_fn, s_ts, t_ts, m, x_t, teacher=spec.make_teacher(t_ts))
+
+
+class Pipeline:
+    """A spec-bound sampler: calibrate once, sample forever, save ~10 floats."""
+
+    def __init__(self, spec: SamplerSpec, eps_fn: EpsFn,
+                 dim: Optional[int] = None,
+                 params: Optional[PASParams] = None,
+                 diag: Optional[dict] = None):
+        self.spec = spec
+        self.eps_fn = eps_fn
+        self.dim = dim
+        self.params = params
+        self.diag = diag or {}
+        self.engine = get_engine_for_spec(spec)
+        self.solver = self.engine.solver
+
+    @classmethod
+    def from_spec(cls, spec: SamplerSpec, eps_fn: EpsFn,
+                  dim: Optional[int] = None) -> "Pipeline":
+        """Bind a spec to an eps model. ``dim`` enables key-based sampling."""
+        return cls(spec, eps_fn, dim=dim)
+
+    # -- state -------------------------------------------------------------
+
+    @property
+    def calibrated(self) -> bool:
+        return self.params is not None
+
+    def set_params(self, params: Optional[PASParams],
+                   diag: Optional[dict] = None) -> "Pipeline":
+        """Hot-swap the learned coordinates (no recompilation of the plain
+        path; the corrected prefix re-specialises per active pattern)."""
+        self.params = params
+        self.diag = diag or {}
+        return self
+
+    def prior(self, key: Array, batch: int) -> Array:
+        """x_T ~ N(0, T^2 I) at the spec's t_max (EDM prior convention)."""
+        if self.dim is None:
+            raise ValueError(
+                "Pipeline needs dim for key-based sampling; pass dim= to "
+                "from_spec/load or provide x_t explicitly")
+        t_max = float(self.spec.ts()[0])
+        return t_max * jax.random.normal(key, (batch, self.dim))
+
+    def _resolve_x(self, x_t, key, batch) -> Array:
+        if x_t is not None:
+            return x_t
+        if key is None or batch is None:
+            raise ValueError("provide either x_t or (key, batch)")
+        return self.prior(key, batch)
+
+    # -- calibration (Algorithm 1) -----------------------------------------
+
+    def calibrate(self, key: Optional[Array] = None, batch: int = 256, *,
+                  x_t: Optional[Array] = None,
+                  gt: Optional[Array] = None) -> "Pipeline":
+        """Learn the ~10 PAS parameters against the spec's teacher.
+
+        Builds the nested teacher trajectory internally (or takes a
+        precomputed ``gt`` aligned to the student grid) and runs the paper's
+        adaptive search.  Returns ``self`` so ``.calibrate(...).save(d)``
+        chains.
+        """
+        x_t = self._resolve_x(x_t, key, batch)
+        if gt is None:
+            gt = self.teacher_trajectory(x_t)
+        self.params, self.diag = pas_mod.calibrate(
+            self.solver, self.eps_fn, x_t, gt, self.spec.pas)
+        return self
+
+    def teacher_trajectory(self, x_t: Array) -> Array:
+        return teacher_trajectory(self.spec, self.eps_fn, x_t)
+
+    # -- sampling (Algorithm 2) --------------------------------------------
+
+    def sample(self, x_t: Optional[Array] = None, *,
+               key: Optional[Array] = None, batch: Optional[int] = None,
+               use_pas: bool = True) -> Array:
+        """One fused engine pass ts[0] -> ts[N]; corrected iff calibrated."""
+        x_t = self._resolve_x(x_t, key, batch)
+        params = self.params if use_pas else None
+        return self.engine.sample(self.eps_fn, x_t, params=params,
+                                  cfg=self.spec.pas)
+
+    def trajectory(self, x_t: Optional[Array] = None, *,
+                   key: Optional[Array] = None, batch: Optional[int] = None,
+                   use_pas: bool = True) -> tuple[Array, Array]:
+        """Full path (x_0, xs (N+1, B, D)) via the reference (unfused) path."""
+        x_t = self._resolve_x(x_t, key, batch)
+        if use_pas and self.params is not None:
+            return pas_mod.pas_sample_trajectory(
+                self.solver, self.eps_fn, x_t, self.params, self.spec.pas)
+        xs, _ = solvers_mod.sample_trajectory(self.solver, self.eps_fn, x_t)
+        return xs[-1], xs
+
+    def stats(self) -> dict:
+        """Spec + calibration + compiled-engine state, one dict."""
+        from repro.engine import engine_cache_stats
+        out = {
+            "spec": self.spec.to_dict(),
+            "calibrated": self.calibrated,
+            "engine_compiled_variants": self.engine.compiled_variants(),
+            "engine_cache": engine_cache_stats(),
+        }
+        if self.params is not None:
+            out["n_stored_params"] = int(self.params.n_stored_params)
+            out["corrected_paper_steps"] = self.params.corrected_paper_steps()
+        if self.diag:
+            out["calibration_diag"] = {
+                k: self.diag[k]
+                for k in ("corrected_steps_paper_index", "n_stored_params",
+                          "final_l2_to_gt", "final_gate_dropped")
+                if k in self.diag}
+        return out
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, base_dir: str | Path) -> Path:
+        """Persist (spec, params, diag) as a checksummed ``PASArtifact``."""
+        if self.params is None:
+            raise ValueError("pipeline is not calibrated; nothing to save "
+                             "(call .calibrate(...) first)")
+        return PASArtifact(self.spec, self.params, self.diag).save(base_dir)
+
+    @classmethod
+    def load(cls, base_dir: str | Path, eps_fn: EpsFn,
+             dim: Optional[int] = None,
+             expected_spec: Optional[SamplerSpec] = None) -> "Pipeline":
+        """Rebuild a calibrated pipeline from a ``PASArtifact`` on disk."""
+        art = PASArtifact.load(base_dir, expected_spec=expected_spec)
+        return cls(art.spec, eps_fn, dim=dim, params=art.params,
+                   diag=dict(art.diag))
+
+    def __repr__(self) -> str:
+        state = "calibrated" if self.calibrated else "uncalibrated"
+        n = self.params.n_stored_params if self.calibrated else 0
+        return (f"Pipeline({self.spec.solver}@{self.spec.nfe}nfe, "
+                f"{self.spec.dtype}, {state}, {n} stored params)")

@@ -1,0 +1,297 @@
+"""SamplerSpec: the declarative, hashable description of one PAS sampler.
+
+A spec fixes everything the rest of the repo used to thread around as loose
+``(name, ts, dtype)`` tuples plus implicit teacher/calibration conventions:
+
+* the student solver and its NFE budget,
+* the time schedule as a *family + parameters* (polynomial/Karras by default,
+  ``raw`` for explicit grids such as the post-teleport schedule),
+* the compute dtype,
+* the teacher used for calibration trajectories,
+* the full ``PASConfig``.
+
+Specs are frozen dataclasses — hashable (the canonical engine-cache key, see
+``repro.engine.get_engine``) and JSON-round-trippable (the artifact header,
+see ``repro.api.artifact``).  Solvers, schedules, and teachers resolve
+through registries so downstream code can plug in new members without
+touching this module.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pas import PASConfig
+from repro.core.schedules import polynomial_schedule, teacher_refinement
+from repro.core.solvers import SOLVER_NAMES, Solver, make_solver
+
+__all__ = [
+    "ScheduleSpec", "TeacherSpec", "SamplerSpec",
+    "register_solver", "register_schedule", "register_teacher",
+    "solver_names", "schedule_kinds", "teacher_names",
+    "spec_from_schedule",
+]
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+SolverFactory = Callable[[str, np.ndarray], Solver]
+ScheduleBuilder = Callable[["ScheduleSpec", int], np.ndarray]
+
+_SOLVERS: dict[str, SolverFactory] = {}
+_SCHEDULES: dict[str, ScheduleBuilder] = {}
+_TEACHERS: dict[str, SolverFactory] = {}
+
+
+def register_solver(name: str, factory: SolverFactory = make_solver) -> None:
+    """Register a student solver; ``factory(name, ts) -> Solver``."""
+    _SOLVERS[name] = factory
+
+
+def register_teacher(name: str, factory: SolverFactory = make_solver) -> None:
+    """Register a teacher solver usable in ``TeacherSpec``."""
+    _TEACHERS[name] = factory
+
+
+def register_schedule(kind: str, builder: ScheduleBuilder) -> None:
+    """Register a schedule family; ``builder(spec, nfe) -> ts (nfe+1,)``."""
+    _SCHEDULES[kind] = builder
+
+
+def solver_names() -> tuple[str, ...]:
+    return tuple(sorted(_SOLVERS))
+
+
+def teacher_names() -> tuple[str, ...]:
+    return tuple(sorted(_TEACHERS))
+
+
+def schedule_kinds() -> tuple[str, ...]:
+    return tuple(sorted(_SCHEDULES))
+
+
+for _n in SOLVER_NAMES:
+    register_solver(_n)
+    register_teacher(_n)
+
+
+# ---------------------------------------------------------------------------
+# schedule spec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """A schedule family + its parameters (descending grid, paper eq. 19).
+
+    ``polynomial`` is the EDM/Karras family; ``raw`` carries an explicit grid
+    (e.g. the post-teleport schedule) as a float tuple so it stays hashable
+    and JSON-serialisable.
+    """
+
+    kind: str = "polynomial"
+    t_min: float = 0.002
+    t_max: float = 80.0
+    rho: float = 7.0
+    points: tuple[float, ...] | None = None   # kind == "raw" only
+
+    def __post_init__(self):
+        object.__setattr__(self, "t_min", float(self.t_min))
+        object.__setattr__(self, "t_max", float(self.t_max))
+        object.__setattr__(self, "rho", float(self.rho))
+        if self.points is not None:
+            object.__setattr__(
+                self, "points", tuple(float(t) for t in self.points))
+        if self.kind == "raw" and self.points is None:
+            raise ValueError("raw schedule requires explicit points")
+        if not self.t_max > self.t_min > 0:
+            raise ValueError(f"need t_max > t_min > 0, got "
+                             f"[{self.t_min}, {self.t_max}]")
+
+    @staticmethod
+    def raw(ts: np.ndarray) -> "ScheduleSpec":
+        """Wrap an explicit descending grid as a spec."""
+        ts = np.asarray(ts, np.float64)
+        return ScheduleSpec(kind="raw", t_min=float(ts[-1]),
+                            t_max=float(ts[0]),
+                            points=tuple(float(t) for t in ts))
+
+    def build(self, nfe: int) -> np.ndarray:
+        """The (nfe+1,) descending grid this spec describes."""
+        if self.kind not in _SCHEDULES:
+            raise ValueError(f"unknown schedule kind {self.kind!r}; "
+                             f"registered: {schedule_kinds()}")
+        ts = np.asarray(_SCHEDULES[self.kind](self, nfe), np.float64)
+        if len(ts) != nfe + 1 or not np.all(np.diff(ts) < 0):
+            raise ValueError(
+                f"schedule {self.kind!r} produced an invalid grid for "
+                f"nfe={nfe}: len={len(ts)}")
+        return ts
+
+
+def _polynomial_builder(spec: ScheduleSpec, nfe: int) -> np.ndarray:
+    return polynomial_schedule(nfe, spec.t_min, spec.t_max, spec.rho)
+
+
+def _raw_builder(spec: ScheduleSpec, nfe: int) -> np.ndarray:
+    pts = np.asarray(spec.points, np.float64)
+    if len(pts) != nfe + 1:
+        raise ValueError(
+            f"raw schedule has {len(pts)} points but nfe={nfe} needs {nfe + 1}")
+    return pts
+
+
+register_schedule("polynomial", _polynomial_builder)
+register_schedule("raw", _raw_builder)
+
+
+# ---------------------------------------------------------------------------
+# teacher spec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TeacherSpec:
+    """The high-NFE teacher that defines ground-truth trajectories (§3.3)."""
+
+    solver: str = "heun"
+    nfe: int = 100
+
+    def __post_init__(self):
+        object.__setattr__(self, "nfe", int(self.nfe))
+
+
+# ---------------------------------------------------------------------------
+# sampler spec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """One hashable object = solver + schedule + dtype + teacher + PASConfig."""
+
+    solver: str = "ddim"
+    nfe: int = 10
+    schedule: ScheduleSpec = ScheduleSpec()
+    dtype: str = "float32"
+    teacher: TeacherSpec = TeacherSpec()
+    pas: PASConfig = PASConfig()
+
+    def __post_init__(self):
+        object.__setattr__(self, "nfe", int(self.nfe))
+        if self.nfe < 1:
+            raise ValueError(f"nfe must be >= 1, got {self.nfe}")
+        if self.solver not in _SOLVERS:
+            raise ValueError(f"unknown solver {self.solver!r}; "
+                             f"registered: {solver_names()}")
+        if self.teacher.solver not in _TEACHERS:
+            raise ValueError(f"unknown teacher {self.teacher.solver!r}; "
+                             f"registered: {teacher_names()}")
+        object.__setattr__(self, "dtype", jnp.dtype(self.dtype).name)
+
+    # -- construction ------------------------------------------------------
+
+    def ts(self) -> np.ndarray:
+        """The bound (nfe+1,) descending student grid."""
+        return self.schedule.build(self.nfe)
+
+    def make_solver(self) -> Solver:
+        return _SOLVERS[self.solver](self.solver, self.ts())
+
+    def make_teacher(self, teacher_ts: np.ndarray) -> Solver:
+        return _TEACHERS[self.teacher.solver](self.teacher.solver, teacher_ts)
+
+    def teacher_grid(self) -> tuple[np.ndarray, np.ndarray, int]:
+        """(student_ts, teacher_ts, M): teacher grid nesting the student grid.
+
+        Polynomial schedules refine within the same family (eq. 19 is closed
+        under sub-indexing); other kinds subdivide each student interval
+        linearly — either way ``teacher_ts[::M+1] == student_ts`` exactly.
+        """
+        if self.teacher.nfe <= self.nfe:
+            raise ValueError(
+                f"teacher nfe ({self.teacher.nfe}) must exceed student nfe "
+                f"({self.nfe})")
+        m = teacher_refinement(self.nfe, self.teacher.nfe)
+        s = self.ts()
+        if self.schedule.kind == "polynomial":
+            t = polynomial_schedule(self.nfe * (m + 1), self.schedule.t_min,
+                                    self.schedule.t_max, self.schedule.rho)
+        else:
+            t = np.empty(self.nfe * (m + 1) + 1, np.float64)
+            for j in range(self.nfe):
+                t[j * (m + 1):(j + 1) * (m + 1) + 1] = np.linspace(
+                    s[j], s[j + 1], m + 2)
+            t[:: m + 1] = s   # shared nodes bit-exact
+        return s, t, m
+
+    @property
+    def engine_key(self):
+        """The engine-relevant projection: what a compiled binding depends on.
+
+        Teacher and PASConfig are calibration-time concerns; two specs
+        differing only there share one ``SamplingEngine``.
+        """
+        return (self.solver, self.nfe, self.schedule, self.dtype)
+
+    def replace(self, **kw) -> "SamplerSpec":
+        return dataclasses.replace(self, **kw)
+
+    # -- serialisation -----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SamplerSpec":
+        sched = d.get("schedule", {})
+        pts = sched.get("points")
+        return cls(
+            solver=d["solver"], nfe=int(d["nfe"]),
+            schedule=ScheduleSpec(
+                kind=sched.get("kind", "polynomial"),
+                t_min=sched.get("t_min", 0.002),
+                t_max=sched.get("t_max", 80.0),
+                rho=sched.get("rho", 7.0),
+                points=tuple(pts) if pts is not None else None),
+            dtype=d.get("dtype", "float32"),
+            teacher=TeacherSpec(**d.get("teacher", {})),
+            pas=PASConfig(**d.get("pas", {})),
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "SamplerSpec":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# the old-keying shim
+# ---------------------------------------------------------------------------
+
+
+def spec_from_schedule(solver: str, ts: np.ndarray,
+                       dtype=jnp.float32) -> SamplerSpec:
+    """Lift an ad-hoc ``(name, ts, dtype)`` tuple into a canonical spec.
+
+    If ``ts`` is bit-identical to a default-rho polynomial schedule over its
+    own endpoints, the spec is the polynomial one (so legacy callers share
+    engine-cache entries with spec-built pipelines); anything else becomes a
+    ``raw`` schedule carrying the grid verbatim.
+    """
+    ts = np.asarray(ts, np.float64)
+    nfe = len(ts) - 1
+    cand = polynomial_schedule(nfe, float(ts[-1]), float(ts[0]))
+    if np.array_equal(cand, ts):
+        sched = ScheduleSpec(t_min=float(ts[-1]), t_max=float(ts[0]))
+    else:
+        sched = ScheduleSpec.raw(ts)
+    return SamplerSpec(solver=solver, nfe=nfe, schedule=sched,
+                       dtype=jnp.dtype(dtype).name)

@@ -267,7 +267,13 @@ def _make_sgd(solver, cfg: PASConfig, train_loss):
 
 def pas_sample(solver: Solver, eps_fn: EpsFn, x_t: Array, params: PASParams,
                cfg: PASConfig = PASConfig()) -> Array:
-    """Corrected sampling via the fused engine (the production entry point).
+    """Corrected sampling via the fused engine.
+
+    .. deprecated::
+        Compat shim for pre-``repro.api`` call sites.  New code should build
+        a ``repro.api.Pipeline`` (``Pipeline.from_spec(spec, eps_fn)``) and
+        call ``pipeline.sample`` — same fused engine underneath, plus
+        calibration, artifacts, and spec-keyed caching in one object.
 
     Delegates to ``repro.engine.SamplingEngine`` — one jitted scan with the
     PAS projection folded into the fused step kernel.  The unfused

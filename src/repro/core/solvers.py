@@ -339,14 +339,22 @@ def ground_truth_trajectory(
     teacher_ts: np.ndarray,
     m: int,
     x_T: Array,
-    teacher: str = "heun",
+    teacher: str | Solver = "heun",
 ) -> Array:
     """Paper §3.3: run the teacher on the refined grid, index every (M+1)-th state.
 
-    Returns gt (N+1, ...) aligned with the student grid (gt[0] = x_T).
+    ``teacher`` is a solver name, or an already-bound Solver (it must be
+    bound to ``teacher_ts`` — the path ``repro.api`` uses for
+    registry-resolved teachers).  Returns gt (N+1, ...) aligned with the
+    student grid (gt[0] = x_T).
     """
     if not np.allclose(teacher_ts[:: m + 1], student_ts, rtol=1e-9, atol=1e-12):
         raise ValueError("teacher grid does not nest the student grid")
-    tsol = make_solver(teacher, teacher_ts)
+    if isinstance(teacher, str):
+        tsol = make_solver(teacher, teacher_ts)
+    else:
+        tsol = teacher
+        if not np.array_equal(np.asarray(tsol.ts), np.asarray(teacher_ts)):
+            raise ValueError("bound teacher solver does not match teacher_ts")
     xs, _ = sample_trajectory(tsol, eps_fn, x_T)
     return xs[:: m + 1]

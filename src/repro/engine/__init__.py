@@ -1,7 +1,12 @@
-"""repro.engine — the fused, cached sampling surface (see engine.py)."""
+"""repro.engine — the fused, cached sampling surface (see engine.py).
+
+Engines are cached with ``repro.api.SamplerSpec`` keying as the canonical
+scheme (``get_engine_for_spec``); the legacy ``(name, ts, dtype)`` entry
+points remain as thin shims onto it.
+"""
 
 from .engine import (SamplingEngine, clear_engine_cache, engine_cache_stats,
-                     engine_for_solver, get_engine)
+                     engine_for_solver, get_engine, get_engine_for_spec)
 
 __all__ = [
     "SamplingEngine",
@@ -9,4 +14,5 @@ __all__ = [
     "engine_cache_stats",
     "engine_for_solver",
     "get_engine",
+    "get_engine_for_spec",
 ]

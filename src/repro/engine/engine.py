@@ -35,8 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pas import _batched_basis, _QBuffer
-from repro.core.solvers import (LinearMultistepSolver, Solver, TwoEvalSolver,
-                                make_solver)
+from repro.core.solvers import LinearMultistepSolver, Solver, TwoEvalSolver
 from repro.kernels import ops
 
 Array = jax.Array
@@ -45,6 +44,7 @@ EpsFn = Callable[[Array, Array], Array]
 __all__ = [
     "SamplingEngine",
     "get_engine",
+    "get_engine_for_spec",
     "engine_for_solver",
     "clear_engine_cache",
     "engine_cache_stats",
@@ -54,14 +54,22 @@ __all__ = [
 def _fn_key(fn: Callable) -> Any:
     """Stable hashable identity for an eps model.
 
-    Bound methods (``gmm.eps``) create a fresh object per attribute access, so
-    ``id(fn)`` alone would defeat the compiled-fn cache; key on the underlying
-    (instance, function) pair instead.
+    The callable itself is the key whenever it is hashable: this pins the fn
+    (and, for bound methods like ``gmm.eps`` — which create a fresh object
+    per attribute access — the underlying instance) in the key tuple, so a
+    garbage-collected model's recycled ``id`` can never alias a stale
+    compiled entry.  Unhashable callables fall back to ``id`` and rely on
+    the cache entry pinning them (``_get_compiled`` stores the fn alongside
+    the compiled program, keeping the id valid for the entry's lifetime).
     """
-    self_obj = getattr(fn, "__self__", None)
-    if self_obj is not None:
-        return (id(self_obj), getattr(fn, "__func__", fn))
-    return id(fn)
+    try:
+        hash(fn)
+        return fn
+    except TypeError:
+        self_obj = getattr(fn, "__self__", None)
+        if self_obj is not None:
+            return (id(self_obj), getattr(fn, "__func__", fn))
+        return id(fn)
 
 
 def _scaled_coords(coords: Array, d: Array, mode: str) -> Array:
@@ -254,11 +262,6 @@ _MAX_ENGINES = 64
 _MAX_COMPILED_PER_ENGINE = 16
 
 
-def _cache_key(name: str, ts: np.ndarray, dtype) -> Any:
-    ts = np.asarray(ts, np.float64)
-    return (name, ts.tobytes(), len(ts) - 1, jnp.dtype(dtype).name)
-
-
 def _lookup(key: Any, build: Callable[[], SamplingEngine]) -> SamplingEngine:
     """Bounded LRU cache (callers holding an evicted engine keep it alive)."""
     eng = _ENGINES.get(key)
@@ -274,20 +277,45 @@ def _lookup(key: Any, build: Callable[[], SamplingEngine]) -> SamplingEngine:
     return eng
 
 
+def get_engine_for_spec(spec) -> SamplingEngine:
+    """Engine for a ``repro.api.SamplerSpec`` — the canonical keying.
+
+    The cache key is ``spec.engine_key`` = (solver, nfe, schedule, dtype):
+    the engine-relevant projection of the spec, so specs differing only in
+    teacher or PASConfig share one compiled binding.
+    """
+    return _lookup(spec.engine_key,
+                   lambda: SamplingEngine(spec.make_solver(),
+                                          jnp.dtype(spec.dtype)))
+
+
 def get_engine(name: str, ts: np.ndarray,
                dtype: jnp.dtype = jnp.float32) -> SamplingEngine:
-    """Engine for (solver name, schedule, dtype); coefficient tables are
-    bound exactly once per key and every later lookup is a cache hit."""
-    return _lookup(_cache_key(name, ts, dtype),
-                   lambda: SamplingEngine(make_solver(name, np.asarray(ts)),
-                                          dtype))
+    """Engine for (solver name, schedule, dtype) — thin shim over the spec
+    keying: the ad-hoc tuple is lifted to a canonical ``SamplerSpec`` (see
+    ``repro.api.spec_from_schedule``), so legacy callers share cache entries
+    with spec-built pipelines.  Coefficient tables are bound exactly once
+    per key and every later lookup is a cache hit."""
+    from repro.api.spec import spec_from_schedule  # deferred: api builds on engine
+    return get_engine_for_spec(spec_from_schedule(name, ts, dtype))
 
 
 def engine_for_solver(solver: Solver,
                       dtype: jnp.dtype = jnp.float32) -> SamplingEngine:
-    """Engine for an already-bound solver (shares the get_engine cache)."""
-    return _lookup(_cache_key(solver.name, solver.ts, dtype),
-                   lambda: SamplingEngine(solver, dtype))
+    """Engine for an already-bound solver (shares the get_engine cache).
+
+    Custom solver objects whose name is not in the ``repro.api`` registry
+    are still served (the solver is already constructed — nothing to look
+    up); they key on the raw (name, schedule bytes, dtype) tuple instead.
+    """
+    from repro.api.spec import spec_from_schedule  # deferred: api builds on engine
+    try:
+        key = spec_from_schedule(solver.name, solver.ts, dtype).engine_key
+    except ValueError:
+        ts = np.asarray(solver.ts, np.float64)
+        key = ("unregistered", solver.name, ts.tobytes(), len(ts) - 1,
+               jnp.dtype(dtype).name)
+    return _lookup(key, lambda: SamplingEngine(solver, dtype))
 
 
 def clear_engine_cache() -> None:

@@ -4,7 +4,13 @@ Modes:
   --mode oracle     analytic GMM eps (default; instant)
   --mode diffusion  reduced zoo backbone in diffusion-LM mode (--arch ...)
 
-  PYTHONPATH=src python -m repro.launch.serve --nfe 10 --solver ddim
+The sampler is built through ``repro.api``: one ``SamplerSpec``, one
+``Pipeline``.  With ``--artifact-dir`` the calibrated ~10 parameters are
+persisted as a ``PASArtifact`` and reloaded on the next launch (calibration
+is skipped when a matching artifact exists).
+
+  PYTHONPATH=src python -m repro.launch.serve --nfe 10 --solver ddim \
+      [--t-min 0.002] [--t-max 80.0] [--max-batch 256] [--artifact-dir DIR]
 """
 from __future__ import annotations
 
@@ -13,8 +19,8 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import (PASConfig, calibrate, ground_truth_trajectory,
-                        nested_teacher_schedule, two_mode_gmm)
+from repro.api import PASArtifact, Pipeline
+from repro.core import PASConfig, two_mode_gmm
 from repro.engine import engine_cache_stats
 from repro.runtime import DiffusionServer, Request, ServeConfig
 
@@ -42,6 +48,28 @@ def _diffusion_lm_eps(arch: str, seq: int = 32):
         precondition(raw_fn, EDMConfig(sigma_data=1.0)))), d_state
 
 
+def _calibrated_pipeline(cfg: ServeConfig, eps_fn, dim: int,
+                         artifact_dir: str | None) -> Pipeline:
+    """Load the PAS artifact if a matching one exists, else calibrate (and
+    persist when --artifact-dir is given)."""
+    spec = cfg.to_spec()
+    if artifact_dir and PASArtifact.exists(artifact_dir):
+        pipe = Pipeline.load(artifact_dir, eps_fn, dim=dim,
+                             expected_spec=spec)
+        print(f"PAS artifact loaded from {artifact_dir!r}: steps "
+              f"{pipe.params.corrected_paper_steps()} "
+              f"({pipe.params.n_stored_params} params)")
+        return pipe
+    pipe = Pipeline.from_spec(spec, eps_fn, dim=dim)
+    pipe.calibrate(key=jax.random.key(0), batch=128)
+    print(f"PAS calibrated: steps {pipe.params.corrected_paper_steps()} "
+          f"({pipe.params.n_stored_params} params)")
+    if artifact_dir:
+        path = pipe.save(artifact_dir)
+        print(f"PAS artifact saved to {path}")
+    return pipe
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="oracle", choices=["oracle", "diffusion"])
@@ -51,6 +79,14 @@ def main() -> None:
     ap.add_argument("--no-pas", action="store_true")
     ap.add_argument("--dim", type=int, default=64)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--t-min", type=float, default=0.002,
+                    help="schedule endpoint eps (ServeConfig.t_min)")
+    ap.add_argument("--t-max", type=float, default=80.0,
+                    help="schedule endpoint T (ServeConfig.t_max)")
+    ap.add_argument("--max-batch", type=int, default=256,
+                    help="micro-batch budget; larger requests are chunked")
+    ap.add_argument("--artifact-dir", default=None,
+                    help="save/load the calibrated PASArtifact here")
     args = ap.parse_args()
 
     if args.mode == "oracle":
@@ -59,19 +95,16 @@ def main() -> None:
         eps_fn, dim = _diffusion_lm_eps(args.arch)
 
     cfg = ServeConfig(nfe=args.nfe, solver=args.solver,
+                      t_min=args.t_min, t_max=args.t_max,
+                      max_batch=args.max_batch,
                       use_pas=not args.no_pas,
                       pas=PASConfig(val_fraction=0.25, n_sgd_iters=150))
-    server = DiffusionServer(eps_fn, dim, cfg)
 
-    if not args.no_pas:
-        s_ts, t_ts, m = nested_teacher_schedule(args.nfe, 100, cfg.t_min,
-                                                cfg.t_max)
-        x_c = cfg.t_max * jax.random.normal(jax.random.key(0), (128, dim))
-        gt = ground_truth_trajectory(eps_fn, s_ts, t_ts, m, x_c)
-        pas_params, _ = calibrate(server.solver, eps_fn, x_c, gt, cfg.pas)
-        server.set_pas(pas_params)
-        print(f"PAS: steps {pas_params.corrected_paper_steps()} "
-              f"({pas_params.n_stored_params} params)")
+    if args.no_pas:
+        server = DiffusionServer(eps_fn, dim, cfg)
+    else:
+        pipe = _calibrated_pipeline(cfg, eps_fn, dim, args.artifact_dir)
+        server = DiffusionServer.from_pipeline(pipe, cfg)
 
     outs = server.serve([Request(seed=i, n_samples=16)
                          for i in range(args.requests)])

@@ -2,13 +2,14 @@
 
 Requests (each: a PRNG seed + sample count) are micro-batched up to
 ``max_batch``; a batch runs the PAS-corrected solver once for all requests.
-The PAS coordinate table (~10 floats) is part of the server state — hot-
-swappable without touching model weights (plug-and-play, paper §3.5).
+Requests larger than ``max_batch`` are chunked across flushes (never run as
+one oversized batch) and reassembled per request.
 
-Sampling goes through the fused ``SamplingEngine`` (repro/engine): the
-coefficient tables are bound once at server construction, every batch reuses
-the same compiled scan, and hot-swapping PAS params only re-specialises the
-corrected prefix (the compiled plain path is untouched).
+``DiffusionServer`` is a micro-batching shell around a ``repro.api.Pipeline``:
+the pipeline owns the spec, the fused engine binding, and the PAS coordinate
+table (~10 floats) — hot-swappable without touching model weights
+(plug-and-play, paper §3.5).  Hot-swapping PAS params only re-specialises the
+corrected prefix; the compiled plain path is untouched.
 """
 from __future__ import annotations
 
@@ -20,8 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import PASConfig, PASParams, solvers
-from repro.engine import engine_for_solver
+from repro.api import Pipeline, SamplerSpec, ScheduleSpec
+from repro.core import PASConfig, PASParams
 
 __all__ = ["ServeConfig", "DiffusionServer", "Request"]
 
@@ -42,33 +43,78 @@ class ServeConfig:
     use_pas: bool = True
     pas: PASConfig = dataclasses.field(default_factory=PASConfig)
 
+    def to_spec(self) -> SamplerSpec:
+        """The declarative sampler description this config serves."""
+        return SamplerSpec(
+            solver=self.solver, nfe=self.nfe,
+            schedule=ScheduleSpec(t_min=self.t_min, t_max=self.t_max),
+            pas=self.pas)
+
 
 class DiffusionServer:
     def __init__(self, eps_fn: Callable, dim: int, cfg: ServeConfig,
-                 pas_params: Optional[PASParams] = None):
-        from repro.core import polynomial_schedule
+                 pas_params: Optional[PASParams] = None,
+                 pipeline: Optional[Pipeline] = None):
         self.cfg = cfg
-        self.dim = dim
-        self.eps_fn = eps_fn
-        ts = polynomial_schedule(cfg.nfe, cfg.t_min, cfg.t_max)
-        self.solver = solvers.make_solver(cfg.solver, ts)
-        self.engine = engine_for_solver(self.solver)
-        self.pas_params = pas_params
+        self.pipeline = (pipeline if pipeline is not None
+                         else Pipeline.from_spec(cfg.to_spec(), eps_fn,
+                                                 dim=dim))
+        if pas_params is not None:
+            self.pipeline.set_params(pas_params)
         self.stats = {"requests": 0, "samples": 0, "batches": 0,
                       "nfe_total": 0, "wall_s": 0.0}
 
+    @classmethod
+    def from_pipeline(cls, pipeline: Pipeline,
+                      cfg: Optional[ServeConfig] = None) -> "DiffusionServer":
+        """Serve an existing (typically calibrated/loaded) pipeline."""
+        if cfg is None:
+            spec = pipeline.spec
+            ts = spec.ts()
+            cfg = ServeConfig(nfe=spec.nfe, solver=spec.solver,
+                              t_min=float(ts[-1]), t_max=float(ts[0]),
+                              pas=spec.pas)
+        return cls(pipeline.eps_fn, pipeline.dim, cfg, pipeline=pipeline)
+
+    # -- pipeline delegation ------------------------------------------------
+
+    @property
+    def eps_fn(self):
+        return self.pipeline.eps_fn
+
+    @property
+    def dim(self):
+        return self.pipeline.dim
+
+    @property
+    def solver(self):
+        return self.pipeline.solver
+
+    @property
+    def engine(self):
+        return self.pipeline.engine
+
+    @property
+    def pas_params(self) -> Optional[PASParams]:
+        return self.pipeline.params
+
     def set_pas(self, params: Optional[PASParams]) -> None:
         """Hot-swap the ~10 learned parameters (no model reload)."""
-        self.pas_params = params
+        self.pipeline.set_params(params)
 
     def _run_batch(self, x_t: jnp.ndarray) -> jnp.ndarray:
-        params = self.pas_params if self.cfg.use_pas else None
-        return self.engine.sample(self.eps_fn, x_t, params=params,
-                                  cfg=self.cfg.pas)
+        return self.pipeline.sample(x_t, use_pas=self.cfg.use_pas)
+
+    # -- serving -------------------------------------------------------------
 
     def serve(self, requests: list[Request]) -> list[np.ndarray]:
-        """Micro-batches requests; returns one array of samples per request."""
-        outs: list[np.ndarray] = []
+        """Micro-batches requests; returns one array of samples per request.
+
+        Oversized requests (n_samples > max_batch) are split into
+        max_batch-sized chunks across flushes; the final partial chunk stays
+        pending so later requests can pack into the same batch.
+        """
+        parts: list[list[np.ndarray]] = [[] for _ in requests]
         pending: list[tuple[int, jnp.ndarray]] = []  # (request idx, x_T rows)
         sizes: list[int] = []
         t0 = time.time()
@@ -79,8 +125,8 @@ class DiffusionServer:
             x_t = jnp.concatenate([x for _, x in pending], axis=0)
             x0 = np.asarray(self._run_batch(x_t))
             off = 0
-            for (i, x), n in zip(pending, sizes):
-                outs.append(x0[off:off + n])
+            for (i, _), n in zip(pending, sizes):
+                parts[i].append(x0[off:off + n])
                 off += n
             self.stats["batches"] += 1
             self.stats["nfe_total"] += self.solver.nfe
@@ -89,14 +135,23 @@ class DiffusionServer:
 
         budget = self.cfg.max_batch
         for i, req in enumerate(requests):
-            x_t = self.cfg.t_max * jax.random.normal(
-                jax.random.key(req.seed), (req.n_samples, self.dim))
-            if sum(sizes) + req.n_samples > budget:
-                flush()
-            pending.append((i, x_t))
-            sizes.append(req.n_samples)
+            x_t = self.pipeline.prior(jax.random.key(req.seed), req.n_samples)
             self.stats["requests"] += 1
             self.stats["samples"] += req.n_samples
+            if req.n_samples <= budget:
+                if sum(sizes) + req.n_samples > budget:
+                    flush()
+                pending.append((i, x_t))
+                sizes.append(req.n_samples)
+            else:
+                flush()
+                for off in range(0, req.n_samples, budget):
+                    chunk = x_t[off:off + budget]
+                    pending.append((i, chunk))
+                    sizes.append(int(chunk.shape[0]))
+                    if sum(sizes) >= budget:
+                        flush()
         flush()
         self.stats["wall_s"] += time.time() - t0
-        return outs
+        return [p[0] if len(p) == 1 else np.concatenate(p, axis=0)
+                for p in parts]

@@ -1,0 +1,325 @@
+"""repro.api: SamplerSpec / Pipeline / PASArtifact + serve-loop chunking.
+
+Covers the acceptance contract of the api redesign:
+* specs are hashable, JSON-round-trippable, and the canonical engine-cache
+  key (legacy ``(name, ts, dtype)`` lookups share entries with spec lookups);
+* ``Pipeline.from_spec(...).calibrate(...).save(d)`` then
+  ``Pipeline.load(d, eps_fn).sample(...)`` is bit-identical to the in-memory
+  pipeline — including across a cleared engine cache (fresh compile);
+* artifacts are checksummed: tampering with the payload raises;
+* ``DiffusionServer`` chunks oversized requests instead of silently running
+  one oversized batch.
+"""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ArtifactError, PASArtifact, PASConfig, Pipeline,
+                       SamplerSpec, ScheduleSpec, TeacherSpec,
+                       spec_from_schedule)
+from repro.core import analytic, schedules
+from repro.engine import (clear_engine_cache, engine_cache_stats,
+                          engine_for_solver, get_engine, get_engine_for_spec)
+from repro.engine.engine import _fn_key
+from repro.runtime import DiffusionServer, Request, ServeConfig
+
+DIM = 16
+NFE = 5
+
+
+@pytest.fixture(scope="module")
+def gmm():
+    return analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+
+
+def _spec(solver="ddim", **kw) -> SamplerSpec:
+    base = dict(solver=solver, nfe=NFE,
+                teacher=TeacherSpec(solver="heun", nfe=25),
+                pas=PASConfig(n_sgd_iters=30))
+    base.update(kw)
+    return SamplerSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# SamplerSpec
+# ---------------------------------------------------------------------------
+
+
+def test_spec_hashable_and_json_round_trip():
+    spec = _spec()
+    assert hash(spec) == hash(_spec())
+    s2 = SamplerSpec.from_json(spec.to_json())
+    assert s2 == spec and hash(s2) == hash(spec)
+    # dict round trip too (the artifact header path)
+    assert SamplerSpec.from_dict(json.loads(json.dumps(spec.to_dict()))) == spec
+
+
+def test_spec_raw_schedule_round_trip():
+    ts = np.linspace(50.0, 0.01, NFE + 1)
+    spec = _spec(schedule=ScheduleSpec.raw(ts))
+    np.testing.assert_array_equal(spec.ts(), ts)
+    assert SamplerSpec.from_json(spec.to_json()) == spec
+    # raw teacher grid nests the student grid exactly
+    s, t, m = spec.teacher_grid()
+    np.testing.assert_array_equal(t[:: m + 1], s)
+    assert np.all(np.diff(t) < 0)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        SamplerSpec(solver="no-such-solver")
+    with pytest.raises(ValueError):
+        SamplerSpec(teacher=TeacherSpec(solver="no-such-teacher"))
+    with pytest.raises(ValueError):
+        ScheduleSpec(kind="raw")                       # raw needs points
+    with pytest.raises(ValueError):
+        _spec(schedule=ScheduleSpec.raw([80.0, 1.0])).ts()   # wrong length
+    with pytest.raises(ValueError):
+        _spec(teacher=TeacherSpec(nfe=NFE)).teacher_grid()   # teacher too small
+
+
+def test_spec_polynomial_grid_matches_schedules():
+    spec = _spec()
+    np.testing.assert_array_equal(
+        spec.ts(), schedules.polynomial_schedule(NFE, 0.002, 80.0))
+    s, t, m = spec.teacher_grid()
+    s2, t2, m2 = schedules.nested_teacher_schedule(NFE, 25, 0.002, 80.0)
+    np.testing.assert_array_equal(s, s2)
+    np.testing.assert_array_equal(t, t2)
+    assert m == m2
+
+
+# ---------------------------------------------------------------------------
+# spec-canonical engine cache + legacy shim
+# ---------------------------------------------------------------------------
+
+
+def test_engine_cache_spec_is_canonical_key():
+    clear_engine_cache()
+    spec = _spec(solver="ipndm3")
+    e1 = get_engine_for_spec(spec)
+    # legacy tuple keying lands on the same entry
+    assert get_engine("ipndm3", spec.ts()) is e1
+    assert engine_for_solver(spec.make_solver()) is e1
+    # teacher/PASConfig changes don't re-bind the engine
+    assert get_engine_for_spec(
+        spec.replace(pas=PASConfig(n_basis=2),
+                     teacher=TeacherSpec(nfe=50))) is e1
+    assert engine_cache_stats()["engines"] == 1
+    # engine-relevant changes do
+    assert get_engine_for_spec(spec.replace(solver="ddim")) is not e1
+    assert get_engine_for_spec(spec.replace(dtype="bfloat16")) is not e1
+
+
+def test_engine_cache_raw_schedule_shim(gmm):
+    clear_engine_cache()
+    ts = np.linspace(40.0, 0.01, NFE + 1)          # not a polynomial schedule
+    e1 = get_engine("ddim", ts)
+    assert get_engine("ddim", ts.copy()) is e1
+    assert spec_from_schedule("ddim", ts).schedule.kind == "raw"
+    x = gmm.sample_prior(jax.random.key(0), 2, 40.0)
+    assert e1.sample(gmm.eps, x).shape == x.shape
+
+
+def test_engine_for_solver_accepts_unregistered_solver(gmm):
+    """Custom solver objects outside the registry still get an engine."""
+    import dataclasses
+
+    from repro.core import solvers as solvers_mod
+    base = solvers_mod.make_solver("ddim", schedules.polynomial_schedule(NFE))
+    custom = dataclasses.replace(base, name="my-custom-lms")
+    e1 = engine_for_solver(custom)
+    assert engine_for_solver(custom) is e1           # cached
+    x = gmm.sample_prior(jax.random.key(0), 2, 80.0)
+    np.testing.assert_allclose(
+        np.asarray(e1.sample(gmm.eps, x)),
+        np.asarray(engine_for_solver(base).sample(gmm.eps, x)),
+        rtol=1e-6, atol=1e-6)
+
+
+def test_fn_key_pins_hashable_callables(gmm):
+    def f(x, t):
+        return x
+    assert _fn_key(f) is f                          # the key pins the fn
+    assert _fn_key(gmm.eps) == _fn_key(gmm.eps)     # bound methods stay equal
+
+
+def test_unhashable_eps_fn_still_cached(gmm):
+    class UnhashableEps:
+        __hash__ = None
+
+        def __call__(self, x, t):
+            return 0.1 * x
+
+    eps = UnhashableEps()
+    key = _fn_key(eps)
+    assert not isinstance(key, UnhashableEps)       # fell back to id keying
+    eng = get_engine_for_spec(_spec())
+    x = jnp.ones((2, DIM))
+    before = eng.compiled_variants()
+    eng.sample(eps, x)
+    eng.sample(eps, x)                              # second call: cache hit
+    assert eng.compiled_variants() == before + 1
+
+
+# ---------------------------------------------------------------------------
+# PASArtifact + Pipeline persistence
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def calibrated(gmm):
+    pipe = Pipeline.from_spec(_spec(), gmm.eps, dim=DIM)
+    pipe.calibrate(key=jax.random.key(0), batch=48)
+    assert pipe.calibrated and pipe.params.active.any()
+    return pipe
+
+
+def test_artifact_round_trip(tmp_path, calibrated):
+    calibrated.save(tmp_path)
+    art = PASArtifact.load(tmp_path)
+    assert art.spec == calibrated.spec
+    np.testing.assert_array_equal(np.asarray(art.params.active),
+                                  np.asarray(calibrated.params.active))
+    np.testing.assert_array_equal(np.asarray(art.params.coords),
+                                  np.asarray(calibrated.params.coords))
+    assert art.params.coords.dtype == calibrated.params.coords.dtype
+    assert art.diag["n_stored_params"] == calibrated.params.n_stored_params
+
+
+def test_artifact_checksum_tamper_raises(tmp_path, calibrated):
+    calibrated.save(tmp_path)
+    payload = next(PASArtifact.root(tmp_path).glob("step_*/[0-9]*coords*.npy"))
+    raw = bytearray(payload.read_bytes())
+    raw[-1] ^= 0xFF
+    payload.write_bytes(bytes(raw))
+    with pytest.raises(Exception, match="checksum"):
+        PASArtifact.load(tmp_path)
+
+
+def test_artifact_missing_and_spec_mismatch(tmp_path, calibrated):
+    with pytest.raises(ArtifactError, match="no PAS artifact"):
+        PASArtifact.load(tmp_path / "empty")
+    calibrated.save(tmp_path)
+    with pytest.raises(ArtifactError, match="does not match"):
+        PASArtifact.load(tmp_path, expected_spec=_spec(solver="ipndm2"))
+
+
+def test_artifact_version_gate(tmp_path, calibrated):
+    calibrated.save(tmp_path)
+    manifest_path = next(
+        PASArtifact.root(tmp_path).glob("step_*/manifest.json"))
+    manifest = json.loads(manifest_path.read_text())
+    manifest["extra"]["version"] = 999
+    manifest_path.write_text(json.dumps(manifest))
+    with pytest.raises(ArtifactError, match="version"):
+        PASArtifact.load(tmp_path)
+
+
+@pytest.mark.parametrize("solver", ["ddim", "ipndm4"])
+def test_pipeline_load_sample_parity(tmp_path, gmm, solver):
+    """Loaded pipeline == in-memory pipeline, bit for bit, fresh compile."""
+    pipe = Pipeline.from_spec(_spec(solver=solver), gmm.eps, dim=DIM)
+    pipe.calibrate(key=jax.random.key(0), batch=48)
+    x_e = gmm.sample_prior(jax.random.key(9), 4, 80.0)
+    want = np.asarray(pipe.sample(x_e))
+    d = tmp_path / solver
+    pipe.save(d)
+
+    clear_engine_cache()                   # force a fresh engine + compile
+    pipe2 = Pipeline.load(d, gmm.eps, dim=DIM)
+    assert pipe2.spec == pipe.spec
+    got = np.asarray(pipe2.sample(x_e))
+    np.testing.assert_array_equal(got, want)
+    # plain path parity rides along
+    np.testing.assert_array_equal(np.asarray(pipe2.sample(x_e, use_pas=False)),
+                                  np.asarray(pipe.sample(x_e, use_pas=False)))
+
+
+def test_pipeline_save_requires_calibration(tmp_path, gmm):
+    pipe = Pipeline.from_spec(_spec(), gmm.eps, dim=DIM)
+    with pytest.raises(ValueError, match="not calibrated"):
+        pipe.save(tmp_path)
+
+
+def test_pipeline_stats_and_trajectory(gmm, calibrated):
+    x = gmm.sample_prior(jax.random.key(3), 4, 80.0)
+    x0, xs = calibrated.trajectory(x)
+    assert xs.shape == (NFE + 1, 4, DIM)
+    np.testing.assert_array_equal(np.asarray(xs[-1]), np.asarray(x0))
+    st = calibrated.stats()
+    assert st["calibrated"] and st["n_stored_params"] >= 1
+    assert st["spec"]["solver"] == "ddim"
+
+
+# ---------------------------------------------------------------------------
+# DiffusionServer: micro-batching shell + oversized-request chunking
+# ---------------------------------------------------------------------------
+
+
+def _tracking_server(gmm, max_batch):
+    cfg = ServeConfig(nfe=NFE, solver="ddim", max_batch=max_batch,
+                      use_pas=False)
+    server = DiffusionServer(gmm.eps, DIM, cfg)
+    seen = []
+    orig = server._run_batch
+
+    def tracked(x_t):
+        seen.append(int(x_t.shape[0]))
+        return orig(x_t)
+
+    server._run_batch = tracked
+    return server, seen
+
+
+def test_serve_chunks_oversized_request(gmm):
+    server, seen = _tracking_server(gmm, max_batch=8)
+    outs = server.serve([Request(seed=0, n_samples=20)])
+    assert outs[0].shape == (20, DIM)
+    assert sum(seen) == 20 and max(seen) <= 8 and len(seen) >= 3
+    assert server.stats["batches"] == len(seen)
+    # row-level parity with the unchunked pipeline run
+    want = np.asarray(server.pipeline.sample(
+        server.pipeline.prior(jax.random.key(0), 20), use_pas=False))
+    np.testing.assert_allclose(outs[0], want, rtol=1e-5, atol=1e-5)
+
+
+def test_serve_packs_remainder_with_later_requests(gmm):
+    server, seen = _tracking_server(gmm, max_batch=8)
+    reqs = [Request(seed=0, n_samples=4), Request(seed=1, n_samples=20),
+            Request(seed=2, n_samples=4)]
+    outs = server.serve(reqs)
+    assert [o.shape[0] for o in outs] == [4, 20, 4]
+    assert sum(seen) == 28 and max(seen) <= 8
+    # every request's rows come from its own seed
+    for req, out in zip(reqs, outs):
+        want = np.asarray(server.pipeline.sample(
+            server.pipeline.prior(jax.random.key(req.seed), req.n_samples),
+            use_pas=False))
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+def test_serve_small_requests_unchanged(gmm):
+    """Requests within budget are never split (pre-chunking behaviour)."""
+    server, seen = _tracking_server(gmm, max_batch=8)
+    outs = server.serve([Request(seed=i, n_samples=3) for i in range(5)])
+    assert [o.shape[0] for o in outs] == [3] * 5
+    assert seen == [6, 6, 3]
+
+
+def test_serve_config_to_spec_round_trip():
+    cfg = ServeConfig(nfe=7, solver="ipndm2", t_min=0.01, t_max=40.0)
+    spec = cfg.to_spec()
+    assert spec.nfe == 7 and spec.solver == "ipndm2"
+    ts = spec.ts()
+    assert ts[0] == 40.0 and ts[-1] == 0.01
+    # from_pipeline derives an equivalent config
+    gmm = analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+    server = DiffusionServer.from_pipeline(
+        Pipeline.from_spec(spec, gmm.eps, dim=DIM))
+    assert server.cfg.nfe == 7 and server.cfg.t_max == 40.0
+    assert Path(PASArtifact.root("x")).name == "pas_artifact"
