@@ -1,0 +1,113 @@
+"""Sharded sampling throughput: samples/sec vs device count.
+
+Each device count runs in its own subprocess (jax locks the host device
+table at first init) with ``XLA_FLAGS=--xla_force_host_platform_device_count
+=N``: a ``MeshSpec(dp=N)`` pipeline serves one large flush, plain and
+PAS-corrected, through the mesh-native engine.  The aggregate lands in a
+root-level ``BENCH_sharded_throughput.json`` so the perf trajectory of the
+sharded path is recorded PR over PR.
+
+On this CPU-only container the virtual devices all share the same cores, so
+absolute numbers measure partitioning overhead rather than real scaling —
+the JSON records ``backend`` so TPU runs are distinguishable.
+
+  PYTHONPATH=src python -m benchmarks.sharded_throughput \
+      [--devices 1,2,8] [--batch 256] [--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_sharded_throughput.json"
+
+_WORKER = r"""
+import json, sys, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.api import MeshSpec, Pipeline, SamplerSpec
+from repro.core import two_mode_gmm
+from repro.core.pas import PASParams
+
+n_dev, batch, n_rep, dim, nfe, solver = (
+    int(sys.argv[1]), int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4]),
+    int(sys.argv[5]), sys.argv[6])
+assert len(jax.devices()) >= n_dev
+gmm = two_mode_gmm(dim, sep=6.0, var=0.25)
+spec = SamplerSpec(solver=solver, nfe=nfe, mesh=MeshSpec(dp=n_dev))
+pipe = Pipeline.from_spec(spec, gmm.eps, dim=dim)
+
+active = np.zeros(nfe, bool); active[[1, 3]] = True
+coords = np.zeros((nfe, 4), np.float32)
+coords[1] = [1.0, 0.05, 0.0, 0.0]; coords[3] = [0.98, -0.04, 0.0, 0.0]
+pipe.set_params(PASParams(active=active, coords=jnp.asarray(coords)))
+
+x = pipe.prior(jax.random.key(0), batch)
+rows = []
+for mode, use_pas in (("plain", False), ("pas", True)):
+    jax.block_until_ready(pipe.sample(x, use_pas=use_pas))   # compile
+    t0 = time.time()
+    for _ in range(n_rep):
+        out = pipe.sample(x, use_pas=use_pas)
+    jax.block_until_ready(out)
+    sps = batch * n_rep / (time.time() - t0)
+    rows.append({"devices": n_dev, "mode": mode, "batch": batch,
+                 "solver": solver, "nfe": nfe,
+                 "samples_per_s": round(sps, 1)})
+print("ROWS_JSON:" + json.dumps(rows))
+"""
+
+
+def run(device_counts=(1, 2, 8), batch: int = 256, n_rep: int = 10,
+        dim: int = 64, nfe: int = 10, solver: str = "ipndm3",
+        dry_run: bool = False) -> list[dict]:
+    if dry_run:
+        device_counts, batch, n_rep = (1, 2), 64, 3
+    rows: list[dict] = []
+    for n_dev in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+        env.setdefault("PYTHONPATH", str(ROOT / "src"))
+        out = subprocess.run(
+            [sys.executable, "-c", _WORKER, str(n_dev), str(batch),
+             str(n_rep), str(dim), str(nfe), solver],
+            capture_output=True, text=True, env=env, timeout=900)
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"worker for {n_dev} device(s) failed:\n{out.stderr[-2000:]}")
+        payload = next(line for line in out.stdout.splitlines()
+                       if line.startswith("ROWS_JSON:"))
+        rows.extend(json.loads(payload[len("ROWS_JSON:"):]))
+
+    if not dry_run:                # smoke runs don't pollute the perf record
+        import jax
+        report = {
+            "rows": rows,
+            "backend": jax.default_backend(),
+            "device_counts": list(device_counts),
+            "generated": time.strftime("%F %T"),
+        }
+        OUT.write_text(json.dumps(report, indent=1))
+        from . import common
+        common.save_table("sharded_throughput", rows,
+                          extra={"backend": report["backend"]})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", default="1,2,8",
+                    help="comma list of virtual device counts")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="2 device counts, small batch (CI smoke)")
+    args = ap.parse_args()
+    counts = tuple(int(c) for c in args.devices.split(","))
+    for r in run(device_counts=counts, batch=args.batch,
+                 dry_run=args.dry_run):
+        print(r)

@@ -10,12 +10,13 @@ from repro.core.pas import PASConfig, PASParams
 from .artifact import (ARTIFACT_DIRNAME, ARTIFACT_VERSION, ArtifactError,
                        PASArtifact)
 from .pipeline import Pipeline, teacher_trajectory
-from .spec import (SamplerSpec, ScheduleSpec, TeacherSpec, register_schedule,
-                   register_solver, register_teacher, schedule_kinds,
-                   solver_names, spec_from_schedule, teacher_names)
+from .spec import (MeshSpec, SamplerSpec, ScheduleSpec, TeacherSpec,
+                   register_schedule, register_solver, register_teacher,
+                   schedule_kinds, solver_names, spec_from_schedule,
+                   teacher_names)
 
 __all__ = [
-    "SamplerSpec", "ScheduleSpec", "TeacherSpec",
+    "MeshSpec", "SamplerSpec", "ScheduleSpec", "TeacherSpec",
     "Pipeline", "teacher_trajectory",
     "PASArtifact", "ArtifactError", "ARTIFACT_VERSION", "ARTIFACT_DIRNAME",
     "PASConfig", "PASParams",

@@ -89,9 +89,18 @@ class PASArtifact:
 
     @classmethod
     def load(cls, base_dir: str | Path,
-             expected_spec: SamplerSpec | None = None) -> "PASArtifact":
+             expected_spec: SamplerSpec | None = None,
+             mesh=None) -> "PASArtifact":
         """Load + verify. Raises ``ArtifactError`` on a missing/foreign/
-        version-incompatible artifact and ``CheckpointError`` on corruption."""
+        version-incompatible artifact and ``CheckpointError`` on corruption.
+
+        Placement is not part of the sampler's identity: the spec header is
+        compared against ``expected_spec`` modulo mesh (``sans_mesh()``), so
+        an artifact calibrated on an 8-device mesh loads cleanly into a
+        single-device (or any other) serving topology.  Pass ``mesh`` (a
+        ``repro.parallel.MeshSpec``) to re-place the loaded spec; otherwise
+        the artifact's recorded mesh is kept verbatim.
+        """
         d = cls.root(base_dir)
         step = latest_step(d) if d.is_dir() else None
         if step is None:
@@ -107,11 +116,14 @@ class PASArtifact:
                 f"unsupported artifact version {extra.get('version')!r} "
                 f"(this build reads version {ARTIFACT_VERSION})")
         spec = SamplerSpec.from_dict(extra["spec"])
-        if expected_spec is not None and spec != expected_spec:
+        if (expected_spec is not None
+                and spec.sans_mesh() != expected_spec.sans_mesh()):
             raise ArtifactError(
                 f"artifact spec does not match the expected spec:\n"
                 f"  artifact: {spec.to_json()}\n"
                 f"  expected: {expected_spec.to_json()}")
+        if mesh is not None:
+            spec = spec.replace(mesh=mesh)
 
         # shapes/dtypes come from the manifest itself, so the payload
         # round-trips bit-exactly whatever dtype it was calibrated in

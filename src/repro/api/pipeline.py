@@ -86,18 +86,29 @@ class Pipeline:
         self.diag = diag or {}
         return self
 
+    @property
+    def mesh_spec(self):
+        """The spec's ``MeshSpec`` (trivial = single-device)."""
+        return self.spec.mesh
+
     def prior(self, key: Array, batch: int) -> Array:
-        """x_T ~ N(0, T^2 I) at the spec's t_max (EDM prior convention)."""
+        """x_T ~ N(0, T^2 I) at the spec's t_max (EDM prior convention).
+
+        The prior is placed straight onto the engine mesh (batch over DP,
+        state dim over the state axis), so sampling and calibration start
+        from device-resident buffers in the compiled program's layout.
+        """
         if self.dim is None:
             raise ValueError(
                 "Pipeline needs dim for key-based sampling; pass dim= to "
                 "from_spec/load or provide x_t explicitly")
         t_max = float(self.spec.ts()[0])
-        return t_max * jax.random.normal(key, (batch, self.dim))
+        return self.engine.shard(
+            t_max * jax.random.normal(key, (batch, self.dim)))
 
     def _resolve_x(self, x_t, key, batch) -> Array:
         if x_t is not None:
-            return x_t
+            return self.engine.shard(x_t)
         if key is None or batch is None:
             raise ValueError("provide either x_t or (key, batch)")
         return self.prior(key, batch)
@@ -128,12 +139,17 @@ class Pipeline:
 
     def sample(self, x_t: Optional[Array] = None, *,
                key: Optional[Array] = None, batch: Optional[int] = None,
-               use_pas: bool = True) -> Array:
-        """One fused engine pass ts[0] -> ts[N]; corrected iff calibrated."""
+               use_pas: bool = True, donate_x: bool = False) -> Array:
+        """One fused engine pass ts[0] -> ts[N]; corrected iff calibrated.
+
+        ``donate_x=True`` donates the input buffer to the compiled scan
+        (serve-loop flushes: the flush batch is never reused); the caller's
+        ``x_t`` is invalidated.
+        """
         x_t = self._resolve_x(x_t, key, batch)
         params = self.params if use_pas else None
         return self.engine.sample(self.eps_fn, x_t, params=params,
-                                  cfg=self.spec.pas)
+                                  cfg=self.spec.pas, donate_x=donate_x)
 
     def trajectory(self, x_t: Optional[Array] = None, *,
                    key: Optional[Array] = None, batch: Optional[int] = None,
@@ -154,6 +170,8 @@ class Pipeline:
             "calibrated": self.calibrated,
             "engine_compiled_variants": self.engine.compiled_variants(),
             "engine_cache": engine_cache_stats(),
+            "mesh_devices": (self.engine.mesh.size
+                             if self.engine.mesh is not None else 1),
         }
         if self.params is not None:
             out["n_stored_params"] = int(self.params.n_stored_params)
@@ -178,9 +196,17 @@ class Pipeline:
     @classmethod
     def load(cls, base_dir: str | Path, eps_fn: EpsFn,
              dim: Optional[int] = None,
-             expected_spec: Optional[SamplerSpec] = None) -> "Pipeline":
-        """Rebuild a calibrated pipeline from a ``PASArtifact`` on disk."""
-        art = PASArtifact.load(base_dir, expected_spec=expected_spec)
+             expected_spec: Optional[SamplerSpec] = None,
+             mesh=None) -> "Pipeline":
+        """Rebuild a calibrated pipeline from a ``PASArtifact`` on disk.
+
+        ``mesh`` (a ``repro.parallel.MeshSpec``) re-places the loaded spec:
+        the ~10 learned floats are placement-free, so an artifact calibrated
+        on one mesh shape serves on any other — including a single device.
+        Without it the artifact's recorded mesh is rebuilt verbatim.
+        """
+        art = PASArtifact.load(base_dir, expected_spec=expected_spec,
+                               mesh=mesh)
         return cls(art.spec, eps_fn, dim=dim, params=art.params,
                    diag=dict(art.diag))
 

@@ -8,7 +8,12 @@ A spec fixes everything the rest of the repo used to thread around as loose
   ``raw`` for explicit grids such as the post-teleport schedule),
 * the compute dtype,
 * the teacher used for calibration trajectories,
-* the full ``PASConfig``.
+* the full ``PASConfig``,
+* the placement (``repro.parallel.MeshSpec``): which (dp, state) device grid
+  the compiled sampling program runs on.  Placement participates in
+  ``engine_key`` (a mesh engine is a different compiled binding) but not in
+  the sampler's *math* — ``sans_mesh()`` is the projection artifacts compare
+  on, so a calibrated artifact reloads onto any mesh shape.
 
 Specs are frozen dataclasses — hashable (the canonical engine-cache key, see
 ``repro.engine.get_engine``) and JSON-round-trippable (the artifact header,
@@ -28,9 +33,10 @@ import numpy as np
 from repro.core.pas import PASConfig
 from repro.core.schedules import polynomial_schedule, teacher_refinement
 from repro.core.solvers import SOLVER_NAMES, Solver, make_solver
+from repro.parallel.mesh import MeshSpec
 
 __all__ = [
-    "ScheduleSpec", "TeacherSpec", "SamplerSpec",
+    "MeshSpec", "ScheduleSpec", "TeacherSpec", "SamplerSpec",
     "register_solver", "register_schedule", "register_teacher",
     "solver_names", "schedule_kinds", "teacher_names",
     "spec_from_schedule",
@@ -181,6 +187,7 @@ class SamplerSpec:
     dtype: str = "float32"
     teacher: TeacherSpec = TeacherSpec()
     pas: PASConfig = PASConfig()
+    mesh: MeshSpec = MeshSpec()
 
     def __post_init__(self):
         object.__setattr__(self, "nfe", int(self.nfe))
@@ -235,9 +242,19 @@ class SamplerSpec:
         """The engine-relevant projection: what a compiled binding depends on.
 
         Teacher and PASConfig are calibration-time concerns; two specs
-        differing only there share one ``SamplingEngine``.
+        differing only there share one ``SamplingEngine``.  Placement is
+        engine-relevant: a mesh engine is a different compiled program.
         """
-        return (self.solver, self.nfe, self.schedule, self.dtype)
+        return (self.solver, self.nfe, self.schedule, self.dtype, self.mesh)
+
+    def sans_mesh(self) -> "SamplerSpec":
+        """The placement-free projection: the sampler's *math*.
+
+        Two specs equal under ``sans_mesh()`` produce bit-identical fp32
+        samples on any mesh shape; this is what ``PASArtifact`` compares when
+        an artifact calibrated on one mesh is reloaded onto another.
+        """
+        return self.replace(mesh=MeshSpec())
 
     def replace(self, **kw) -> "SamplerSpec":
         return dataclasses.replace(self, **kw)
@@ -262,6 +279,7 @@ class SamplerSpec:
             dtype=d.get("dtype", "float32"),
             teacher=TeacherSpec(**d.get("teacher", {})),
             pas=PASConfig(**d.get("pas", {})),
+            mesh=MeshSpec.from_dict(d.get("mesh")),
         )
 
     def to_json(self) -> str:

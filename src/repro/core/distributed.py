@@ -25,23 +25,34 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels import ops
+from repro.parallel.mesh import shard_map  # the one version-compat shim
+
 from .pca import _DEGENERATE_NORM, _EVAL_FLOOR
 
 Array = jax.Array
 
 __all__ = [
+    "shard_map",
     "psum_gram",
     "topk_right_singular_sharded",
     "schmidt_sharded",
     "pas_basis_sharded",
+    "batched_pas_basis_sharded",
     "corrected_direction_sharded",
     "make_sharded_pas_step",
 ]
 
 
 def psum_gram(x_local: Array, axis_name) -> Array:
-    """Gram matrix of a D-sharded buffer: local contraction + tiny all-reduce."""
-    return jax.lax.psum(x_local @ x_local.T, axis_name)
+    """Gram matrix of a D-sharded buffer: local contraction + tiny all-reduce.
+
+    The local contraction goes through ``kernels.ops.gram`` so the TPU path
+    tiles the huge D_local axis through VMEM; inside shard_map the kernel
+    sees the per-device shard, which is exactly the shape contract it tiles
+    over (the dispatch layer stays shard_map-safe).
+    """
+    return jax.lax.psum(ops.gram(x_local), axis_name).astype(x_local.dtype)
 
 
 def _pdot(a: Array, b: Array, axis_name) -> Array:
@@ -92,6 +103,34 @@ def pas_basis_sharded(q_local: Array, q_mask: Array, d_local: Array,
     return schmidt_sharded(jnp.concatenate([v1[None], v_pca], 0), axis_name)
 
 
+def batched_pas_basis_sharded(mesh: Mesh, state_axis: str,
+                              batch_axis: str | None,
+                              n_basis: int = 4) -> Callable:
+    """Batched sharded PAS basis: the engine's corrected-step collective path.
+
+    Returns ``f(q_rows, q_mask, d) -> u`` over *global* shapes
+    q_rows (cap, B, D), q_mask (cap,), d (B, D) -> u (B, n_basis, D), with
+    B sharded over ``batch_axis`` (if given) and D over ``state_axis``.
+    Inside the shard_map each device holds its (B_local, D_local) tile and
+    the per-sample PCA/Schmidt reductions run through the explicit psum
+    collectives above — this replaces the replicated ``pas._batched_basis``
+    whenever an engine has a state-sharded mesh bound.
+    """
+    bax = batch_axis
+
+    def local(q_rows, q_mask, d):
+        # q_rows (cap, B_l, D_l), d (B_l, D_l): vmap the per-sample sharded
+        # basis over the local batch; psums batch across the vmap.
+        f = lambda rows, dd: pas_basis_sharded(rows, q_mask, dd, state_axis,
+                                               n_basis)
+        return jax.vmap(f, in_axes=(1, 0), out_axes=0)(q_rows, d)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, bax, state_axis), P(None), P(bax, state_axis)),
+        out_specs=P(bax, None, state_axis))
+
+
 def corrected_direction_sharded(u_local: Array, coords: Array, d_local: Array,
                                 axis_name, coord_mode: str = "relative") -> Array:
     """d~ = U^T C (local contraction; coords replicated)."""
@@ -113,7 +152,7 @@ def make_sharded_pas_step(mesh: Mesh, shard_axes, n_basis: int = 4,
     axis_name = shard_axes
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(None, shard_axes), P(None), P(shard_axes), P(None)),
         out_specs=P(shard_axes),

@@ -127,6 +127,16 @@ def _batched_basis(q: _QBuffer, d: Array, n_basis: int) -> Array:
     return jax.vmap(lambda r, dd: pas_basis(r, q.mask, dd, n_basis))(rows_b, d)
 
 
+def _sampling_q_cap(last_active: int, n: int) -> int:
+    """Q-buffer rows a *sampling* pass needs: slots [x_T, d_1..d_last] + one
+    spare, never more than the calibration-time ``n + 1``.  Rows past the
+    last corrected step are dead HBM at large D (the mask zeroes them out of
+    every Gram anyway), so both the engine prefix and the reference
+    trajectory bound the allocation here (parity-tested in test_engine.py).
+    """
+    return min(last_active + 2, n + 1)
+
+
 # ---------------------------------------------------------------------------
 # Algorithm 1: calibration with adaptive search
 # ---------------------------------------------------------------------------
@@ -295,7 +305,8 @@ def pas_sample_trajectory(
 
     ``params.active`` is host-side, so inactive steps compile to the plain
     solver update with *zero* PAS overhead — the adaptive-search promise.
-    The Q buffer is only maintained up to the last active step.
+    The Q buffer is only maintained up to the last active step and only
+    allocated that many rows (``_sampling_q_cap``).
     """
     n = solver.nfe
     ts = solver.ts_jax
@@ -303,7 +314,8 @@ def pas_sample_trajectory(
 
     x = x_t
     hist = solver.init_hist(x_t)
-    q = _QBuffer.create(x_t, cap=n + 1) if last_active >= 0 else None
+    q = (_QBuffer.create(x_t, cap=_sampling_q_cap(last_active, n))
+         if last_active >= 0 else None)
     xs = [x_t]
 
     for j in range(n):

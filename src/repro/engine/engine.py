@@ -19,7 +19,18 @@ replaces all of them with one object per (solver, schedule, NFE, dtype):
 * engines and their compiled callables are cached:
   ``get_engine(name, ts, dtype)`` is keyed on (solver name, schedule bytes,
   NFE, dtype) and per-engine jitted functions are keyed on the eps-model and
-  the static correction pattern.
+  the static correction pattern;
+* engines are **mesh-native**: bound to a non-trivial
+  ``repro.parallel.MeshSpec`` (which participates in the spec's engine-cache
+  key), the jitted scan and PAS prefix carry ``NamedSharding`` on every
+  (batch, D) buffer — batch over the DP axis, the flattened state dim over
+  the state axis.  Corrected steps route the PAS basis through the
+  ``core.distributed`` psum collectives (replacing the replicated
+  ``_batched_basis``) whenever the state dim is sharded; with DP-only
+  sharding the partitioned program is bit-identical in fp32 to the
+  single-device engine (tests/test_mesh.py).  All carries (x, hist, Q) live
+  inside one jitted program, so they never round-trip host memory; the serve
+  loop additionally donates its flush input buffer (``donate_x=True``).
 
 ``TwoEvalSolver`` teachers (heun, dpm2) are served by the same entry point
 via a scan over ``solver.step`` so callers never branch on solver family;
@@ -28,15 +39,19 @@ PAS params on a 2-eval solver raise, as in calibration.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import distributed
+from repro.core import pas as pas_mod
 from repro.core.pas import _batched_basis, _QBuffer
 from repro.core.solvers import LinearMultistepSolver, Solver, TwoEvalSolver
 from repro.kernels import ops
+from repro.parallel.mesh import MeshSpec
 
 Array = jax.Array
 EpsFn = Callable[[Array, Array], Array]
@@ -81,15 +96,26 @@ def _scaled_coords(coords: Array, d: Array, mode: str) -> Array:
 
 
 class SamplingEngine:
-    """One compiled, batch-vmapped sampling surface for a bound solver."""
+    """One compiled, batch-vmapped sampling surface for a bound solver.
 
-    def __init__(self, solver: Solver, dtype: jnp.dtype = jnp.float32):
+    ``mesh`` is an optional ``repro.parallel.MeshSpec``; a non-trivial spec
+    builds the device mesh once at engine construction and every compiled
+    program is placed on it (see module docstring).  The trivial spec (or
+    ``None``) compiles the exact single-device program.
+    """
+
+    def __init__(self, solver: Solver, dtype: jnp.dtype = jnp.float32,
+                 mesh: Optional[MeshSpec] = None):
         self.solver = solver
         self.dtype = jnp.dtype(dtype)
         self.name = solver.name
         self.ts = np.asarray(solver.ts, dtype=np.float64)
         self.nfe = solver.nfe          # evals, not steps: 2x for heun/dpm2
         self._compiled: dict[Any, tuple[Callable, Callable]] = {}
+
+        self.mesh_spec = (mesh if mesh is not None and not mesh.is_single
+                          else None)
+        self.mesh = self.mesh_spec.build() if self.mesh_spec else None
 
         if isinstance(solver, LinearMultistepSolver):
             alpha = np.asarray(solver.alpha, np.float64)      # (N,)
@@ -124,6 +150,52 @@ class SamplingEngine:
     def _native(self, x: Array, d: Array, t: Array) -> Array:
         return x - t * d if self.native_x0 else d
 
+    # -- mesh placement ------------------------------------------------------
+
+    def _x_pspec(self, shape, leading: int = 0) -> P:
+        """PartitionSpec for a (..., B, D) buffer, divisibility-checked.
+
+        ``leading`` counts replicated leading axes (1 for hist (H, B, D) and
+        Q rows (cap, B, D)).  An axis the mesh doesn't divide evenly falls
+        back to replication for that buffer (jax < 0.5 rejects uneven
+        explicit shardings; the serve loop pads flushes so the hot path
+        never hits this).
+        """
+        ms = self.mesh_spec
+        b, d = shape[leading], shape[leading + 1]
+        return P(*((None,) * leading
+                   + (ms.batch_axis if ms.dp > 1 and b % ms.dp == 0 else None,
+                      ms.state_axis if ms.state > 1 and d % ms.state == 0
+                      else None)))
+
+    def _constrain(self, x: Array, leading: int = 0) -> Array:
+        """Pin a (..., B, D) buffer to the engine mesh (no-op when unbound)."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self._x_pspec(x.shape, leading)))
+
+    def _jit(self, fn: Callable, donate: bool) -> Callable:
+        """jit a sampling program; arg 0 is the (B, D) state (the only
+        donation candidate).  Placement rides on trace-time sharding
+        constraints (shape-aware, see ``_x_pspec``) rather than rigid
+        ``in_shardings``, so one engine serves every batch size."""
+        if not donate:
+            return jax.jit(fn)
+        return jax.jit(fn, donate_argnums=(0,))
+
+    def shard(self, x: Array) -> Array:
+        """Place a (B, D) buffer onto the engine mesh (identity when unbound).
+
+        ``Pipeline`` routes priors and calibration batches through this so
+        data starts life device-resident in the layout the compiled scan
+        expects — no implicit reshard on the first step.
+        """
+        if self.mesh is None:
+            return x
+        return jax.device_put(
+            x, NamedSharding(self.mesh, self._x_pspec(x.shape)))
+
     # -- compiled paths ------------------------------------------------------
 
     def _plain_body(self, eps_fn: EpsFn):
@@ -132,11 +204,11 @@ class SamplingEngine:
             t, cf = inp
             d = eps_fn(x, t)
             nat = self._native(x, d, t)
-            x_next = ops.fused_step(x, nat, hist, cf)
+            x_next = self._constrain(ops.fused_step(x, nat, hist, cf))
             return (x_next, self._push_hist(hist, nat)), None
         return body
 
-    def _build_plain(self, eps_fn: EpsFn) -> Callable:
+    def _build_plain(self, eps_fn: EpsFn, donate: bool = False) -> Callable:
         if isinstance(self.solver, TwoEvalSolver):
             solver = self.solver
             ts = self.ts_jax
@@ -145,24 +217,49 @@ class SamplingEngine:
                 def body(carry, j):
                     x, hist = carry
                     x, hist, _ = solver.step(eps_fn, x, j, hist)
-                    return (x, hist), None
+                    return (self._constrain(x), hist), None
                 (x, _), _ = jax.lax.scan(
-                    body, (x_t, solver.init_hist(x_t)),
+                    body, (self._constrain(x_t), solver.init_hist(x_t)),
                     jnp.arange(len(ts) - 1))
                 return x
-            return jax.jit(run)
+            return self._jit(run, donate)
 
         body = self._plain_body(eps_fn)
         ts = self.ts_jax[:-1]
         coef = self.coef
 
         def run(x_t: Array) -> Array:
-            (x, _), _ = jax.lax.scan(body, (x_t, self._hist0(x_t)), (ts, coef))
+            (x, _), _ = jax.lax.scan(
+                body, (self._constrain(x_t), self._hist0(x_t)), (ts, coef))
             return x
-        return jax.jit(run)
+        return self._jit(run, donate)
+
+    def _basis_fn(self, n_basis: int) -> Callable:
+        """(q_rows, q_mask, d) -> u: replicated vmap basis, or the
+        ``core.distributed`` collective path when the state dim is sharded.
+
+        Shapes are inspected at trace time: shard_map needs evenly divisible
+        axes, so an uneven batch drops its DP spec and an uneven state dim
+        falls back to the replicated basis for that trace only.
+        """
+        replicated = lambda rows, mask, d: _batched_basis(
+            _QBuffer(rows, mask), d, n_basis)
+        if self.mesh is None or self.mesh_spec.state <= 1:
+            return replicated
+        ms = self.mesh_spec
+
+        def basis(rows, mask, d):
+            if d.shape[1] % ms.state != 0:
+                return replicated(rows, mask, d)
+            bax = (ms.batch_axis
+                   if ms.dp > 1 and d.shape[0] % ms.dp == 0 else None)
+            return distributed.batched_pas_basis_sharded(
+                self.mesh, ms.state_axis, bax, n_basis)(rows, mask, d)
+        return basis
 
     def _build_pas(self, eps_fn: EpsFn, active: tuple[bool, ...],
-                   coord_mode: str, n_basis: int) -> Callable:
+                   coord_mode: str, n_basis: int,
+                   donate: bool = False) -> Callable:
         if not isinstance(self.solver, LinearMultistepSolver):
             raise TypeError(
                 f"PAS correction requires a 1-eval solver; got {self.name}")
@@ -171,26 +268,30 @@ class SamplingEngine:
         ts = self.ts_jax
         coef = self.coef
         body = self._plain_body(eps_fn)
+        basis = self._basis_fn(n_basis)
 
         def run(x_t: Array, coords: Array) -> Array:
-            x = x_t
-            hist = self._hist0(x_t)
-            # the calibration-time Q buffer and batched basis, verbatim
-            # (shared with pas.py so the layouts can never drift apart)
-            q = _QBuffer.create(x_t, cap=n + 1)
+            x = self._constrain(x_t)
+            hist = self._constrain(self._hist0(x_t), leading=1)
+            # the calibration-time Q buffer layout, bounded to the rows the
+            # corrected prefix can actually touch (shared with pas.py so the
+            # layouts can never drift apart)
+            q = _QBuffer.create(x_t, cap=pas_mod._sampling_q_cap(last, n))
+            q = _QBuffer(self._constrain(q.rows, leading=1), q.mask)
 
             for j in range(last + 1):     # static unroll: ~#corrected steps
                 t = ts[j]
                 d = eps_fn(x, t)
                 if active[j]:
-                    u = _batched_basis(q, d, n_basis)          # (B, k, D)
+                    u = basis(q.rows, q.mask, d)               # (B, k, D)
                     cs = _scaled_coords(coords[j], d, coord_mode)
                     x, d_used, nat = ops.fused_pas_step(
                         x, u, cs, hist, coef[j], native_x0=self.native_x0)
+                    x = self._constrain(x)
                 else:
                     nat = self._native(x, d, t)
                     d_used = d
-                    x = ops.fused_step(x, nat, hist, coef[j])
+                    x = self._constrain(ops.fused_step(x, nat, hist, coef[j]))
                 hist = self._push_hist(hist, nat)
                 if j < last:
                     q = q.push(d_used, j + 1)
@@ -199,15 +300,19 @@ class SamplingEngine:
                 (x, _), _ = jax.lax.scan(
                     body, (x, hist), (ts[last + 1:-1], coef[last + 1:]))
             return x
-        return jax.jit(run)
+        return self._jit(run, donate)
 
     # -- public API ----------------------------------------------------------
 
-    def sample(self, eps_fn: EpsFn, x_t: Array, params=None, cfg=None) -> Array:
+    def sample(self, eps_fn: EpsFn, x_t: Array, params=None, cfg=None, *,
+               donate_x: bool = False) -> Array:
         """Sample ts[0] -> ts[N].  The one sampling entry point.
 
         ``params``/``cfg`` are ``pas.PASParams``/``pas.PASConfig``; omit them
         (or pass params with no active step) for the uncorrected solver.
+        ``donate_x=True`` compiles a variant that donates the ``x_t`` buffer
+        to the scan (the serve loop's flush path: its input is never reused,
+        so the initial-state copy is free); the caller's array is invalidated.
         """
         if params is not None and bool(np.asarray(params.active).any()):
             if cfg is None:
@@ -215,14 +320,48 @@ class SamplingEngine:
                 cfg = PASConfig()
             key = ("pas", _fn_key(eps_fn),
                    tuple(bool(a) for a in np.asarray(params.active)),
-                   cfg.coord_mode, int(params.coords.shape[1]))
+                   cfg.coord_mode, int(params.coords.shape[1]), donate_x)
             fn = self._get_compiled(key, lambda: self._build_pas(
-                eps_fn, key[2], cfg.coord_mode, key[4]), eps_fn)
+                eps_fn, key[2], cfg.coord_mode, key[4], donate_x), eps_fn)
             return fn(x_t, jnp.asarray(params.coords, self.dtype))
 
-        key = ("plain", _fn_key(eps_fn))
-        fn = self._get_compiled(key, lambda: self._build_plain(eps_fn), eps_fn)
+        key = ("plain", _fn_key(eps_fn), donate_x)
+        fn = self._get_compiled(
+            key, lambda: self._build_plain(eps_fn, donate_x), eps_fn)
         return fn(x_t)
+
+    def aot_compile(self, eps_fn: EpsFn, batch: int, dim: int) -> dict:
+        """Lower + compile the plain program ahead of time; report placement.
+
+        This is the serve dry-run: under a virtual host mesh
+        (``XLA_FLAGS=--xla_force_host_platform_device_count=N``) it exercises
+        the exact partitioned program the mesh engine runs in production and
+        returns {devices, per-device memory, collective op counts} without
+        executing a single model eval.
+        """
+        fn = self._get_compiled(("plain", _fn_key(eps_fn), False),
+                                lambda: self._build_plain(eps_fn), eps_fn)
+        x_spec = jax.ShapeDtypeStruct((batch, dim), self.dtype)
+        compiled = fn.lower(x_spec).compile()
+        hlo = compiled.as_text()
+        colls = {name: hlo.count(f" {name}(") + hlo.count(f" {name}-start(")
+                 for name in ("all-reduce", "all-gather", "reduce-scatter",
+                              "collective-permute", "all-to-all")}
+        out = {
+            "devices": self.mesh.size if self.mesh is not None else 1,
+            "mesh": (self.mesh_spec.to_dict() if self.mesh_spec is not None
+                     else None),
+            "batch": batch, "dim": dim,
+            "collectives": {k: v for k, v in colls.items() if v},
+        }
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            out["memory_per_device_bytes"] = {
+                "arguments": ma.argument_size_in_bytes,
+                "outputs": ma.output_size_in_bytes,
+                "temps": ma.temp_size_in_bytes,
+            }
+        return out
 
     def _get_compiled(self, key, build, eps_fn) -> Callable:
         """Compiled-program cache; pins eps_fn so id-based keys stay valid.
@@ -280,13 +419,16 @@ def _lookup(key: Any, build: Callable[[], SamplingEngine]) -> SamplingEngine:
 def get_engine_for_spec(spec) -> SamplingEngine:
     """Engine for a ``repro.api.SamplerSpec`` — the canonical keying.
 
-    The cache key is ``spec.engine_key`` = (solver, nfe, schedule, dtype):
-    the engine-relevant projection of the spec, so specs differing only in
-    teacher or PASConfig share one compiled binding.
+    The cache key is ``spec.engine_key`` = (solver, nfe, schedule, dtype,
+    mesh): the engine-relevant projection of the spec, so specs differing
+    only in teacher or PASConfig share one compiled binding, while specs
+    differing in placement get their own (a mesh engine and a single-device
+    engine compile different programs).
     """
     return _lookup(spec.engine_key,
                    lambda: SamplingEngine(spec.make_solver(),
-                                          jnp.dtype(spec.dtype)))
+                                          jnp.dtype(spec.dtype),
+                                          mesh=spec.mesh))
 
 
 def get_engine(name: str, ts: np.ndarray,
@@ -324,5 +466,13 @@ def clear_engine_cache() -> None:
 
 
 def engine_cache_stats() -> dict[str, int]:
+    """Cache shape + per-engine compiled-program totals.
+
+    ``compiled_variants`` sums ``compiled_variants()`` over every live cache
+    entry, so mesh-keyed engines (which otherwise look identical in the
+    ``engines`` count) are observable in the pipeline-smoke CI log.
+    """
     return {"engines": len(_ENGINES), "hits": _STATS.hits,
-            "misses": _STATS.misses}
+            "misses": _STATS.misses,
+            "compiled_variants": sum(e.compiled_variants()
+                                     for e in _ENGINES.values())}

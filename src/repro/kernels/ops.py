@@ -6,6 +6,18 @@ Models call these, never the kernels directly.  Dispatch policy:
   * ``interpret=True`` forces the Pallas kernel body in interpret mode
     (how the kernel tests run on CPU);
   * env ``REPRO_FORCE_PALLAS=1`` / ``REPRO_DISABLE_PALLAS=1`` override.
+
+shard_map contract (mesh-native sampling, ``core.distributed`` /
+``engine``): every op here may be called from inside a ``shard_map`` body,
+where it sees *per-device shard* shapes instead of global ones.  That is
+safe because dispatch is backend-keyed (host-side, trace-time — never on
+array values) and every kernel treats its tiled axes independently: callers
+shard only axes the kernels never reduce over (batch, and the D tiling
+axis), so a shard is just a smaller instance of the same shape contract.
+Kernels that DO reduce (``gram`` over D) are composed with an explicit
+``lax.psum`` by the caller (``distributed.psum_gram``) — the kernel itself
+stays local.  On TPU the per-device shard must still satisfy the kernel's
+tile minimums; size meshes so D_local keeps the lane dim >= 128.
 """
 from __future__ import annotations
 

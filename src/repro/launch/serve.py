@@ -7,19 +7,31 @@ Modes:
 The sampler is built through ``repro.api``: one ``SamplerSpec``, one
 ``Pipeline``.  With ``--artifact-dir`` the calibrated ~10 parameters are
 persisted as a ``PASArtifact`` and reloaded on the next launch (calibration
-is skipped when a matching artifact exists).
+is skipped when a matching artifact exists).  Artifacts are placement-free:
+an artifact calibrated under one ``--mesh`` reloads onto any other.
+
+Sharded serving: ``--dp N`` shards the flush batch over N data-parallel
+devices, ``--state-shard M`` shards the flattened state dim over M devices
+(PAS reductions go through the ``core.distributed`` collectives), and
+``--mesh NxM`` sets both at once.  ``--lower-only`` AOT-lowers and compiles
+the partitioned sampling program and reports placement/collectives without
+executing — run it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (or more) to exercise
+the production program on a virtual host mesh.
 
   PYTHONPATH=src python -m repro.launch.serve --nfe 10 --solver ddim \
-      [--t-min 0.002] [--t-max 80.0] [--max-batch 256] [--artifact-dir DIR]
+      [--t-min 0.002] [--t-max 80.0] [--max-batch 256] [--artifact-dir DIR] \
+      [--dp N] [--state-shard M | --mesh NxM] [--lower-only]
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 
-from repro.api import PASArtifact, Pipeline
+from repro.api import MeshSpec, PASArtifact, Pipeline
 from repro.core import PASConfig, two_mode_gmm
 from repro.engine import engine_cache_stats
 from repro.runtime import DiffusionServer, Request, ServeConfig
@@ -51,14 +63,17 @@ def _diffusion_lm_eps(arch: str, seq: int = 32):
 def _calibrated_pipeline(cfg: ServeConfig, eps_fn, dim: int,
                          artifact_dir: str | None) -> Pipeline:
     """Load the PAS artifact if a matching one exists, else calibrate (and
-    persist when --artifact-dir is given)."""
+    persist when --artifact-dir is given).  The artifact spec is compared
+    modulo placement and re-placed onto this launch's mesh, so the same
+    artifact serves any --mesh shape."""
     spec = cfg.to_spec()
     if artifact_dir and PASArtifact.exists(artifact_dir):
         pipe = Pipeline.load(artifact_dir, eps_fn, dim=dim,
-                             expected_spec=spec)
+                             expected_spec=spec, mesh=spec.mesh)
         print(f"PAS artifact loaded from {artifact_dir!r}: steps "
               f"{pipe.params.corrected_paper_steps()} "
-              f"({pipe.params.n_stored_params} params)")
+              f"({pipe.params.n_stored_params} params, re-placed onto "
+              f"dp={spec.mesh.dp} state={spec.mesh.state})")
         return pipe
     pipe = Pipeline.from_spec(spec, eps_fn, dim=dim)
     pipe.calibrate(key=jax.random.key(0), batch=128)
@@ -87,7 +102,22 @@ def main() -> None:
                     help="micro-batch budget; larger requests are chunked")
     ap.add_argument("--artifact-dir", default=None,
                     help="save/load the calibrated PASArtifact here")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel mesh axis (batch sharding)")
+    ap.add_argument("--state-shard", type=int, default=1,
+                    help="state-dim mesh axis (D sharding; PAS reductions "
+                         "run through core.distributed collectives)")
+    ap.add_argument("--mesh", default=None, metavar="DPxSTATE",
+                    help="shorthand setting both axes, e.g. --mesh 8x1")
+    ap.add_argument("--lower-only", action="store_true",
+                    help="AOT-lower + compile the partitioned program and "
+                         "report placement/collectives; no sampling")
     args = ap.parse_args()
+
+    if args.mesh is not None:
+        dp, _, state = args.mesh.partition("x")
+        args.dp, args.state_shard = int(dp), int(state or 1)
+    mesh = MeshSpec(dp=args.dp, state=args.state_shard)
 
     if args.mode == "oracle":
         eps_fn, dim = _oracle_eps(args.dim)
@@ -98,7 +128,19 @@ def main() -> None:
                       t_min=args.t_min, t_max=args.t_max,
                       max_batch=args.max_batch,
                       use_pas=not args.no_pas,
-                      pas=PASConfig(val_fraction=0.25, n_sgd_iters=150))
+                      pas=PASConfig(val_fraction=0.25, n_sgd_iters=150),
+                      mesh=mesh)
+
+    if args.lower_only:
+        # the serve dry-run: compile (never run) the partitioned program —
+        # under XLA_FLAGS=--xla_force_host_platform_device_count=N this is
+        # the exact lowered program a real N-device mesh executes
+        pipe = Pipeline.from_spec(cfg.to_spec(), eps_fn, dim=dim)
+        batch = args.max_batch + mesh.pad_batch(args.max_batch)
+        info = pipe.engine.aot_compile(eps_fn, batch=batch, dim=dim)
+        print(json.dumps(info, indent=1))
+        print("LOWER_OK")
+        return
 
     if args.no_pas:
         server = DiffusionServer(eps_fn, dim, cfg)
@@ -110,7 +152,11 @@ def main() -> None:
                          for i in range(args.requests)])
     print(f"served {server.stats['samples']} samples / "
           f"{server.stats['requests']} requests in "
-          f"{server.stats['batches']} batches, {server.stats['wall_s']:.2f}s")
+          f"{server.stats['batches']} batches "
+          f"(mesh dp={mesh.dp} state={mesh.state}, "
+          f"{server.stats['padded_samples']} pad rows, "
+          f"{server.stats['nfe_total']} evals), "
+          f"{server.stats['wall_s']:.2f}s")
     print(f"engine: {server.engine.name} @ {server.engine.nfe} NFE, "
           f"{server.engine.compiled_variants()} compiled variant(s), "
           f"cache {engine_cache_stats()}")

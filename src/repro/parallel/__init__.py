@@ -1,5 +1,6 @@
+from .mesh import MeshSpec
 from .sharding import (AxisRules, axis_rules, constrain, current_rules,
                        param_partition_specs, spec_for)
 
-__all__ = ["AxisRules", "axis_rules", "constrain", "current_rules",
+__all__ = ["AxisRules", "MeshSpec", "axis_rules", "constrain", "current_rules",
            "param_partition_specs", "spec_for"]

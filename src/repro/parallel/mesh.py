@@ -1,0 +1,117 @@
+"""MeshSpec: the declarative, hashable placement half of a sampler spec.
+
+A ``MeshSpec`` describes *where* a sampling program runs — a (dp, state)
+device grid plus the mesh-axis names the batch and flattened state dims are
+sharded over — the same way ``ScheduleSpec`` describes *when* it evaluates.
+It is a frozen dataclass so it can ride inside ``repro.api.SamplerSpec``
+(hashable: participates in the engine-cache key; JSON-round-trippable: lands
+in the artifact header), while staying importable from the engine layer,
+which sits below ``repro.api``.
+
+Placement is not part of the sampler's math: two specs differing only in
+mesh produce bit-identical fp32 samples (tests/test_mesh.py), and a
+``PASArtifact`` saved under one mesh reloads onto any other
+(``Pipeline.load(..., mesh=...)``).
+
+Axis conventions match ``repro.parallel.sharding.AxisRules``: the batch axis
+is data-parallel ("data"), the state axis shards the flattened sample dim D
+("model") and is what the ``core.distributed`` collectives reduce over.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["MeshSpec", "compat_make_mesh", "shard_map"]
+
+
+try:                                    # jax >= 0.6 top-level export
+    shard_map = jax.shard_map
+except AttributeError:                  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+
+def compat_make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """jax.make_mesh across jax versions (explicit Auto axis types on >=0.5)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """A (dp, state) sampling mesh: batch-DP x state-dim sharding.
+
+    ``dp`` shards the batch axis of every (B, D) sampling buffer;
+    ``state`` shards the flattened state dim D (the axis every PAS reduction
+    runs over — see ``core.distributed``).  The default (1, 1) is the
+    single-device spec: engines bound to it compile exactly the pre-mesh
+    program and no mesh is constructed at all.
+    """
+
+    dp: int = 1
+    state: int = 1
+    batch_axis: str = "data"
+    state_axis: str = "model"
+
+    def __post_init__(self):
+        object.__setattr__(self, "dp", int(self.dp))
+        object.__setattr__(self, "state", int(self.state))
+        if self.dp < 1 or self.state < 1:
+            raise ValueError(f"mesh axes must be >= 1, got dp={self.dp} "
+                             f"state={self.state}")
+        if self.batch_axis == self.state_axis:
+            raise ValueError(f"batch_axis and state_axis must differ, both "
+                             f"{self.batch_axis!r}")
+
+    # -- geometry ----------------------------------------------------------
+
+    @property
+    def n_devices(self) -> int:
+        return self.dp * self.state
+
+    @property
+    def is_single(self) -> bool:
+        """True for the trivial spec: no mesh is built, nothing is sharded."""
+        return self.n_devices == 1
+
+    def build(self) -> Mesh:
+        """Construct the device mesh (requires dp*state visible devices)."""
+        avail = len(jax.devices())
+        if avail < self.n_devices:
+            raise ValueError(
+                f"MeshSpec(dp={self.dp}, state={self.state}) needs "
+                f"{self.n_devices} devices but only {avail} are visible "
+                f"(hint: XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{self.n_devices} for a virtual host mesh)")
+        return compat_make_mesh((self.dp, self.state),
+                                (self.batch_axis, self.state_axis))
+
+    # -- shardings ---------------------------------------------------------
+
+    def x_pspec(self) -> P:
+        """PartitionSpec for a (B, D) sampling buffer under this mesh."""
+        return P(self.batch_axis if self.dp > 1 else None,
+                 self.state_axis if self.state > 1 else None)
+
+    def x_sharding(self, mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, self.x_pspec())
+
+    def replicated(self, mesh: Mesh) -> NamedSharding:
+        return NamedSharding(mesh, P())
+
+    def pad_batch(self, n: int) -> int:
+        """Rows of padding needed to make an n-row flush DP-divisible."""
+        return (-n) % self.dp
+
+    # -- serialisation -----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict | None) -> "MeshSpec":
+        return cls(**(d or {}))

@@ -10,6 +10,13 @@ the pipeline owns the spec, the fused engine binding, and the PAS coordinate
 table (~10 floats) — hot-swappable without touching model weights
 (plug-and-play, paper §3.5).  Hot-swapping PAS params only re-specialises the
 corrected prefix; the compiled plain path is untouched.
+
+Mesh serving: ``ServeConfig.mesh`` (a ``repro.parallel.MeshSpec``) binds the
+pipeline's engine to a (dp, state) device grid.  Flushes are padded to a
+DP-divisible row count (pad rows are masked back out of every response), the
+flush buffer is donated to the compiled scan, and ``stats["nfe_total"]``
+counts the model evaluations *actually executed* — per padded row, chunked
+flushes and pad waste included — so the counter is an honest cost meter.
 """
 from __future__ import annotations
 
@@ -21,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import Pipeline, SamplerSpec, ScheduleSpec
+from repro.api import MeshSpec, Pipeline, SamplerSpec, ScheduleSpec
 from repro.core import PASConfig, PASParams
 
 __all__ = ["ServeConfig", "DiffusionServer", "Request"]
@@ -42,13 +49,14 @@ class ServeConfig:
     max_batch: int = 256
     use_pas: bool = True
     pas: PASConfig = dataclasses.field(default_factory=PASConfig)
+    mesh: MeshSpec = dataclasses.field(default_factory=MeshSpec)
 
     def to_spec(self) -> SamplerSpec:
         """The declarative sampler description this config serves."""
         return SamplerSpec(
             solver=self.solver, nfe=self.nfe,
             schedule=ScheduleSpec(t_min=self.t_min, t_max=self.t_max),
-            pas=self.pas)
+            pas=self.pas, mesh=self.mesh)
 
 
 class DiffusionServer:
@@ -61,8 +69,13 @@ class DiffusionServer:
                                                  dim=dim))
         if pas_params is not None:
             self.pipeline.set_params(pas_params)
+        # nfe_total = model evaluations actually executed, counted per padded
+        # flush row: a flush of R rows on an engine whose trajectory costs E
+        # evals (E = 2x steps for 2-eval teachers) adds R * E.  Chunked
+        # flushes and DP pad rows are therefore included — the counter is the
+        # true compute spent, not requests x nominal-NFE.
         self.stats = {"requests": 0, "samples": 0, "batches": 0,
-                      "nfe_total": 0, "wall_s": 0.0}
+                      "nfe_total": 0, "padded_samples": 0, "wall_s": 0.0}
 
     @classmethod
     def from_pipeline(cls, pipeline: Pipeline,
@@ -73,7 +86,7 @@ class DiffusionServer:
             ts = spec.ts()
             cfg = ServeConfig(nfe=spec.nfe, solver=spec.solver,
                               t_min=float(ts[-1]), t_max=float(ts[0]),
-                              pas=spec.pas)
+                              pas=spec.pas, mesh=spec.mesh)
         return cls(pipeline.eps_fn, pipeline.dim, cfg, pipeline=pipeline)
 
     # -- pipeline delegation ------------------------------------------------
@@ -103,7 +116,10 @@ class DiffusionServer:
         self.pipeline.set_params(params)
 
     def _run_batch(self, x_t: jnp.ndarray) -> jnp.ndarray:
-        return self.pipeline.sample(x_t, use_pas=self.cfg.use_pas)
+        # the flush buffer is built fresh per flush and never reused, so it
+        # is donated to the compiled scan (free initial-state buffer)
+        return self.pipeline.sample(x_t, use_pas=self.cfg.use_pas,
+                                    donate_x=True)
 
     # -- serving -------------------------------------------------------------
 
@@ -113,23 +129,36 @@ class DiffusionServer:
         Oversized requests (n_samples > max_batch) are split into
         max_batch-sized chunks across flushes; the final partial chunk stays
         pending so later requests can pack into the same batch.
+
+        Under a DP mesh every flush is padded to a DP-divisible row count
+        (prior rows repeated as ballast — always in-distribution for the
+        model) and the pad rows are masked back out of the responses; they
+        still show up in ``nfe_total``/``padded_samples`` because the
+        devices really did burn those evals.
         """
         parts: list[list[np.ndarray]] = [[] for _ in requests]
         pending: list[tuple[int, jnp.ndarray]] = []  # (request idx, x_T rows)
         sizes: list[int] = []
         t0 = time.time()
+        mesh = self.pipeline.mesh_spec
 
         def flush():
             if not pending:
                 return
             x_t = jnp.concatenate([x for _, x in pending], axis=0)
+            n_rows = int(x_t.shape[0])
+            pad = mesh.pad_batch(n_rows)
+            if pad:                       # pad-and-mask to a DP-divisible batch
+                filler = jnp.tile(x_t, (pad // n_rows + 1, 1))[:pad]
+                x_t = jnp.concatenate([x_t, filler], axis=0)
             x0 = np.asarray(self._run_batch(x_t))
             off = 0
             for (i, _), n in zip(pending, sizes):
                 parts[i].append(x0[off:off + n])
                 off += n
             self.stats["batches"] += 1
-            self.stats["nfe_total"] += self.solver.nfe
+            self.stats["nfe_total"] += (n_rows + pad) * self.engine.nfe
+            self.stats["padded_samples"] += pad
             pending.clear()
             sizes.clear()
 

@@ -311,6 +311,25 @@ def test_serve_small_requests_unchanged(gmm):
     assert seen == [6, 6, 3]
 
 
+def test_serve_nfe_counts_model_evals_executed(gmm):
+    """nfe_total = per-row model evals actually executed, chunked flushes
+    included — regression for the per-batch x nominal-NFE accounting.
+
+    A 2-eval teacher (heun) over NFE intervals costs 2*NFE evals per row;
+    a 20-row request chunked at max_batch=8 executes 8+8+4 rows.
+    """
+    cfg = ServeConfig(nfe=NFE, solver="heun", max_batch=8, use_pas=False)
+    server = DiffusionServer(gmm.eps, DIM, cfg)
+    evals_per_row = server.engine.nfe
+    assert evals_per_row == 2 * NFE              # evals, not steps
+    server.serve([Request(seed=0, n_samples=20)])
+    assert server.stats["nfe_total"] == 20 * evals_per_row
+    assert server.stats["padded_samples"] == 0
+    # a second, packed flush keeps counting real rows
+    server.serve([Request(seed=1, n_samples=3), Request(seed=2, n_samples=4)])
+    assert server.stats["nfe_total"] == 27 * evals_per_row
+
+
 def test_serve_config_to_spec_round_trip():
     cfg = ServeConfig(nfe=7, solver="ipndm2", t_min=0.01, t_max=40.0)
     spec = cfg.to_spec()

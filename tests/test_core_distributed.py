@@ -16,10 +16,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import distributed
 
-# distributed.py wraps steps with top-level jax.shard_map (jax>=0.5)
-pytestmark = pytest.mark.skipif(not hasattr(jax, "shard_map"),
-                                reason="needs jax>=0.5 top-level shard_map")
-
 _COMPARE_SNIPPET = r"""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
@@ -35,8 +31,7 @@ dvec = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
 coords = jnp.asarray([1.1, 0.3, -0.2, 0.05], jnp.float32)
 
 step = distributed.make_sharded_pas_step(mesh, "model")
-with jax.set_mesh(mesh):
-    d_tilde_dist = np.asarray(step(q, mask, dvec, coords))
+d_tilde_dist = np.asarray(step(q, mask, dvec, coords))
 
 u_ref = pca.pas_basis(q, mask, dvec, n_basis=4)
 d_norm = jnp.linalg.norm(dvec)
@@ -72,7 +67,6 @@ def test_psum_gram_matches_dense():
     def f(xl):
         return distributed.psum_gram(xl, "model")
 
-    with jax.set_mesh(mesh):
-        g = jax.shard_map(f, mesh=mesh, in_specs=P(None, "model"),
-                          out_specs=P(None, None))(x)
+    g = distributed.shard_map(f, mesh=mesh, in_specs=P(None, "model"),
+                              out_specs=P(None, None))(x)
     np.testing.assert_allclose(np.asarray(g), np.asarray(x @ x.T), rtol=1e-5)

@@ -150,7 +150,8 @@ def test_engine_cache_hit():
     clear_engine_cache()
     ts = schedules.polynomial_schedule(NFE, T_MIN, T_MAX)
     e1 = get_engine("ipndm3", ts)
-    assert engine_cache_stats() == {"engines": 1, "hits": 0, "misses": 1}
+    stats = engine_cache_stats()
+    assert (stats["engines"], stats["hits"], stats["misses"]) == (1, 0, 1)
     e2 = get_engine("ipndm3", ts.copy())      # equal schedule -> same binding
     assert e2 is e1
     assert engine_cache_stats()["hits"] == 1
@@ -175,6 +176,84 @@ def test_compiled_variant_reuse(setup):
     eng.sample(gmm.eps, x4, params=p)
     eng.sample(gmm.eps, x4, params=p)
     assert eng.compiled_variants() == 2
+
+
+def test_cache_stats_report_compiled_variants(setup):
+    """engine_cache_stats sums per-engine compiled programs (CI observability)."""
+    gmm, ts, x4 = setup
+    clear_engine_cache()
+    eng = get_engine("ddim", ts)
+    assert engine_cache_stats()["compiled_variants"] == 0
+    eng.sample(gmm.eps, x4)
+    assert engine_cache_stats()["compiled_variants"] == 1
+    eng.sample(gmm.eps, x4, params=_params())
+    eng2 = get_engine("ipndm2", ts)
+    eng2.sample(gmm.eps, x4)
+    assert engine_cache_stats()["compiled_variants"] == 3
+
+
+def test_donated_input_variant_matches(setup):
+    """donate_x compiles a separate variant with identical outputs; the
+    donated input buffer is invalidated."""
+    gmm, ts, _ = setup
+    eng = SamplingEngine(solvers.make_solver("ddim", ts))
+    x = gmm.sample_prior(jax.random.key(5), 4, T_MAX)
+    want = np.asarray(eng.sample(gmm.eps, x))
+    x_donate = x + 0.0                       # fresh buffer to give away
+    got = np.asarray(eng.sample(gmm.eps, x_donate, donate_x=True))
+    np.testing.assert_array_equal(got, want)
+    assert eng.compiled_variants() == 2
+    with pytest.raises((RuntimeError, ValueError)):
+        np.asarray(x_donate)                 # buffer was donated
+
+
+def test_pas_q_buffer_bounded_matches_old_layout(setup, monkeypatch):
+    """Q rows past last_active+2 are dead HBM: the bounded allocation must
+    reproduce the old full-cap (n+1) layout.
+
+    Dead rows are mask-zeroed out of every Gram, so all basis components
+    whose eigenvalue clears the degeneracy floor are unchanged; only
+    noise-floor components (arbitrary in *both* layouts — see module
+    docstring on eigh's degenerate subspace) may rotate.  The parity
+    contract is therefore: (a) floor-clearing basis components bit-equal,
+    (b) trajectories bit-equal whenever coords don't weight the noise floor.
+    """
+    gmm, ts, x4 = setup
+    sol = solvers.make_solver("ipndm3", ts)
+    active_js = (2, 3)                       # last_active=3 -> cap 5 < 6
+    active = np.zeros(NFE, dtype=bool)
+    active[list(active_js)] = True
+    coords = np.zeros((NFE, 4), np.float32)
+    for j in active_js:                      # weight only well-conditioned
+        coords[j] = [1.0, 0.05, -0.02, 0.0]  # components (noise floor = 0)
+    p = pas.PASParams(active=active, coords=jnp.asarray(coords))
+    cfg = pas.PASConfig()
+    assert pas._sampling_q_cap(3, NFE) == 5 < NFE + 1
+
+    # (a) basis parity on a real mid-trajectory Q buffer
+    x, hist = x4, sol.init_hist(x4)
+    q_bounded = pas._QBuffer.create(x4, cap=5)
+    q_full = pas._QBuffer.create(x4, cap=NFE + 1)
+    for j in range(3):
+        x, hist, d_j = sol.step(gmm.eps, x, j, hist)
+        q_bounded = q_bounded.push(d_j, j + 1)
+        q_full = q_full.push(d_j, j + 1)
+    d = gmm.eps(x, sol.ts_jax[3])
+    u_b = jax.jit(lambda q, dd: pas._batched_basis(q, dd, 4))(q_bounded, d)
+    u_f = jax.jit(lambda q, dd: pas._batched_basis(q, dd, 4))(q_full, d)
+    np.testing.assert_array_equal(np.asarray(u_b)[:, :3],
+                                  np.asarray(u_f)[:, :3])
+
+    # (b) trajectory parity, reference path and engine path
+    want_bounded = np.asarray(_seed_pas_jit(sol, gmm.eps, p, cfg)(x4))
+    got_bounded = np.asarray(
+        engine_for_solver(sol).sample(gmm.eps, x4, params=p, cfg=cfg))
+    monkeypatch.setattr(pas, "_sampling_q_cap", lambda last, n: n + 1)
+    want_full = np.asarray(_seed_pas_jit(sol, gmm.eps, p, cfg)(x4))
+    eng_full = SamplingEngine(sol)           # fresh: no cached bounded program
+    got_full = np.asarray(eng_full.sample(gmm.eps, x4, params=p, cfg=cfg))
+    np.testing.assert_array_equal(want_bounded, want_full)
+    np.testing.assert_allclose(got_bounded, got_full, rtol=0, atol=PAS_ATOL)
 
 
 def test_coef_table_layout(setup):
