@@ -1,0 +1,137 @@
+"""Calibration throughput: fused CalibrationEngine vs the legacy loop.
+
+The ISSUE-4 acceptance metric: at NFE=10, batch 256, fused calibration must
+beat the legacy path by >= 5x steady-state wall-clock.  Calibration here is
+what ``Pipeline.calibrate`` actually executes — paper Algorithm 1 *including*
+the nested teacher trajectory it trains against (§3.3):
+
+* ``legacy`` — the per-step reference loop (``pas.calibrate_reference``:
+  eager eps/basis dispatch, per-step jitted SGD, host-synced adoption) fed
+  by the eager teacher builder (``solvers.ground_truth_trajectory``);
+* ``fused``  — ``repro.engine.CalibrationEngine``: the teacher as one jitted
+  refinement scan and the whole of Algorithm 1 (eps evals, PCA bases, SGD
+  scans, on-device lax.cond adoption, compiled final-state gate) as one
+  cached program.
+
+Timings separate cold (first call: trace + compile) from warm (steady state,
+averaged over repeats): the fused program front-loads one large compile,
+which repeated calibrations — artifact refresh, solver/NFE sweeps like
+benchmarks/table5, serve fleets recalibrating per model drop — amortise
+away.  Phase breakdown (teacher / algorithm1 / end_to_end) and both columns
+land in root-level ``BENCH_calibration_fusion.json`` so the perf trajectory
+is recorded PR over PR.
+
+  PYTHONPATH=src python -m benchmarks.calibration_throughput \
+      [--batch 256] [--n-rep 5] [--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.core import pas, solvers
+from repro.engine import get_calibration_engine_for_spec
+
+from . import common
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_calibration_fusion.json"
+
+NFE = 10
+SOLVER = "ddim"
+
+
+def _timed(fn, n_rep: int) -> tuple[float, float]:
+    """(cold, warm) seconds: first call separately, then the mean of n_rep."""
+    t0 = time.time()
+    jax.block_until_ready(fn())
+    cold = time.time() - t0
+    t0 = time.time()
+    for _ in range(n_rep):
+        out = fn()
+    jax.block_until_ready(out)
+    return cold, (time.time() - t0) / n_rep
+
+
+def run(batch: int = 256, n_rep: int = 5, dry_run: bool = False) -> dict:
+    nfe, sgd_iters = (6, 40) if dry_run else (NFE, 300)
+    if dry_run:
+        batch, n_rep = 32, 2
+
+    gmm = common.oracle()
+    cfg = common.default_pas_cfg(n_sgd_iters=sgd_iters)
+    spec = common.spec_for(SOLVER, nfe, pas_cfg=cfg)
+    sol = spec.make_solver()
+    s_ts, t_ts, m = spec.teacher_grid()
+    tsol = spec.make_teacher(t_ts)
+    x_t = gmm.sample_prior(jax.random.key(0), batch, common.T_MAX)
+    jax.block_until_ready(x_t)
+    eng = get_calibration_engine_for_spec(spec)
+
+    phases = {}
+
+    # phase 1: the nested teacher trajectory (gt both arms train against)
+    def legacy_teacher():
+        return solvers.ground_truth_trajectory(
+            gmm.eps, s_ts, t_ts, m, x_t, teacher=tsol)
+
+    phases["teacher"] = {
+        "legacy": _timed(legacy_teacher, n_rep),
+        "fused": _timed(lambda: eng.teacher_trajectory(gmm.eps, x_t), n_rep),
+    }
+    gt = eng.teacher_trajectory(gmm.eps, x_t)
+    jax.block_until_ready(gt)
+
+    # phase 2: Algorithm 1 proper, on a fixed precomputed gt
+    phases["algorithm1"] = {
+        "legacy": _timed(
+            lambda: pas.calibrate_reference(sol, gmm.eps, x_t, gt, cfg)[0].coords,
+            n_rep),
+        "fused": _timed(
+            lambda: eng.calibrate(gmm.eps, x_t, gt)[0].coords, n_rep),
+    }
+
+    def row(arm):
+        teach, alg = phases["teacher"][arm], phases["algorithm1"][arm]
+        cold, warm = teach[0] + alg[0], teach[1] + alg[1]
+        return {
+            "teacher_warm_s": round(teach[1], 3),
+            "algorithm1_warm_s": round(alg[1], 3),
+            "cold_s": round(cold, 3), "warm_s": round(warm, 3),
+            "steps_per_s": round(nfe / warm, 2),
+        }
+
+    legacy, fused = row("legacy"), row("fused")
+    report = {
+        "solver": SOLVER, "nfe": nfe, "batch": batch, "dim": common.DIM,
+        "n_sgd_iters": sgd_iters, "n_rep": n_rep,
+        "backend": jax.default_backend(),
+        "legacy": legacy,
+        "fused": fused,
+        "speedup_warm": round(legacy["warm_s"] / fused["warm_s"], 2),
+        "speedup_warm_algorithm1_only": round(
+            phases["algorithm1"]["legacy"][1]
+            / phases["algorithm1"]["fused"][1], 2),
+        "speedup_cold": round(legacy["cold_s"] / fused["cold_s"], 2),
+        "generated": time.strftime("%F %T"),
+    }
+    if not dry_run:               # smoke runs don't pollute the perf record
+        OUT.write_text(json.dumps(report, indent=1))
+        common.save_table("calibration_throughput", [report])
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--n-rep", type=int, default=5)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny config, no JSON written (CI smoke)")
+    args = ap.parse_args()
+    rep = run(batch=args.batch, n_rep=args.n_rep, dry_run=args.dry_run)
+    print(json.dumps(rep, indent=1))
+    print(f"CALIBRATION_SPEEDUP_WARM={rep['speedup_warm']}x")

@@ -28,7 +28,7 @@ import jax
 from repro.core import pas as pas_mod
 from repro.core import solvers as solvers_mod
 from repro.core.pas import PASParams
-from repro.engine import get_engine_for_spec
+from repro.engine import get_calibration_engine_for_spec, get_engine_for_spec
 
 from .artifact import PASArtifact
 from .spec import SamplerSpec
@@ -44,11 +44,13 @@ def teacher_trajectory(spec: SamplerSpec, eps_fn: EpsFn, x_t: Array) -> Array:
 
     Runs the registry-resolved ``spec.teacher`` on the refined grid and
     indexes every (M+1)-th state; returns gt (N+1, B, D) aligned to the
-    student grid, gt[0] = x_t.
+    student grid, gt[0] = x_t.  Compiled: one jitted (student interval x
+    refinement) scan on the spec's mesh, cached per (spec, eps model) by the
+    ``CalibrationEngine`` — the eager reference lives in
+    ``core.solvers.ground_truth_trajectory``.
     """
-    s_ts, t_ts, m = spec.teacher_grid()
-    return solvers_mod.ground_truth_trajectory(
-        eps_fn, s_ts, t_ts, m, x_t, teacher=spec.make_teacher(t_ts))
+    return get_calibration_engine_for_spec(spec).teacher_trajectory(
+        eps_fn, x_t)
 
 
 class Pipeline:
@@ -115,6 +117,11 @@ class Pipeline:
 
     # -- calibration (Algorithm 1) -----------------------------------------
 
+    @property
+    def calibration_engine(self):
+        """The spec's cached ``CalibrationEngine`` (Alg. 1, fully compiled)."""
+        return get_calibration_engine_for_spec(self.spec)
+
     def calibrate(self, key: Optional[Array] = None, batch: int = 256, *,
                   x_t: Optional[Array] = None,
                   gt: Optional[Array] = None) -> "Pipeline":
@@ -122,14 +129,18 @@ class Pipeline:
 
         Builds the nested teacher trajectory internally (or takes a
         precomputed ``gt`` aligned to the student grid) and runs the paper's
-        adaptive search.  Returns ``self`` so ``.calibrate(...).save(d)``
-        chains.
+        adaptive search — the whole of Algorithm 1 as one compiled,
+        mesh-placed program (``repro.engine.CalibrationEngine``).  When the
+        noise batch is built here (the ``key`` path) its buffer is donated
+        to the compiled program.  Returns ``self`` so
+        ``.calibrate(...).save(d)`` chains.
         """
+        owns_x = x_t is None
         x_t = self._resolve_x(x_t, key, batch)
         if gt is None:
             gt = self.teacher_trajectory(x_t)
-        self.params, self.diag = pas_mod.calibrate(
-            self.solver, self.eps_fn, x_t, gt, self.spec.pas)
+        self.params, self.diag = self.calibration_engine.calibrate(
+            self.eps_fn, x_t, gt, donate=owns_x)
         return self
 
     def teacher_trajectory(self, x_t: Array) -> Array:
@@ -164,12 +175,14 @@ class Pipeline:
 
     def stats(self) -> dict:
         """Spec + calibration + compiled-engine state, one dict."""
-        from repro.engine import engine_cache_stats
+        from repro.engine import (calibration_engine_cache_stats,
+                                  engine_cache_stats)
         out = {
             "spec": self.spec.to_dict(),
             "calibrated": self.calibrated,
             "engine_compiled_variants": self.engine.compiled_variants(),
             "engine_cache": engine_cache_stats(),
+            "calibration_engine_cache": calibration_engine_cache_stats(),
             "mesh_devices": (self.engine.mesh.size
                              if self.engine.mesh is not None else 1),
         }

@@ -1,8 +1,8 @@
 """repro.core — PAS (PCA-based Adaptive Search) and its solver substrate."""
 
 from .analytic import GaussianMixture, gaussian_ode_solution, make_gmm, two_mode_gmm
-from .pas import (PASConfig, PASParams, calibrate, pas_sample,
-                  pas_sample_trajectory, truncation_error_curve)
+from .pas import (PASConfig, PASParams, calibrate, calibrate_reference,
+                  pas_sample, pas_sample_trajectory, truncation_error_curve)
 from .pca import cumulative_variance, pas_basis, schmidt, topk_right_singular
 from .schedules import nested_teacher_schedule, polynomial_schedule
 from .solvers import (SOLVER_NAMES, ground_truth_trajectory, make_solver,
@@ -12,7 +12,8 @@ from .teleport import GaussianStats, gaussian_stats_from_data, tp_schedule
 
 __all__ = [
     "GaussianMixture", "gaussian_ode_solution", "make_gmm", "two_mode_gmm",
-    "PASConfig", "PASParams", "calibrate", "pas_sample", "pas_sample_trajectory",
+    "PASConfig", "PASParams", "calibrate", "calibrate_reference",
+    "pas_sample", "pas_sample_trajectory",
     "truncation_error_curve", "cumulative_variance", "pas_basis", "schmidt",
     "topk_right_singular", "nested_teacher_schedule", "polynomial_schedule",
     "SOLVER_NAMES", "ground_truth_trajectory", "make_solver", "sample",

@@ -30,14 +30,14 @@ import numpy as np
 
 from .pca import pas_basis
 from .solvers import LinearMultistepSolver, Solver, SolverHist
-from .solvers import sample as solvers_sample
 
 Array = jax.Array
 EpsFn = Callable[[Array, Array], Array]
 
 __all__ = [
     "PASConfig", "PASParams", "LOSS_FNS",
-    "calibrate", "pas_sample", "pas_sample_trajectory", "truncation_error_curve",
+    "calibrate", "calibrate_reference", "pas_sample", "pas_sample_trajectory",
+    "truncation_error_curve",
 ]
 
 
@@ -149,12 +149,45 @@ def calibrate(
     gt: Array,           # (N+1, B, D) teacher trajectory aligned to solver.ts
     cfg: PASConfig = PASConfig(),
 ) -> tuple[PASParams, dict]:
+    """Learn PAS coordinates (paper Algorithm 1) via the fused engine.
+
+    .. deprecated::
+        Compat shim for pre-``repro.api`` call sites.  New code should build
+        a ``repro.api.Pipeline`` and call ``pipeline.calibrate`` — same
+        fused ``CalibrationEngine`` underneath, plus teacher construction,
+        artifacts, and spec-keyed caching in one object.
+
+    Delegates to ``repro.engine.CalibrationEngine`` — the whole of
+    Algorithm 1 (eps evals, PCA bases, SGD scans, on-device adoption,
+    compiled final-state gate) as one cached XLA program.  The interpreted
+    loop below (``calibrate_reference``) remains the reference
+    implementation the engine is parity-tested against
+    (tests/test_calibration_engine.py).
+    """
+    from repro.engine import calibration_engine_for_solver  # deferred: engine imports core
+    return calibration_engine_for_solver(solver, cfg).calibrate(eps_fn, x_t, gt)
+
+
+def calibrate_reference(
+    solver: Solver,
+    eps_fn: EpsFn,
+    x_t: Array,          # (B, D) initial noise for the calibration trajectories
+    gt: Array,           # (N+1, B, D) teacher trajectory aligned to solver.ts
+    cfg: PASConfig = PASConfig(),
+) -> tuple[PASParams, dict]:
     """Learn PAS coordinates (paper Algorithm 1), batched over B trajectories.
 
     Follows the paper exactly: steps are corrected *sequentially* (a corrected
     step changes every later state), each step's coordinates are trained with
     SGD against the teacher state, and the step is kept only if the L2 gain
     exceeds the tolerance (adaptive search).
+
+    This is the readable per-step reference the fused
+    ``repro.engine.CalibrationEngine`` is parity-tested against; production
+    call sites go through the engine (``calibrate`` above, or
+    ``Pipeline.calibrate``).  Per step it syncs one scalar (the adoption
+    decision drives host-side branch structure); the loss diagnostics stay
+    device-side and transfer once at the end.
     """
     if not isinstance(solver, LinearMultistepSolver):
         raise TypeError("PAS calibration requires a 1-eval solver (paper setup); "
@@ -168,8 +201,9 @@ def calibrate(
     q = _QBuffer.create(x_t, cap=n + 1)
 
     active = np.zeros(n, dtype=bool)
-    coords = np.zeros((n, cfg.n_basis), dtype=np.float32)
-    diag = {"loss_before": [], "loss_after": [], "gain": []}
+    coords_rows: list[tuple[int, Array]] = []
+    l2_plain_steps: list[Array] = []
+    l2_corr_steps: list[Array] = []
 
     sgd = _make_sgd(solver, cfg, train_loss)
     b = x_t.shape[0]
@@ -187,22 +221,23 @@ def calibrate(
         c_opt = sgd(c0, x[tr], u[tr], d_norm[tr], _hist_slice(hist, tr),
                     gt[j + 1][tr], j)
 
-        # adaptive-search decision on the L2 metric (paper eq. 20)
+        # adaptive-search decision on the L2 metric (paper eq. 20); the
+        # decision scalar is the only per-step host sync (it drives the
+        # static branch structure below)
         d_tilde = jax.vmap(_corrected_direction, (0, None, 0, None))(
             u, c_opt, d_norm, cfg.coord_mode)
         x_plain = solver.phi(x, d, j, hist)
         x_corr = solver.phi(x, d_tilde, j, hist)
-        l2_plain = float(jnp.mean((x_plain[va] - gt[j + 1][va]) ** 2))
-        l2_corr = float(jnp.mean((x_corr[va] - gt[j + 1][va]) ** 2))
-        adopt = (l2_plain - (l2_corr + cfg.tolerance)) > 0.0
+        l2_plain = jnp.mean((x_plain[va] - gt[j + 1][va]) ** 2)
+        l2_corr = jnp.mean((x_corr[va] - gt[j + 1][va]) ** 2)
+        adopt = bool(l2_plain - (l2_corr + cfg.tolerance) > 0.0)
 
-        diag["loss_before"].append(l2_plain)
-        diag["loss_after"].append(l2_corr)
-        diag["gain"].append(l2_plain - l2_corr)
+        l2_plain_steps.append(l2_plain)
+        l2_corr_steps.append(l2_corr)
 
         if adopt:
             active[j] = True
-            coords[j] = np.asarray(c_opt)
+            coords_rows.append((j, c_opt))
             x_new, d_used = x_corr, d_tilde
         else:
             x_new, d_used = x_plain, d
@@ -210,6 +245,20 @@ def calibrate(
         hist = solver.push(x, d_used, j, hist)
         q = q.push(d_used, j + 1)
         x = x_new
+
+    # one batched device->host transfer for coords + loss diagnostics
+    # (the seed loop paid three blocking float() syncs per step here)
+    l2p, l2c, final_l2 = jax.device_get(
+        (jnp.stack(l2_plain_steps), jnp.stack(l2_corr_steps),
+         jnp.mean((x - gt[-1]) ** 2)))
+    coords = np.zeros((n, cfg.n_basis), dtype=np.float32)
+    if coords_rows:
+        rows = jax.device_get(jnp.stack([c for _, c in coords_rows]))
+        for (j, _), row in zip(coords_rows, rows):
+            coords[j] = row
+    diag = {"loss_before": [float(v) for v in l2p],
+            "loss_after": [float(v) for v in l2c],
+            "gain": [float(p - c) for p, c in zip(l2p, l2c)]}
 
     params = PASParams(active=active, coords=jnp.asarray(coords))
 
@@ -219,20 +268,29 @@ def calibrate(
 
     diag["corrected_steps_paper_index"] = params.corrected_paper_steps()
     diag["n_stored_params"] = params.n_stored_params
-    diag["final_l2_to_gt"] = float(jnp.mean((x - gt[-1]) ** 2))
+    diag["final_l2_to_gt"] = float(final_l2)
     return params, diag
 
 
 def _final_state_gate(solver, eps_fn, x_gate, gt_gate, params: PASParams,
                       cfg: PASConfig) -> tuple[PASParams, list[int]]:
-    """Greedily drop corrected steps until PAS's final error <= plain final error."""
-    x_plain = solvers_sample(solver, eps_fn, x_gate)
+    """Greedily drop corrected steps until PAS's final error <= plain final error.
+
+    Rollouts go through the cached ``SamplingEngine`` for the solver — one
+    engine lookup; the plain baseline is the engine's compiled plain scan
+    (the seed path re-built it from ``solvers.sample`` per gate call) and
+    each trial mask reuses the engine's per-pattern compiled prefix instead
+    of re-tracing the eager trajectory loop per trial.
+    """
+    from repro.engine import engine_for_solver  # deferred: engine imports core
+    eng = engine_for_solver(solver)
+    x_plain = eng.sample(eps_fn, x_gate)
     e_plain = float(jnp.mean(jnp.linalg.norm(x_plain - gt_gate[-1], axis=-1)))
     active = params.active.copy()
     dropped: list[int] = []
     while active.any():
         trial = PASParams(active=active, coords=params.coords)
-        x_pas, _ = pas_sample_trajectory(solver, eps_fn, x_gate, trial, cfg)
+        x_pas = eng.sample(eps_fn, x_gate, params=trial, cfg=cfg)
         e_pas = float(jnp.mean(jnp.linalg.norm(x_pas - gt_gate[-1], axis=-1)))
         if e_pas <= e_plain * (1.0 + 1e-4):
             break
@@ -249,8 +307,18 @@ def _hist_slice(hist: SolverHist, s: slice) -> SolverHist:
     return SolverHist(buf=hist.buf[:, s], count=hist.count)
 
 
-def _make_sgd(solver, cfg: PASConfig, train_loss):
-    """jit-compiled SGD loop over the shared coordinates C."""
+def _sgd_loop(solver, cfg: PASConfig, train_loss):
+    """The Alg. 1 inner trainer as a pure function of one step's tensors.
+
+    ``run(c0, x, u, d_norm, hist, gt_next, j) -> c_opt``: an
+    ``n_sgd_iters``-step SGD scan over the shared coordinates C, with the
+    loss built from ``solver.phi`` (pure jnp — the kernels in
+    ``repro.kernels`` are forward-only, see ops.py).  This is the ONE
+    implementation of the trainer: the reference loop jits it per step
+    (``_make_sgd``) and the fused ``repro.engine.CalibrationEngine`` inlines
+    it into its compiled program, so the two paths can never train
+    different coordinates by construction.
+    """
 
     def loss_fn(c, x, u, d_norm, hist, gt_next, j):
         d_tilde = jax.vmap(_corrected_direction, (0, None, 0, None))(
@@ -260,7 +328,6 @@ def _make_sgd(solver, cfg: PASConfig, train_loss):
 
     grad = jax.grad(loss_fn)
 
-    @jax.jit
     def run(c0, x, u, d_norm, hist, gt_next, j):
         def body(c, _):
             return c - cfg.lr * grad(c, x, u, d_norm, hist, gt_next, j), None
@@ -268,6 +335,11 @@ def _make_sgd(solver, cfg: PASConfig, train_loss):
         return c
 
     return run
+
+
+def _make_sgd(solver, cfg: PASConfig, train_loss):
+    """jit-compiled SGD loop over the shared coordinates C."""
+    return jax.jit(_sgd_loop(solver, cfg, train_loss))
 
 
 # ---------------------------------------------------------------------------

@@ -1,15 +1,26 @@
-"""repro.engine — the fused, cached sampling surface (see engine.py).
+"""repro.engine — the fused, cached sampling + calibration surface.
 
 Engines are cached with ``repro.api.SamplerSpec`` keying as the canonical
-scheme (``get_engine_for_spec``); the legacy ``(name, ts, dtype)`` entry
-points remain as thin shims onto it.
+scheme (``get_engine_for_spec`` / ``get_calibration_engine_for_spec``); the
+legacy ``(name, ts, dtype)`` and solver-bound entry points remain as thin
+shims onto it.  ``SamplingEngine`` (engine.py) compiles Algorithm 2;
+``CalibrationEngine`` (calibration.py) compiles Algorithm 1 end-to-end on
+the same mesh and kernels.
 """
 
+from .calibration import (CalibrationEngine, calibration_engine_cache_stats,
+                          calibration_engine_for_solver,
+                          clear_calibration_engine_cache,
+                          get_calibration_engine_for_spec)
 from .engine import (SamplingEngine, clear_engine_cache, engine_cache_stats,
                      engine_for_solver, get_engine, get_engine_for_spec)
 
 __all__ = [
+    "CalibrationEngine",
     "SamplingEngine",
+    "calibration_engine_cache_stats",
+    "calibration_engine_for_solver",
+    "clear_calibration_engine_cache",
     "clear_engine_cache",
     "engine_cache_stats",
     "engine_for_solver",

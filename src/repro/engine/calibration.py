@@ -1,0 +1,423 @@
+"""CalibrationEngine: paper Algorithm 1 compiled end-to-end, one program.
+
+``core.pas.calibrate`` (now ``calibrate_reference``, kept as the parity
+oracle) is a Python loop: per step it runs an unjitted eps eval, an eagerly
+dispatched PCA/Schmidt basis, a separately-jitted SGD scan, blocking host
+syncs for the adoption metrics, and — when the final-state gate fires — a
+full eager re-sample per dropped step.  The paper's headline claim is that
+calibration is *cheap* (~10 parameters, sub-minute on one accelerator), so
+the interpreted loop was the last hot path in the repo that re-paid Python
+dispatch per step.
+
+``CalibrationEngine`` compiles the whole of Algorithm 1 into one cached XLA
+program per spec and eps model:
+
+* the N calibration steps are **statically unrolled** (Alg. 1 is inherently
+  sequential — a corrected step changes every later state) with the per-step
+  eps eval, Q-buffer/PCA basis construction (``SamplingEngine._basis_fn``:
+  the ``core.distributed`` psum collectives whenever the state dim is
+  sharded), the SGD inner ``lax.scan``, and the corrected-vs-plain rollout
+  through the fused step kernels (``kernels.ops.fused_step`` /
+  ``fused_pas_step``) all in the same program;
+* the adaptive-search adoption decision is a ``lax.cond`` **on-device** —
+  the (x, hist, Q) carries never round-trip host memory, and the
+  ``loss_before/loss_after/gain`` diagnostics come back as stacked device
+  arrays in one transfer instead of three blocking ``float()`` syncs per
+  step;
+* the final-state gate is **one compiled scan over candidate active-masks**
+  (``lax.map`` over the greedy drop sequence) instead of a Python ``while``
+  of eager re-samples, with the plain-trajectory baseline routed through the
+  cached ``SamplingEngine`` for the spec — one engine lookup, no per-trial
+  re-trace;
+* the nested teacher-trajectory builder (paper §3.3) is a jitted
+  student-interval x refinement scan on the same mesh, emitting only the
+  (N+1) aligned states instead of materialising the full refined grid;
+* programs are keyed and mesh-placed exactly like ``SamplingEngine``:
+  engines cache on (``spec.engine_key``, PASConfig, teacher), compiled
+  programs on the eps model, every (B, D) buffer carries the engine's
+  sharding constraints, and the ``donate=True`` path donates the x_T buffer
+  to the compiled program (aliased into the corrected end-state carry) when
+  the caller owns it (``Pipeline.calibrate``'s key-based path).
+
+Numerics follow ``calibrate_reference`` step for step (same basis, same SGD,
+same adoption metric); parity is asserted in tests/test_calibration_engine.py
+(same adopted step set, coords allclose, identical stored-parameter count).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pas as pas_mod
+from repro.core.pas import LOSS_FNS, PASConfig, PASParams, _QBuffer
+from repro.core.solvers import LinearMultistepSolver, Solver, SolverHist
+
+from repro.kernels import ops
+
+from .engine import (SamplingEngine, _CacheStats, _compiled_lookup, _fn_key,
+                     _lru_lookup, _scaled_coords, engine_for_solver,
+                     get_engine_for_spec)
+
+Array = jax.Array
+EpsFn = Callable[[Array, Array], Array]
+
+__all__ = [
+    "CalibrationEngine",
+    "get_calibration_engine_for_spec",
+    "calibration_engine_for_solver",
+    "clear_calibration_engine_cache",
+    "calibration_engine_cache_stats",
+]
+
+
+class CalibrationEngine:
+    """Algorithm 1 as one compiled program, bound to a sampling engine.
+
+    Construction mirrors ``SamplingEngine``: bind once per (spec, PASConfig,
+    teacher) through ``get_calibration_engine_for_spec`` (the cached path) or
+    directly from an already-bound solver via
+    ``calibration_engine_for_solver``.  The engine shares the spec's cached
+    ``SamplingEngine`` — same mesh, same packed coefficient tables, same
+    fused kernels — so calibration and sampling agree on placement and step
+    numerics by construction.
+    """
+
+    def __init__(self, spec=None, *, solver: Optional[Solver] = None,
+                 cfg: Optional[PASConfig] = None,
+                 sampling: Optional[SamplingEngine] = None,
+                 dtype: jnp.dtype = jnp.float32):
+        if spec is not None:
+            sampling = sampling if sampling is not None else \
+                get_engine_for_spec(spec)
+            cfg = spec.pas if cfg is None else cfg
+        else:
+            if solver is None:
+                raise ValueError("CalibrationEngine needs a spec or a solver")
+            sampling = sampling if sampling is not None else \
+                engine_for_solver(solver, dtype)
+            cfg = cfg if cfg is not None else PASConfig()
+        self.spec = spec
+        self.sampling = sampling
+        self.solver = sampling.solver
+        self.cfg = cfg
+        self.nfe = self.solver.nfe
+        self._compiled: dict[Any, tuple[Callable, Callable]] = {}
+
+    def _require_lms(self) -> None:
+        """Calibration (not teacher building) needs a 1-eval solver, checked
+        at call time exactly like the reference loop."""
+        if not isinstance(self.solver, LinearMultistepSolver):
+            raise TypeError(
+                "PAS calibration requires a 1-eval solver (paper setup); "
+                f"got {self.solver.name}")
+
+    # -- compiled-program cache (the sampler's pinning/LRU helpers) ---------
+
+    def _get_compiled(self, key, build, eps_fn) -> Callable:
+        return _compiled_lookup(self._compiled, key, build, eps_fn)
+
+    def compiled_variants(self) -> int:
+        return len(self._compiled)
+
+    # -- the fused Algorithm 1 program --------------------------------------
+
+    def _build_calibrate(self, eps_fn: EpsFn, donate: bool) -> Callable:
+        solver, cfg, eng = self.solver, self.cfg, self.sampling
+        n = self.nfe
+        ts = solver.ts_jax
+        coef = eng.coef
+        n_basis = cfg.n_basis
+        basis = eng._basis_fn(n_basis)
+        # the one Alg. 1 trainer, inlined unjitted into this program — shared
+        # with the reference loop so the paths cannot train differently
+        sgd = pas_mod._sgd_loop(solver, cfg, LOSS_FNS[cfg.loss])
+
+        def run(x_t: Array, gt: Array):
+            b = x_t.shape[0]
+            n_val = int(round(b * cfg.val_fraction))
+            tr = slice(n_val, None)
+            va = slice(0, n_val) if n_val > 0 else slice(None)
+
+            x = eng._constrain(x_t)
+            gt = eng._constrain(gt, leading=1)
+            hist = solver.init_hist(x_t)
+            hist = SolverHist(eng._constrain(hist.buf, leading=1), hist.count)
+            q = _QBuffer.create(x_t, cap=n + 1)
+            q = _QBuffer(eng._constrain(q.rows, leading=1), q.mask)
+
+            actives, coords, l2ps, l2cs = [], [], [], []
+            for j in range(n):               # static unroll: Alg. 1 is sequential
+                t = ts[j]
+                d = eps_fn(x, t)
+                u = basis(q.rows, q.mask, d)                   # (B, k, D)
+                d_norm = jax.vmap(jnp.linalg.norm)(d)          # (B,)
+                c0 = pas_mod._init_coords(d, cfg.coord_mode, n_basis)
+                c_opt = sgd(c0, x[tr], u[tr], d_norm[tr],
+                            pas_mod._hist_slice(hist, tr), gt[j + 1][tr], j)
+
+                # corrected-vs-plain rollout through the fused step kernels
+                cs = _scaled_coords(c_opt, d, cfg.coord_mode)  # (B, k)
+                x_corr, d_tilde, _ = ops.fused_pas_step(
+                    x, u, cs, hist.buf, coef[j], native_x0=eng.native_x0)
+                x_plain = ops.fused_step(x, eng._native(x, d, t), hist.buf,
+                                         coef[j])
+
+                # adaptive-search decision on the L2 metric (paper eq. 20),
+                # resolved on-device: the carries never touch the host
+                l2_plain = jnp.mean((x_plain[va] - gt[j + 1][va]) ** 2)
+                l2_corr = jnp.mean((x_corr[va] - gt[j + 1][va]) ** 2)
+                adopt = (l2_plain - (l2_corr + cfg.tolerance)) > 0.0
+                x_new, d_used, c_used = jax.lax.cond(
+                    adopt,
+                    lambda: (x_corr, d_tilde, c_opt),
+                    lambda: (x_plain, d, jnp.zeros_like(c_opt)))
+
+                hist = solver.push(x, d_used, j, hist)
+                q = q.push(d_used, j + 1)
+                x = eng._constrain(x_new)
+                actives.append(adopt)
+                coords.append(c_used)
+                l2ps.append(l2_plain)
+                l2cs.append(l2_corr)
+
+            final_l2 = jnp.mean((x - gt[-1]) ** 2)
+            # x (the corrected end state) is returned so a donated x_t buffer
+            # has a same-shaped output to alias into — the donation is real,
+            # not a dead annotation (callers discard it)
+            return (jnp.stack(actives), jnp.stack(coords),
+                    jnp.stack(l2ps), jnp.stack(l2cs), final_l2, x)
+
+        return jax.jit(run, donate_argnums=(0,) if donate else ())
+
+    # -- the fused final-state gate -----------------------------------------
+
+    def _build_gate(self, eps_fn: EpsFn) -> Callable:
+        solver, cfg, eng = self.solver, self.cfg, self.sampling
+        n = self.nfe
+        ts = solver.ts_jax
+        coef = eng.coef
+        basis = eng._basis_fn(cfg.n_basis)
+
+        def rollout(x0, gt_end, coords, mask_row):
+            x = x0
+            hist = eng._hist0(x0)
+            q = _QBuffer.create(x0, cap=n + 1)
+            for j in range(n):               # static unroll, dynamic mask
+                t = ts[j]
+                d = eps_fn(x, t)
+                u = basis(q.rows, q.mask, d)
+                cs = _scaled_coords(coords[j], d, cfg.coord_mode)
+                x_corr, d_tilde, nat_c = ops.fused_pas_step(
+                    x, u, cs, hist, coef[j], native_x0=eng.native_x0)
+                nat_p = eng._native(x, d, t)
+                x_plain = ops.fused_step(x, nat_p, hist, coef[j])
+                on = mask_row[j]
+                x = eng._constrain(jnp.where(on, x_corr, x_plain))
+                hist = eng._push_hist(hist, jnp.where(on, nat_c, nat_p))
+                q = q.push(jnp.where(on, d_tilde, d), j + 1)
+            return jnp.mean(jnp.linalg.norm(x - gt_end, axis=-1))
+
+        def run(x_gate: Array, gt_end: Array, coords: Array, masks: Array):
+            x_gate = eng._constrain(x_gate)
+            return jax.lax.map(
+                lambda mr: rollout(x_gate, gt_end, coords, mr), masks)
+
+        return jax.jit(run)
+
+    def _final_gate(self, eps_fn: EpsFn, x_gate: Array, gt_end: Array,
+                    params: PASParams) -> tuple[PASParams, list[int]]:
+        """Greedy final-state gate (``calibrate_reference`` semantics) as one
+        compiled scan: candidate c is the active mask with the c
+        largest-index corrected steps dropped; the first candidate whose
+        end-to-end error is within tolerance of the plain solver wins."""
+        drop_order = np.nonzero(params.active)[0][::-1]
+        m = params.active.copy()
+        rows = []
+        for j in drop_order:
+            rows.append(m.copy())
+            m[j] = False
+        masks = np.stack(rows)                       # (K, N) candidates
+
+        # plain baseline through the spec's cached SamplingEngine: one
+        # engine lookup, the same compiled plain scan sampling uses
+        x_plain = self.sampling.sample(eps_fn, x_gate)
+        e_plain = float(jnp.mean(jnp.linalg.norm(x_plain - gt_end, axis=-1)))
+
+        gate = self._get_compiled(("gate", _fn_key(eps_fn)),
+                                  lambda: self._build_gate(eps_fn), eps_fn)
+        es = np.asarray(gate(x_gate, gt_end,
+                             jnp.asarray(params.coords, self.sampling.dtype),
+                             jnp.asarray(masks)))
+
+        for c, e in enumerate(es):
+            if e <= e_plain * (1.0 + 1e-4):
+                return (PASParams(active=masks[c].copy(),
+                                  coords=params.coords),
+                        [int(j) for j in drop_order[:c]])
+        return (PASParams(active=np.zeros_like(params.active),
+                          coords=params.coords),
+                [int(j) for j in drop_order])
+
+    # -- the fused nested-teacher builder -----------------------------------
+
+    def _build_teacher(self, eps_fn: EpsFn) -> Callable:
+        if self.spec is None:
+            raise ValueError(
+                "teacher_trajectory needs a spec-bound CalibrationEngine "
+                "(the teacher grid lives on the SamplerSpec); pass gt= "
+                "explicitly for solver-bound engines")
+        s_ts, t_ts, m = self.spec.teacher_grid()
+        tsol = self.spec.make_teacher(t_ts)
+        n_student = len(s_ts) - 1
+        eng = self.sampling
+
+        def run(x_t: Array) -> Array:
+            x0 = eng._constrain(x_t)
+
+            def refine(carry, jj0):          # one student interval: m+1 steps
+                def inner(c, i):
+                    x, hist = c
+                    x, hist, _ = tsol.step(eps_fn, x, jj0 + i, hist)
+                    return (eng._constrain(x), hist), None
+                carry, _ = jax.lax.scan(inner, carry, jnp.arange(m + 1))
+                return carry, carry[0]
+
+            (_, _), xs = jax.lax.scan(
+                refine, (x0, tsol.init_hist(x_t)),
+                jnp.arange(n_student) * (m + 1))
+            return jnp.concatenate([x_t[None], xs], axis=0)
+
+        return jax.jit(run)
+
+    def teacher_trajectory(self, eps_fn: EpsFn, x_t: Array) -> Array:
+        """Ground-truth trajectory on the spec's nested teacher grid (§3.3).
+
+        One jitted scan over (student interval x refinement) on the engine
+        mesh; only the (N+1) states aligned to the student grid are
+        materialised, gt[0] = x_t.
+        """
+        fn = self._get_compiled(("teacher", _fn_key(eps_fn)),
+                                lambda: self._build_teacher(eps_fn), eps_fn)
+        return fn(self.sampling.shard(x_t))
+
+    # -- public API ----------------------------------------------------------
+
+    def calibrate(self, eps_fn: EpsFn, x_t: Array, gt: Array, *,
+                  donate: bool = False) -> tuple[PASParams, dict]:
+        """Learn the ~10 PAS parameters (paper Algorithm 1), fully compiled.
+
+        ``x_t`` (B, D) and ``gt`` (N+1, B, D) follow the
+        ``calibrate_reference`` contract.  ``donate=True`` donates the
+        ``x_t`` buffer to the compiled program (aliased into the corrected
+        end state it carries) — only pass it when the caller owns the
+        buffer; the gate slice is copied out first.
+        """
+        self._require_lms()
+        x_t = self.sampling.shard(x_t)
+        cfg = self.cfg
+        b = int(x_t.shape[0])
+        n_val = int(round(b * cfg.val_fraction))
+        va = slice(0, n_val) if n_val > 0 else slice(None)
+        if donate and cfg.final_gate and n_val == 0:
+            # the gate would need the whole batch back: donation buys
+            # nothing over the full copy it would force, and skipping it
+            # keeps donate/no-donate callers on one compiled variant
+            donate = False
+        if donate and cfg.final_gate:
+            # materialise the (small) val-slice gate input before its
+            # buffer is donated
+            x_gate = jnp.array(x_t[va], copy=True)
+        else:
+            x_gate = None
+
+        fn = self._get_compiled(("calibrate", _fn_key(eps_fn), donate),
+                                lambda: self._build_calibrate(eps_fn, donate),
+                                eps_fn)
+        active_d, coords_d, l2p_d, l2c_d, final_d, _ = fn(x_t, gt)
+        # one device->host transfer for the adoption pattern + diagnostics
+        active, l2p, l2c, final_l2 = jax.device_get(
+            (active_d, l2p_d, l2c_d, final_d))
+        active = np.asarray(active, dtype=bool)
+        params = PASParams(active=active, coords=coords_d)
+        diag = {"loss_before": [float(v) for v in l2p],
+                "loss_after": [float(v) for v in l2c],
+                "gain": [float(a - c) for a, c in zip(l2p, l2c)]}
+
+        if cfg.final_gate and active.any():
+            if x_gate is None:
+                x_gate = x_t[va]
+            params, diag["final_gate_dropped"] = self._final_gate(
+                eps_fn, x_gate, gt[-1][va], params)
+
+        diag["corrected_steps_paper_index"] = params.corrected_paper_steps()
+        diag["n_stored_params"] = params.n_stored_params
+        diag["final_l2_to_gt"] = float(final_l2)
+        return params, diag
+
+
+# ---------------------------------------------------------------------------
+# engine cache (spec-keyed; same _lru_lookup instance as the sampler cache)
+# ---------------------------------------------------------------------------
+
+
+_CAL_ENGINES: dict[Any, CalibrationEngine] = {}
+_STATS = _CacheStats()
+_MAX_CAL_ENGINES = 64
+
+
+def _lookup(key: Any, build: Callable[[], CalibrationEngine]) -> CalibrationEngine:
+    return _lru_lookup(_CAL_ENGINES, _STATS, key, build, _MAX_CAL_ENGINES)
+
+
+def get_calibration_engine_for_spec(spec) -> CalibrationEngine:
+    """Calibration engine for a ``repro.api.SamplerSpec``.
+
+    Keyed on (``spec.engine_key``, PASConfig, teacher): the sampling-relevant
+    projection plus the two calibration-time knobs the sampler cache ignores.
+    Specs sharing that triple share one compiled Algorithm 1.
+    """
+    return _lookup((spec.engine_key, spec.pas, spec.teacher),
+                   lambda: CalibrationEngine(spec))
+
+
+def calibration_engine_for_solver(solver: Solver,
+                                  cfg: Optional[PASConfig] = None,
+                                  dtype: jnp.dtype = jnp.float32
+                                  ) -> CalibrationEngine:
+    """Calibration engine for an already-bound solver (legacy-shim path).
+
+    Registered solver names are lifted to canonical specs (sharing cache
+    entries with spec-built pipelines); unregistered custom solvers key on
+    the raw (name, schedule bytes, dtype, cfg) tuple, with no teacher bound
+    (callers must pass ``gt`` explicitly — exactly the legacy contract).
+    """
+    if isinstance(solver, LinearMultistepSolver):
+        from repro.api.spec import spec_from_schedule  # deferred: api > engine
+        cfg = cfg if cfg is not None else PASConfig()
+        try:
+            spec = spec_from_schedule(solver.name, solver.ts, dtype)
+            return get_calibration_engine_for_spec(spec.replace(pas=cfg))
+        except ValueError:
+            ts = np.asarray(solver.ts, np.float64)
+            key = ("unregistered", solver.name, ts.tobytes(),
+                   jnp.dtype(dtype).name, cfg)
+            return _lookup(key, lambda: CalibrationEngine(
+                solver=solver, cfg=cfg, dtype=dtype))
+    # non-1-eval solvers get an (uncached, cheap) engine whose .calibrate()
+    # raises the legacy TypeError at call time — the canonical error path
+    return CalibrationEngine(solver=solver, cfg=cfg, dtype=dtype)
+
+
+def clear_calibration_engine_cache() -> None:
+    _CAL_ENGINES.clear()
+    _STATS.hits = _STATS.misses = 0
+
+
+def calibration_engine_cache_stats() -> dict[str, int]:
+    return {"engines": len(_CAL_ENGINES), "hits": _STATS.hits,
+            "misses": _STATS.misses,
+            "compiled_variants": sum(e.compiled_variants()
+                                     for e in _CAL_ENGINES.values())}

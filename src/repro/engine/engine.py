@@ -364,20 +364,8 @@ class SamplingEngine:
         return out
 
     def _get_compiled(self, key, build, eps_fn) -> Callable:
-        """Compiled-program cache; pins eps_fn so id-based keys stay valid.
-
-        Bounded LRU (least-recently-used variant evicted) so processes that
-        rotate models or correction patterns don't pin every model forever.
-        """
-        entry = self._compiled.get(key)
-        if entry is None:
-            if len(self._compiled) >= _MAX_COMPILED_PER_ENGINE:
-                self._compiled.pop(next(iter(self._compiled)))
-            entry = (eps_fn, build())
-        else:
-            del self._compiled[key]    # re-insert: dict order tracks recency
-        self._compiled[key] = entry
-        return entry[1]
+        """Compiled-program cache (shared LRU contract, see ``_compiled_lookup``)."""
+        return _compiled_lookup(self._compiled, key, build, eps_fn)
 
     def compiled_variants(self) -> int:
         """Number of distinct (model, correction-pattern) programs cached."""
@@ -401,19 +389,44 @@ _MAX_ENGINES = 64
 _MAX_COMPILED_PER_ENGINE = 16
 
 
-def _lookup(key: Any, build: Callable[[], SamplingEngine]) -> SamplingEngine:
-    """Bounded LRU cache (callers holding an evicted engine keep it alive)."""
-    eng = _ENGINES.get(key)
-    if eng is None:
-        _STATS.misses += 1
-        if len(_ENGINES) >= _MAX_ENGINES:
-            _ENGINES.pop(next(iter(_ENGINES)))
-        eng = build()
+def _lru_lookup(cache: dict, stats: Optional[_CacheStats], key: Any,
+                build: Callable[[], Any], max_size: int) -> Any:
+    """Bounded LRU cache (callers holding an evicted entry keep it alive).
+
+    The one engine-cache implementation — the sampling and calibration
+    engine caches and both per-engine compiled-program caches are instances
+    of it, so eviction/recency semantics can never drift apart.
+    """
+    entry = cache.get(key)
+    if entry is None:
+        if stats is not None:
+            stats.misses += 1
+        if len(cache) >= max_size:
+            cache.pop(next(iter(cache)))
+        entry = build()
     else:
-        _STATS.hits += 1
-        del _ENGINES[key]              # re-insert: dict order tracks recency
-    _ENGINES[key] = eng
-    return eng
+        if stats is not None:
+            stats.hits += 1
+        del cache[key]                 # re-insert: dict order tracks recency
+    cache[key] = entry
+    return entry
+
+
+def _compiled_lookup(cache: dict, key: Any, build: Callable[[], Callable],
+                     eps_fn: Callable) -> Callable:
+    """Per-engine compiled-program cache; pins eps_fn so id-based keys stay
+    valid (see ``_fn_key``).  Bounded LRU (least-recently-used variant
+    evicted) so processes that rotate models or correction patterns don't
+    pin every model forever.  Shared by ``SamplingEngine`` and
+    ``CalibrationEngine``.
+    """
+    entry = _lru_lookup(cache, None, key,
+                        lambda: (eps_fn, build()), _MAX_COMPILED_PER_ENGINE)
+    return entry[1]
+
+
+def _lookup(key: Any, build: Callable[[], SamplingEngine]) -> SamplingEngine:
+    return _lru_lookup(_ENGINES, _STATS, key, build, _MAX_ENGINES)
 
 
 def get_engine_for_spec(spec) -> SamplingEngine:

@@ -18,6 +18,13 @@ Kernels that DO reduce (``gram`` over D) are composed with an explicit
 ``lax.psum`` by the caller (``distributed.psum_gram``) — the kernel itself
 stays local.  On TPU the per-device shard must still satisfy the kernel's
 tile minimums; size meshes so D_local keeps the lane dim >= 128.
+
+Differentiation contract: these ops are *forward-only* — the Pallas kernels
+carry no custom VJPs.  Callers that differentiate (the CalibrationEngine's
+SGD inner scan) must build their loss from the pure-jnp formulation
+(``solvers.LinearMultistepSolver.phi`` / ``kernels.ref``) and reserve these
+entry points for forward rollouts; that is how ``engine/calibration.py``
+composes them.
 """
 from __future__ import annotations
 

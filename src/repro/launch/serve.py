@@ -21,7 +21,8 @@ the production program on a virtual host mesh.
 
   PYTHONPATH=src python -m repro.launch.serve --nfe 10 --solver ddim \
       [--t-min 0.002] [--t-max 80.0] [--max-batch 256] [--artifact-dir DIR] \
-      [--dp N] [--state-shard M | --mesh NxM] [--lower-only]
+      [--calibrate-batch B] [--dp N] [--state-shard M | --mesh NxM] \
+      [--lower-only]
 """
 from __future__ import annotations
 
@@ -61,11 +62,17 @@ def _diffusion_lm_eps(arch: str, seq: int = 32):
 
 
 def _calibrated_pipeline(cfg: ServeConfig, eps_fn, dim: int,
-                         artifact_dir: str | None) -> Pipeline:
+                         artifact_dir: str | None,
+                         calibrate_batch: int = 128) -> Pipeline:
     """Load the PAS artifact if a matching one exists, else calibrate (and
     persist when --artifact-dir is given).  The artifact spec is compared
     modulo placement and re-placed onto this launch's mesh, so the same
-    artifact serves any --mesh shape."""
+    artifact serves any --mesh shape.
+
+    Calibration-on-launch runs through the fused ``CalibrationEngine`` on
+    the launch mesh: the batch is padded to a DP-divisible row count so a
+    large ``--calibrate-batch`` shards across the data-parallel axis exactly
+    like a serve flush (pad rows are prior draws — always in-distribution)."""
     spec = cfg.to_spec()
     if artifact_dir and PASArtifact.exists(artifact_dir):
         pipe = Pipeline.load(artifact_dir, eps_fn, dim=dim,
@@ -76,8 +83,11 @@ def _calibrated_pipeline(cfg: ServeConfig, eps_fn, dim: int,
               f"dp={spec.mesh.dp} state={spec.mesh.state})")
         return pipe
     pipe = Pipeline.from_spec(spec, eps_fn, dim=dim)
-    pipe.calibrate(key=jax.random.key(0), batch=128)
-    print(f"PAS calibrated: steps {pipe.params.corrected_paper_steps()} "
+    batch = calibrate_batch + spec.mesh.pad_batch(calibrate_batch)
+    pipe.calibrate(key=jax.random.key(0), batch=batch)
+    print(f"PAS calibrated on batch {batch} "
+          f"(dp={spec.mesh.dp} state={spec.mesh.state}): steps "
+          f"{pipe.params.corrected_paper_steps()} "
           f"({pipe.params.n_stored_params} params)")
     if artifact_dir:
         path = pipe.save(artifact_dir)
@@ -102,6 +112,9 @@ def main() -> None:
                     help="micro-batch budget; larger requests are chunked")
     ap.add_argument("--artifact-dir", default=None,
                     help="save/load the calibrated PASArtifact here")
+    ap.add_argument("--calibrate-batch", type=int, default=128,
+                    help="calibration trajectories for --calibrate-on-launch "
+                         "(padded to a DP-divisible count under a mesh)")
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel mesh axis (batch sharding)")
     ap.add_argument("--state-shard", type=int, default=1,
@@ -145,7 +158,8 @@ def main() -> None:
     if args.no_pas:
         server = DiffusionServer(eps_fn, dim, cfg)
     else:
-        pipe = _calibrated_pipeline(cfg, eps_fn, dim, args.artifact_dir)
+        pipe = _calibrated_pipeline(cfg, eps_fn, dim, args.artifact_dir,
+                                    calibrate_batch=args.calibrate_batch)
         server = DiffusionServer.from_pipeline(pipe, cfg)
 
     outs = server.serve([Request(seed=i, n_samples=16)

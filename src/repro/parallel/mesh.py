@@ -104,7 +104,13 @@ class MeshSpec:
         return NamedSharding(mesh, P())
 
     def pad_batch(self, n: int) -> int:
-        """Rows of padding needed to make an n-row flush DP-divisible."""
+        """Rows of padding needed to make an n-row batch DP-divisible.
+
+        Used by the serve loop for flushes and by ``launch/serve
+        --calibrate-batch`` for calibration-on-launch batches; pad rows are
+        always drawn in-distribution (repeated or fresh prior rows) and
+        masked back out of anything user-visible.
+        """
         return (-n) % self.dp
 
     # -- serialisation -----------------------------------------------------
