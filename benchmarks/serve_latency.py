@@ -1,0 +1,152 @@
+"""Serve-path request latency: sync flush loop vs async scheduler.
+
+A mixed-size request stream (small interactive requests packed between
+medium and oversized batch jobs) is served twice through the same warmed
+pipeline:
+
+* **sync** — the legacy ``DiffusionServer.serve`` flush loop: every
+  response lands when the whole list finishes, so per-request latency is
+  the full wall time for everyone;
+* **async** — the ``runtime.scheduler.ServeScheduler``: requests are
+  submitted individually, flushes dispatch without blocking
+  (double-buffered device futures), and each request completes when its
+  last chunk retires — early requests stop paying for late ones.
+
+Recorded per mode: p50/p95/p99 request latency (submit -> last chunk) and
+samples/sec over the stream, into a root-level ``BENCH_serve_latency.json``
+so the serving stack's latency trajectory is tracked PR over PR.  The run
+also asserts the acceptance contract: the async facade's responses are
+**bit-identical** to the sync loop's on the same seeds (recorded as
+``bitwise_identical``).
+
+On this CPU-only container both modes share the same cores, so the async
+win is scheduling (earlier completion), not extra device throughput; the
+JSON records ``backend`` so TPU runs are distinguishable.
+
+  PYTHONPATH=src python -m benchmarks.serve_latency [--repeat 3] [--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_serve_latency.json"
+
+DIM = 64
+NFE = 10
+MAX_BATCH = 64
+# mixed request sizes: interactive singles, mid packs, one oversized job
+SIZES = [4, 16, 96, 8, 4, 32, 4, 160, 8, 16, 4, 48]
+
+
+def _percentiles(lat_s: list[float]) -> dict:
+    lat = np.asarray(sorted(lat_s))
+    return {f"p{p}_ms": round(float(np.percentile(lat, p)) * 1e3, 2)
+            for p in (50, 95, 99)}
+
+
+def _requests(sizes):
+    from repro.runtime import Request
+    return [Request(seed=i, n_samples=n) for i, n in enumerate(sizes)]
+
+
+def _serve_sync(server, sizes):
+    """One pass through the legacy loop; every request waits for the list."""
+    t0 = time.perf_counter()
+    outs = server.serve(_requests(sizes))
+    wall = time.perf_counter() - t0
+    return outs, [wall] * len(sizes), wall
+
+
+def _serve_async(server, sizes):
+    """One pass through the scheduler; per-request completion times."""
+    t0 = time.perf_counter()
+    handles = [server.submit(r) for r in _requests(sizes)]
+    server.drain(timeout=600)
+    outs = [h.result() for h in handles]
+    wall = time.perf_counter() - t0
+    return outs, [h.latency_s for h in handles], wall
+
+
+def run(sizes=None, repeat: int = 3, nfe: int = NFE,
+        max_batch: int = MAX_BATCH, dry_run: bool = False) -> dict:
+    from repro.core import two_mode_gmm
+    from repro.runtime import DiffusionServer, ServeConfig
+
+    if sizes is None:
+        sizes = SIZES
+    if dry_run:
+        sizes, repeat, nfe = [4, 20, 8], 1, 5
+
+    gmm = two_mode_gmm(DIM, sep=6.0, var=0.25)
+
+    def server_for(mode: str) -> DiffusionServer:
+        return DiffusionServer(gmm.eps, DIM, ServeConfig(
+            nfe=nfe, solver="ddim", max_batch=max_batch, use_pas=False,
+            scheduler=mode))
+
+    sync_srv, async_srv = server_for("sync"), server_for("async")
+    # warm both paths (one shared compiled program: same spec, same model)
+    sync_srv.serve(_requests([max_batch]))
+    async_srv.serve(_requests([max_batch]))
+
+    # bitwise parity of the async facade with the legacy loop, same seeds
+    outs_sync, _, _ = _serve_sync(sync_srv, sizes)
+    outs_async, _, _ = _serve_async(async_srv, sizes)
+    bitwise = all(np.array_equal(a, b)
+                  for a, b in zip(outs_sync, outs_async))
+
+    rows = []
+    for mode, srv, one_pass in (("sync", sync_srv, _serve_sync),
+                                ("async", async_srv, _serve_async)):
+        lat_all: list[float] = []
+        walls: list[float] = []
+        for _ in range(repeat):
+            _, lat, wall = one_pass(srv, sizes)
+            lat_all.extend(lat)
+            walls.append(wall)
+        rows.append({
+            "mode": mode, "nfe": nfe, "max_batch": max_batch,
+            "requests": len(sizes), "samples": int(sum(sizes)),
+            **_percentiles(lat_all),
+            "samples_per_s": round(sum(sizes) * repeat / sum(walls), 1),
+        })
+
+    async_srv.close()
+    by_mode = {r["mode"]: r for r in rows}
+    report = {
+        "rows": rows,
+        "sizes": list(sizes),
+        "bitwise_identical": bool(bitwise),
+        "async_p95_speedup": round(
+            by_mode["sync"]["p95_ms"] / by_mode["async"]["p95_ms"], 2),
+        "backend": __import__("jax").default_backend(),
+        "generated": time.strftime("%F %T"),
+    }
+    if not dry_run:               # smoke runs don't pollute the perf record
+        OUT.write_text(json.dumps(report, indent=1))
+        from . import common
+        common.save_table("serve_latency", rows,
+                          extra={"backend": report["backend"],
+                                 "bitwise_identical": report[
+                                     "bitwise_identical"]})
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny request stream, 1 repeat (CI smoke)")
+    args = ap.parse_args()
+    rep = run(repeat=args.repeat, dry_run=args.dry_run)
+    for r in rep["rows"]:
+        print(r)
+    print(f"bitwise_identical={rep['bitwise_identical']} "
+          f"async_p95_speedup={rep['async_p95_speedup']}x")
+    assert rep["bitwise_identical"], "async facade diverged from sync loop"

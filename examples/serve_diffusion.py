@@ -2,8 +2,13 @@
 through the DiffusionServer, with hot-swappable PAS correction — all built
 through the repro.api Pipeline.
 
+Serving goes through the async continuous-batching scheduler by default
+(``DiffusionServer.serve`` is a bit-identical sync facade over it);
+``--deadline-ms`` bounds how long a request may wait to batch and
+``--stream`` demonstrates per-request chunk streaming.
+
   PYTHONPATH=src python examples/serve_diffusion.py [--nfe 10] [--no-pas]
-      [--artifact-dir DIR]
+      [--artifact-dir DIR] [--deadline-ms MS] [--stream]
 """
 import argparse
 
@@ -25,11 +30,16 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--artifact-dir", default=None,
                     help="save/load the calibrated PASArtifact here")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="max batching slack per request (async scheduler)")
+    ap.add_argument("--stream", action="store_true",
+                    help="submit individually and stream chunk arrival")
     args = ap.parse_args()
 
     gmm = two_mode_gmm(DIM, sep=6.0, var=0.25)
     cfg = ServeConfig(nfe=args.nfe, use_pas=not args.no_pas, max_batch=128,
-                      pas=PASConfig(val_fraction=0.25))
+                      pas=PASConfig(val_fraction=0.25),
+                      deadline_ms=args.deadline_ms)
 
     if args.no_pas:
         server = DiffusionServer(gmm.eps, DIM, cfg)
@@ -52,7 +62,15 @@ def main():
 
     reqs = [Request(seed=i, n_samples=8 + 8 * (i % 3))
             for i in range(args.requests)]
-    outs = server.serve(reqs)
+    if args.stream:
+        handles = [server.submit(r) for r in reqs]
+        server.drain(timeout=600)
+        outs = [h.result() for h in handles]
+        for i, h in enumerate(handles):
+            print(f"request {i}: {h.n_samples} rows, "
+                  f"latency {1e3 * h.latency_s:.1f}ms")
+    else:
+        outs = server.serve(reqs)
     assert len(outs) == len(reqs)
 
     # quality report vs the teacher endpoint for the first request

@@ -24,6 +24,7 @@ from pathlib import Path
 from typing import Callable, Optional
 
 import jax
+import numpy as np
 
 from repro.core import pas as pas_mod
 from repro.core import solvers as solvers_mod
@@ -161,6 +162,35 @@ class Pipeline:
         params = self.params if use_pas else None
         return self.engine.sample(self.eps_fn, x_t, params=params,
                                   cfg=self.spec.pas, donate_x=donate_x)
+
+    def sample_async(self, x_t: Optional[Array] = None, *,
+                     key: Optional[Array] = None, batch: Optional[int] = None,
+                     use_pas: bool = True,
+                     donate_x: bool = False) -> tuple[Array, np.ndarray]:
+        """Non-blocking sample: dispatch the compiled scan, return the future.
+
+        Pads the batch to a DP-divisible row count under a mesh (repeated
+        input rows as ballast — always in-distribution), dispatches the
+        engine, and returns ``(y, valid)`` where ``y`` is the *device
+        future* (JAX async dispatch: reading it — ``np.asarray``,
+        ``block_until_ready`` — is what blocks) and ``valid`` is the
+        host-side boolean row mask selecting the caller's real rows out of
+        the padded result.  This is the serve scheduler's flush primitive:
+        it lets host staging of the next batch overlap device compute on
+        this one.  ``donate_x=True`` donates the (padded) input buffer —
+        the caller must not reuse ``x_t``, and must never pass a buffer a
+        still-in-flight flush owns (the engine rejects already-donated
+        buffers).
+        """
+        x_t = self._resolve_x(x_t, key, batch)
+        n = int(x_t.shape[0])
+        x_t, pad = self.mesh_spec.pad_rows(x_t)
+        params = self.params if use_pas else None
+        y = self.engine.sample(self.eps_fn, x_t, params=params,
+                               cfg=self.spec.pas, donate_x=donate_x)
+        valid = np.zeros(n + pad, dtype=bool)
+        valid[:n] = True
+        return y, valid
 
     def trajectory(self, x_t: Optional[Array] = None, *,
                    key: Optional[Array] = None, batch: Optional[int] = None,

@@ -313,7 +313,18 @@ class SamplingEngine:
         ``donate_x=True`` compiles a variant that donates the ``x_t`` buffer
         to the scan (the serve loop's flush path: its input is never reused,
         so the initial-state copy is free); the caller's array is invalidated.
+        Donating a buffer that was already donated to a still-in-flight
+        dispatch (the double-buffered serve scheduler keeps up to
+        ``max_in_flight`` flushes outstanding) is rejected with a clear
+        error instead of jax's generic deleted-array failure: every flush
+        must stage a fresh buffer.
         """
+        if donate_x and getattr(x_t, "is_deleted", None) and x_t.is_deleted():
+            raise ValueError(
+                "donate_x=True on a buffer that was already donated (the "
+                "array is deleted). Double-buffered flushes must stage a "
+                "fresh buffer per dispatch — never reuse one an in-flight "
+                "flush owns (see runtime.scheduler.ServeScheduler._flush).")
         if params is not None and bool(np.asarray(params.active).any()):
             if cfg is None:
                 from repro.core.pas import PASConfig

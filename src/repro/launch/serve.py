@@ -19,15 +19,24 @@ executing — run it under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (or more) to exercise
 the production program on a virtual host mesh.
 
+Scheduling: ``--scheduler async`` (the default) serves through the
+deadline-aware continuous-batching ``runtime.scheduler.ServeScheduler``
+(``--deadline-ms`` bounds how long a request may wait for its batch to
+fill; ``--stream`` submits requests individually and reports per-request
+chunk arrival + latency percentiles).  ``--scheduler sync`` runs the legacy
+synchronous flush loop (bit-identical responses on the same seeds).
+
   PYTHONPATH=src python -m repro.launch.serve --nfe 10 --solver ddim \
       [--t-min 0.002] [--t-max 80.0] [--max-batch 256] [--artifact-dir DIR] \
       [--calibrate-batch B] [--dp N] [--state-shard M | --mesh NxM] \
+      [--scheduler {async,sync}] [--deadline-ms MS] [--stream] \
       [--lower-only]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import re
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +45,25 @@ from repro.api import MeshSpec, PASArtifact, Pipeline
 from repro.core import PASConfig, two_mode_gmm
 from repro.engine import engine_cache_stats
 from repro.runtime import DiffusionServer, Request, ServeConfig
+
+
+def parse_mesh(value: str) -> tuple[int, int]:
+    """Parse a ``--mesh DPxSTATE`` grid, rejecting malformed values.
+
+    The old ``str.partition("x")`` parsing silently accepted ``8`` (as
+    dp=8, state defaulted) and ``x4`` (empty dp -> crash later); both now
+    fail at the argparse boundary with the expected format spelled out.
+    """
+    m = re.fullmatch(r"(\d+)x(\d+)", value.strip())
+    if not m:
+        raise argparse.ArgumentTypeError(
+            f"expected DPxSTATE (two positive integers joined by 'x', e.g. "
+            f"8x1 or 2x4), got {value!r}")
+    dp, state = int(m.group(1)), int(m.group(2))
+    if dp < 1 or state < 1:
+        raise argparse.ArgumentTypeError(
+            f"mesh axes must be >= 1, got dp={dp} state={state}")
+    return dp, state
 
 
 def _oracle_eps(dim: int):
@@ -121,15 +149,29 @@ def main() -> None:
                     help="state-dim mesh axis (D sharding; PAS reductions "
                          "run through core.distributed collectives)")
     ap.add_argument("--mesh", default=None, metavar="DPxSTATE",
+                    type=parse_mesh,
                     help="shorthand setting both axes, e.g. --mesh 8x1")
+    ap.add_argument("--scheduler", default="async",
+                    choices=["async", "sync"],
+                    help="async: deadline-aware continuous-batching "
+                         "scheduler; sync: legacy flush loop (bit-identical "
+                         "responses)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="max time a request waits for its batch to fill "
+                         "before a partial flush (async scheduler only)")
+    ap.add_argument("--stream", action="store_true",
+                    help="submit requests individually and report streamed "
+                         "chunk arrival + latency percentiles")
     ap.add_argument("--lower-only", action="store_true",
                     help="AOT-lower + compile the partitioned program and "
                          "report placement/collectives; no sampling")
     args = ap.parse_args()
 
+    if args.stream and args.scheduler != "async":
+        ap.error("--stream serves through the request queue; it requires "
+                 "--scheduler async")
     if args.mesh is not None:
-        dp, _, state = args.mesh.partition("x")
-        args.dp, args.state_shard = int(dp), int(state or 1)
+        args.dp, args.state_shard = args.mesh
     mesh = MeshSpec(dp=args.dp, state=args.state_shard)
 
     if args.mode == "oracle":
@@ -142,7 +184,9 @@ def main() -> None:
                       max_batch=args.max_batch,
                       use_pas=not args.no_pas,
                       pas=PASConfig(val_fraction=0.25, n_sgd_iters=150),
-                      mesh=mesh)
+                      mesh=mesh,
+                      scheduler=args.scheduler,
+                      deadline_ms=args.deadline_ms)
 
     if args.lower_only:
         # the serve dry-run: compile (never run) the partitioned program —
@@ -162,8 +206,27 @@ def main() -> None:
                                     calibrate_batch=args.calibrate_batch)
         server = DiffusionServer.from_pipeline(pipe, cfg)
 
-    outs = server.serve([Request(seed=i, n_samples=16)
-                         for i in range(args.requests)])
+    reqs = [Request(seed=i, n_samples=16) for i in range(args.requests)]
+    if args.stream:
+        # per-request streaming: chunks land as their flushes retire; the
+        # drain only forces out whatever a deadline hasn't already flushed
+        handles = [server.submit(r) for r in reqs]
+        server.drain(timeout=600)
+        outs = []
+        for i, h in enumerate(handles):
+            shapes = [c.shape[0] for c in h.chunks(timeout=60)]
+            outs.append(h.result())
+            print(f"request {i}: {shapes} rows streamed, "
+                  f"latency {1e3 * h.latency_s:.1f}ms")
+        lat = sorted(1e3 * v for v in server.stats["latency_s"])
+        print(f"latency p50={lat[len(lat) // 2]:.1f}ms "
+              f"p95={lat[int(0.95 * (len(lat) - 1))]:.1f}ms "
+              f"(deadline {args.deadline_ms}ms, "
+              f"{server.stats.get('flushes_deadline', 0)} deadline / "
+              f"{server.stats.get('flushes_budget', 0)} budget / "
+              f"{server.stats.get('flushes_drain', 0)} drain flushes)")
+    else:
+        outs = server.serve(reqs)
     print(f"served {server.stats['samples']} samples / "
           f"{server.stats['requests']} requests in "
           f"{server.stats['batches']} batches "

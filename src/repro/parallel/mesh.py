@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["MeshSpec", "compat_make_mesh", "shard_map"]
@@ -112,6 +113,21 @@ class MeshSpec:
         masked back out of anything user-visible.
         """
         return (-n) % self.dp
+
+    def pad_rows(self, x) -> tuple["jax.Array", int]:
+        """Pad a (B, D) buffer to a DP-divisible row count; returns (x, pad).
+
+        Pad rows repeat the input rows (always in-distribution for the
+        model) and must be masked back out of anything user-visible.  The
+        single implementation every flush path shares (sync serve loop,
+        async scheduler, ``Pipeline.sample_async``).
+        """
+        n = int(x.shape[0])
+        pad = self.pad_batch(n)
+        if not pad:
+            return x, 0
+        filler = jnp.tile(x, (pad // n + 1, 1))[:pad]
+        return jnp.concatenate([x, filler], axis=0), pad
 
     # -- serialisation -----------------------------------------------------
 

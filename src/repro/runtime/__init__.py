@@ -1,5 +1,7 @@
+from .scheduler import ServeHandle, ServeScheduler
 from .serve_loop import DiffusionServer, Request, ServeConfig
 from .train_loop import StragglerMonitor, TrainLoopConfig, run_train_loop
 
-__all__ = ["DiffusionServer", "Request", "ServeConfig", "StragglerMonitor",
-           "TrainLoopConfig", "run_train_loop"]
+__all__ = ["DiffusionServer", "Request", "ServeConfig", "ServeHandle",
+           "ServeScheduler", "StragglerMonitor", "TrainLoopConfig",
+           "run_train_loop"]

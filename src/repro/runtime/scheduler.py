@@ -1,0 +1,409 @@
+"""Async continuous-batching serve scheduler (deadline-aware, double-buffered).
+
+The synchronous flush loop in ``runtime/serve_loop.py`` packs a *list* of
+requests into micro-batches and hands every result back at the end — fine
+for throughput, blind to latency.  ``ServeScheduler`` replaces the loop's
+control flow with a request queue and a background scheduler thread while
+keeping the loop's *batch composition rules* bit-for-bit (the sync facade
+``DiffusionServer.serve`` produces identical flushes, hence identical
+samples — tests/test_serve_scheduler.py):
+
+* **deadline-aware batch formation** — requests carry an optional deadline
+  (``Request.deadline_ms`` or ``ServeConfig.deadline_ms``); a flush fires
+  when the ``max_batch`` budget fills *or* the oldest pending request's
+  slack expires, so a lone small request is never held hostage by an empty
+  queue;
+* **double-buffered flushes** — a flush dispatches the compiled scan and
+  returns immediately (JAX async dispatch: the result is a device future);
+  up to ``max_in_flight`` flushes stay in flight while the scheduler stages
+  the next batch on the host (prior draws, concatenation, DP padding), so
+  host staging overlaps device compute.  Every flush buffer is freshly
+  staged before donation — a donated buffer is never one a previous
+  in-flight flush still owns (the engine additionally refuses to donate an
+  already-deleted buffer);
+* **per-request streaming** — each submitted request gets a ``ServeHandle``;
+  oversized requests (``n_samples > max_batch``) are chunked across flushes
+  and every finished chunk is pushed to the handle as its flush retires, so
+  a large request yields rows *before* its last chunk lands
+  (``handle.chunks()``), while ``handle.result()`` blocks for the full
+  response.
+
+Stats ride the same dict the sync loop uses (``requests``/``samples``/
+``batches``/``nfe_total``/``padded_samples``) plus per-trigger flush
+counters (``flushes_budget``/``flushes_deadline``/``flushes_drain``) and a
+per-request latency trace under ``latency_s``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeHandle", "ServeScheduler"]
+
+Array = jax.Array
+
+_UNSET = object()
+
+
+class ServeHandle:
+    """One submitted request's future: stream chunks, or block for all rows.
+
+    Rows arrive in request order, chunk by chunk, as the flushes carrying
+    them retire.  ``chunks()`` is a single-consumer iterator that yields
+    each ``(rows, dim)`` ndarray as it lands; ``result()`` blocks until the
+    last chunk and returns the concatenated ``(n_samples, dim)`` array.  A
+    scheduler-side failure re-raises from either.
+    """
+
+    _DONE = object()
+
+    def __init__(self, n_samples: int, dim: int, dtype, submit_t: float):
+        self.n_samples = int(n_samples)
+        self.submit_t = submit_t
+        self.complete_t: Optional[float] = None
+        self._dim = dim
+        self._dtype = np.dtype(dtype)
+        self._remaining = self.n_samples
+        self._parts: list[np.ndarray] = []
+        self._stream: queue.SimpleQueue = queue.SimpleQueue()
+        self._done = threading.Event()
+        self._error: Optional[BaseException] = None
+        if self.n_samples == 0:
+            # zero-sample requests complete immediately: they never join a
+            # flush (nothing to compute) and never leave a consumer hanging
+            self._finish()
+
+    # -- scheduler side ----------------------------------------------------
+
+    def _push(self, rows: np.ndarray) -> None:
+        self._parts.append(rows)
+        self._stream.put(rows)
+        self._remaining -= rows.shape[0]
+        if self._remaining <= 0:
+            self._finish()
+
+    def _finish(self) -> None:
+        self.complete_t = time.perf_counter()
+        self._stream.put(self._DONE)
+        self._done.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        if self._done.is_set():            # completed/failed already: keep
+            return                         # the first outcome
+        self._error = exc
+        self._stream.put(self._DONE)
+        self._done.set()
+
+    # -- consumer side -----------------------------------------------------
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Submit-to-last-chunk latency (None while incomplete)."""
+        if self.complete_t is None:
+            return None
+        return self.complete_t - self.submit_t
+
+    def chunks(self, timeout: Optional[float] = None) -> Iterator[np.ndarray]:
+        """Yield finished chunks in row order as their flushes retire.
+
+        ``timeout`` bounds the wait for each *next* chunk; expiry raises
+        ``TimeoutError`` (matching ``result()``), not an internal queue
+        exception.
+        """
+        while True:
+            try:
+                item = self._stream.get(timeout=timeout)
+            except queue.Empty:
+                raise TimeoutError(
+                    f"no chunk within {timeout}s "
+                    f"({self._remaining}/{self.n_samples} rows outstanding)"
+                ) from None
+            if item is self._DONE:
+                if self._error is not None:
+                    raise self._error
+                return
+            yield item
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        """Block until every chunk landed; returns (n_samples, dim) rows."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"request incomplete after {timeout}s "
+                f"({self._remaining}/{self.n_samples} rows outstanding)")
+        if self._error is not None:
+            raise self._error
+        if len(self._parts) == 1:
+            return self._parts[0]
+        if not self._parts:
+            return np.zeros((0, self._dim), self._dtype)
+        return np.concatenate(self._parts, axis=0)
+
+
+@dataclasses.dataclass
+class _Chunk:
+    """One request's rows (or a slice of an oversized request) in a batch."""
+    handle: ServeHandle
+    rows: Array
+    n: int
+    deadline: Optional[float]        # absolute perf_counter time, None = never
+
+
+@dataclasses.dataclass
+class _Flight:
+    """A dispatched flush whose device result has not been read back yet."""
+    y: Array                          # device future (JAX async dispatch)
+    chunks: list[_Chunk]
+    n_rows: int                       # real rows (pad excluded)
+
+
+class ServeScheduler:
+    """Request queue + scheduler thread over one ``repro.api.Pipeline``.
+
+    ``run_batch`` is the flush executor: it receives the fully staged
+    (concatenated, DP-padded) flush buffer and must return the device
+    result *without blocking* (``Pipeline.sample_async`` / the server's
+    ``_run_batch``).  ``DiffusionServer`` passes a late-bound hook so its
+    existing ``_run_batch`` monkeypatch surface keeps working.
+    """
+
+    def __init__(self, pipeline, *, max_batch: int, use_pas: bool = True,
+                 deadline_ms: Optional[float] = None, max_in_flight: int = 2,
+                 run_batch: Optional[Callable[[Array], Array]] = None,
+                 stats: Optional[dict] = None):
+        if max_in_flight < 1:
+            raise ValueError(f"max_in_flight must be >= 1, got {max_in_flight}")
+        self.pipeline = pipeline
+        self.max_batch = int(max_batch)
+        self.default_deadline_ms = deadline_ms
+        self.max_in_flight = int(max_in_flight)
+        self.stats = stats if stats is not None else {}
+        for k in ("requests", "samples", "batches", "nfe_total",
+                  "padded_samples", "flushes_budget", "flushes_deadline",
+                  "flushes_drain"):
+            self.stats.setdefault(k, 0)
+        self.stats.setdefault("latency_s", [])
+        self._run_batch = (run_batch if run_batch is not None
+                           else self._default_run_batch(use_pas))
+        self._lock = threading.Lock()        # guards stats against readers
+        self._queue: queue.SimpleQueue = queue.SimpleQueue()
+        self._pending: list[_Chunk] = []
+        self._pending_rows = 0
+        self._in_flight: collections.deque[_Flight] = collections.deque()
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._run, name="serve-scheduler", daemon=True)
+        self._thread.start()
+
+    def _default_run_batch(self, use_pas: bool) -> Callable[[Array], Array]:
+        def run(x_t: Array) -> Array:
+            y, _ = self.pipeline.sample_async(x_t, use_pas=use_pas,
+                                              donate_x=True)
+            return y
+        return run
+
+    # -- client API ----------------------------------------------------------
+
+    def submit(self, request, deadline_ms=_UNSET) -> ServeHandle:
+        """Enqueue one request; returns its ``ServeHandle`` immediately.
+
+        ``deadline_ms`` bounds how long the request may wait for its batch
+        to fill (per-call > ``request.deadline_ms`` > the scheduler
+        default; ``None`` means it waits for the budget or a drain).
+        """
+        if self._closed:
+            raise RuntimeError("scheduler is closed")
+        if deadline_ms is _UNSET:
+            deadline_ms = getattr(request, "deadline_ms", None)
+            if deadline_ms is None:
+                deadline_ms = self.default_deadline_ms
+        now = time.perf_counter()
+        handle = ServeHandle(request.n_samples, self.pipeline.dim,
+                             self.pipeline.spec.dtype, submit_t=now)
+        with self._lock:
+            self.stats["requests"] += 1
+            self.stats["samples"] += handle.n_samples
+        if handle.n_samples == 0:
+            with self._lock:
+                self.stats["latency_s"].append(0.0)
+            return handle                    # completed in the constructor
+        deadline = None if deadline_ms is None else now + deadline_ms / 1e3
+        self._queue.put(("req", request, handle, deadline))
+        return handle
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Flush everything pending and retire every in-flight batch."""
+        evt = threading.Event()
+        self._queue.put(("drain", evt))
+        if not evt.wait(timeout):
+            raise TimeoutError(f"drain incomplete after {timeout}s")
+
+    def close(self, timeout: Optional[float] = 60.0) -> None:
+        """Drain, then stop the scheduler thread (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._queue.put(("stop", None))
+        self._thread.join(timeout)
+
+    # -- scheduler thread ----------------------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            try:
+                item = self._poll()
+            except BaseException as exc:                # noqa: BLE001
+                self._abort(exc)
+                continue
+            if item is None:
+                continue
+            kind = item[0]
+            try:
+                if kind == "req":
+                    self._admit(item[1], item[2], item[3])
+                else:                                   # drain / stop
+                    self._flush("drain")
+                    self._retire(block=True, drain=True)
+            except BaseException as exc:                # noqa: BLE001
+                self._abort(exc)
+            finally:
+                if kind == "drain":
+                    # always release the waiter — a failed drain surfaces
+                    # through the failed handles, never as a deadlock
+                    item[1].set()
+            if kind == "stop":
+                return
+
+    def _poll(self):
+        """One queue read, sized to the most urgent thing we're waiting on."""
+        self._retire(block=False)    # stream any flush the device finished
+        try:
+            # drain immediately available work first: requests that are
+            # already queued must pack into the forming batch before an
+            # expired deadline degrades it to a partial flush (matters after
+            # a long first-flush compile, when every deadline looks expired)
+            return self._queue.get_nowait()
+        except queue.Empty:
+            pass
+        timeout = 0.05
+        if self._pending:
+            deadline = min((c.deadline for c in self._pending
+                            if c.deadline is not None), default=None)
+            if deadline is not None:
+                wait = deadline - time.perf_counter()
+                if wait <= 0:
+                    self._flush("deadline")
+                    return None
+                timeout = min(wait, timeout)
+        elif self._in_flight:
+            timeout = 0.005          # re-poll readiness of in-flight flushes
+        try:
+            return self._queue.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def _admit(self, request, handle: ServeHandle,
+               deadline: Optional[float]) -> None:
+        """Stage a request's prior rows and pack them into pending chunks.
+
+        Packing reproduces the sync loop's composition exactly: a request
+        within budget stays whole (flush first if it would overflow); an
+        oversized request is cut into budget-sized chunks, each flushing as
+        it fills, with the final partial chunk left pending so later
+        requests pack into the same batch.  Any failure fails this handle —
+        a consumer blocked on it must never hang.
+        """
+        try:
+            x_t = self.pipeline.prior(jax.random.key(request.seed),
+                                      handle.n_samples)
+            budget = self.max_batch
+            for off in range(0, handle.n_samples, budget):
+                rows = (x_t if handle.n_samples <= budget
+                        else x_t[off:off + budget])
+                n = int(rows.shape[0])
+                if self._pending_rows + n > budget:
+                    self._flush("budget")
+                self._pending.append(_Chunk(handle, rows, n, deadline))
+                self._pending_rows += n
+                if self._pending_rows >= budget:
+                    self._flush("budget")
+        except BaseException as exc:
+            handle._fail(exc)              # no-op if a flush failed it first
+            raise
+
+    def _flush(self, reason: str) -> None:
+        """Stage + dispatch one batch; never blocks on device compute.
+
+        A staging/dispatch failure fails every handle riding this flush
+        (then re-raises for ``_abort``) — their consumers must never hang.
+        """
+        if not self._pending:
+            return
+        chunks, self._pending = self._pending, []
+        self._pending_rows = 0
+        try:
+            # host staging: concatenate + DP-pad into a fresh flush buffer
+            # (the only buffer the executor may donate — in-flight flushes
+            # each own their previously staged buffer, so donation never
+            # aliases one)
+            x_t = (chunks[0].rows if len(chunks) == 1
+                   else jnp.concatenate([c.rows for c in chunks], axis=0))
+            n_rows = int(x_t.shape[0])
+            x_t, pad = self.pipeline.mesh_spec.pad_rows(x_t)
+            if len(self._in_flight) >= self.max_in_flight:
+                self._retire(block=True)   # back-pressure: oldest flush lands
+            y = self._run_batch(x_t)       # async dispatch: returns the future
+        except BaseException as exc:
+            for c in chunks:
+                c.handle._fail(exc)
+            raise
+        self._in_flight.append(_Flight(y, chunks, n_rows))
+        with self._lock:
+            self.stats["batches"] += 1
+            self.stats["nfe_total"] += (n_rows + pad) * self.pipeline.engine.nfe
+            self.stats["padded_samples"] += pad
+            self.stats[f"flushes_{reason}"] += 1
+
+    def _retire(self, block: bool, drain: bool = False) -> None:
+        """Read back finished flushes and scatter rows to their handles."""
+        while self._in_flight:
+            fl = self._in_flight[0]
+            if not (block or fl.y.is_ready()):
+                return
+            self._in_flight.popleft()
+            try:
+                x0 = np.asarray(fl.y)                 # blocks on this flush
+            except BaseException as exc:              # device-side failure
+                for c in fl.chunks:
+                    c.handle._fail(exc)
+                raise
+            off = 0
+            for c in fl.chunks:
+                c.handle._push(x0[off:off + c.n])
+                off += c.n
+                if c.handle.done():
+                    with self._lock:
+                        self.stats["latency_s"].append(c.handle.latency_s)
+            if not drain:                 # keep at most one blocking read
+                block = False
+
+    def _abort(self, exc: BaseException) -> None:
+        """Fail every outstanding handle so no consumer blocks forever."""
+        for c in self._pending:
+            c.handle._fail(exc)
+        self._pending = []
+        self._pending_rows = 0
+        while self._in_flight:
+            fl = self._in_flight.popleft()
+            for c in fl.chunks:
+                c.handle._fail(exc)

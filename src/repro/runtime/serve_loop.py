@@ -5,11 +5,19 @@ Requests (each: a PRNG seed + sample count) are micro-batched up to
 Requests larger than ``max_batch`` are chunked across flushes (never run as
 one oversized batch) and reassembled per request.
 
-``DiffusionServer`` is a micro-batching shell around a ``repro.api.Pipeline``:
-the pipeline owns the spec, the fused engine binding, and the PAS coordinate
-table (~10 floats) — hot-swappable without touching model weights
-(plug-and-play, paper §3.5).  Hot-swapping PAS params only re-specialises the
-corrected prefix; the compiled plain path is untouched.
+``DiffusionServer`` is a thin sync facade over the async
+``runtime.scheduler.ServeScheduler`` (the default, ``ServeConfig.scheduler
+== "async"``): ``serve(list)`` submits every request, drains, and returns
+the assembled responses — bit-identical to the legacy synchronous flush
+loop, which survives as ``scheduler="sync"`` (and as the parity oracle in
+tests/test_serve_scheduler.py).  The async path additionally exposes
+``submit()``/``drain()`` for deadline-aware serving and per-request chunk
+streaming (see the scheduler module docstring).
+
+The pipeline owns the spec, the fused engine binding, and the PAS
+coordinate table (~10 floats) — hot-swappable without touching model
+weights (plug-and-play, paper §3.5).  Hot-swapping PAS params only
+re-specialises the corrected prefix; the compiled plain path is untouched.
 
 Mesh serving: ``ServeConfig.mesh`` (a ``repro.parallel.MeshSpec``) binds the
 pipeline's engine to a (dp, state) device grid.  Flushes are padded to a
@@ -31,6 +39,8 @@ import numpy as np
 from repro.api import MeshSpec, Pipeline, SamplerSpec, ScheduleSpec
 from repro.core import PASConfig, PASParams
 
+from .scheduler import ServeHandle, ServeScheduler
+
 __all__ = ["ServeConfig", "DiffusionServer", "Request"]
 
 
@@ -38,10 +48,20 @@ __all__ = ["ServeConfig", "DiffusionServer", "Request"]
 class Request:
     seed: int
     n_samples: int
+    deadline_ms: Optional[float] = None   # per-request batching slack bound
 
 
 @dataclasses.dataclass
 class ServeConfig:
+    """What to serve (a full ``SamplerSpec``) and how to batch it.
+
+    ``spec`` pins the sampler exactly; when ``None`` it is assembled from
+    the scalar shortcut fields below (``nfe``/``solver``/``t_min``/``t_max``
+    describe a default-rho polynomial schedule).  ``from_pipeline`` stores
+    the pipeline's spec verbatim, so a ``raw``-points or non-default-rho
+    schedule round-trips: ``cfg.to_spec() == pipeline.spec`` always.
+    """
+
     nfe: int = 10
     solver: str = "ddim"
     t_min: float = 0.002
@@ -50,13 +70,34 @@ class ServeConfig:
     use_pas: bool = True
     pas: PASConfig = dataclasses.field(default_factory=PASConfig)
     mesh: MeshSpec = dataclasses.field(default_factory=MeshSpec)
+    spec: Optional[SamplerSpec] = None
+    scheduler: str = "async"              # "async" (ServeScheduler) | "sync"
+    deadline_ms: Optional[float] = None   # default batching slack, ms
+    max_in_flight: int = 2                # double-buffered flush depth
+
+    def __post_init__(self):
+        if self.scheduler not in ("async", "sync"):
+            raise ValueError(
+                f"scheduler must be 'async' or 'sync', got {self.scheduler!r}")
+        if self.max_in_flight < 1:
+            raise ValueError(
+                f"max_in_flight must be >= 1, got {self.max_in_flight}")
 
     def to_spec(self) -> SamplerSpec:
         """The declarative sampler description this config serves."""
+        if self.spec is not None:
+            return self.spec
         return SamplerSpec(
             solver=self.solver, nfe=self.nfe,
             schedule=ScheduleSpec(t_min=self.t_min, t_max=self.t_max),
             pas=self.pas, mesh=self.mesh)
+
+    @classmethod
+    def for_spec(cls, spec: SamplerSpec, **kw) -> "ServeConfig":
+        """A config serving ``spec`` exactly (scalar fields kept in sync)."""
+        return cls(nfe=spec.nfe, solver=spec.solver,
+                   t_min=spec.schedule.t_min, t_max=spec.schedule.t_max,
+                   pas=spec.pas, mesh=spec.mesh, spec=spec, **kw)
 
 
 class DiffusionServer:
@@ -76,17 +117,20 @@ class DiffusionServer:
         # true compute spent, not requests x nominal-NFE.
         self.stats = {"requests": 0, "samples": 0, "batches": 0,
                       "nfe_total": 0, "padded_samples": 0, "wall_s": 0.0}
+        self._scheduler: Optional[ServeScheduler] = None
 
     @classmethod
     def from_pipeline(cls, pipeline: Pipeline,
                       cfg: Optional[ServeConfig] = None) -> "DiffusionServer":
-        """Serve an existing (typically calibrated/loaded) pipeline."""
+        """Serve an existing (typically calibrated/loaded) pipeline.
+
+        The derived config stores ``pipeline.spec`` itself, so schedules the
+        scalar fields can't express (``raw`` points, non-default rho, custom
+        dtype/teacher) survive the round trip: ``cfg.to_spec()`` is always
+        ``== pipeline.spec``.
+        """
         if cfg is None:
-            spec = pipeline.spec
-            ts = spec.ts()
-            cfg = ServeConfig(nfe=spec.nfe, solver=spec.solver,
-                              t_min=float(ts[-1]), t_max=float(ts[0]),
-                              pas=spec.pas, mesh=spec.mesh)
+            cfg = ServeConfig.for_spec(pipeline.spec)
         return cls(pipeline.eps_fn, pipeline.dim, cfg, pipeline=pipeline)
 
     # -- pipeline delegation ------------------------------------------------
@@ -116,19 +160,63 @@ class DiffusionServer:
         self.pipeline.set_params(params)
 
     def _run_batch(self, x_t: jnp.ndarray) -> jnp.ndarray:
-        # the flush buffer is built fresh per flush and never reused, so it
-        # is donated to the compiled scan (free initial-state buffer)
-        return self.pipeline.sample(x_t, use_pas=self.cfg.use_pas,
-                                    donate_x=True)
+        # the flush buffer is staged fresh per flush and never reused, so it
+        # is donated to the compiled scan (free initial-state buffer); the
+        # return value is the device future (JAX async dispatch) — sync
+        # callers block via np.asarray, the scheduler defers the read
+        y, _ = self.pipeline.sample_async(x_t, use_pas=self.cfg.use_pas,
+                                          donate_x=True)
+        return y
+
+    # -- async serving -------------------------------------------------------
+
+    @property
+    def scheduler(self) -> ServeScheduler:
+        """The lazily started ``ServeScheduler`` (async serving surface)."""
+        if self.cfg.scheduler != "async":
+            raise RuntimeError(
+                "submit()/drain() need ServeConfig(scheduler='async'); the "
+                "sync flush loop has no request queue — use serve(list), or "
+                "switch the config to the async scheduler")
+        if self._scheduler is None:
+            self._scheduler = ServeScheduler(
+                self.pipeline, max_batch=self.cfg.max_batch,
+                use_pas=self.cfg.use_pas,
+                deadline_ms=self.cfg.deadline_ms,
+                max_in_flight=self.cfg.max_in_flight,
+                run_batch=lambda x_t: self._run_batch(x_t),
+                stats=self.stats)
+        return self._scheduler
+
+    def submit(self, request: Request, **kw) -> ServeHandle:
+        """Enqueue one request; stream its chunks via the returned handle."""
+        return self.scheduler.submit(request, **kw)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Flush pending batches and land every in-flight flush."""
+        if self._scheduler is not None:
+            self._scheduler.drain(timeout)
+
+    def close(self) -> None:
+        """Stop the scheduler thread (started lazily; idempotent)."""
+        if self._scheduler is not None:
+            self._scheduler.close()
+            self._scheduler = None
 
     # -- serving -------------------------------------------------------------
 
     def serve(self, requests: list[Request]) -> list[np.ndarray]:
         """Micro-batches requests; returns one array of samples per request.
 
+        The sync facade: every request is submitted to the async scheduler,
+        the queue is drained, and the assembled per-request responses come
+        back in order — bit-identical to the legacy synchronous flush loop
+        (``cfg.scheduler == "sync"`` runs that loop verbatim instead).
+
         Oversized requests (n_samples > max_batch) are split into
         max_batch-sized chunks across flushes; the final partial chunk stays
-        pending so later requests can pack into the same batch.
+        pending so later requests can pack into the same batch.  Zero-sample
+        requests complete immediately with an empty (0, dim) response.
 
         Under a DP mesh every flush is padded to a DP-divisible row count
         (prior rows repeated as ballast — always in-distribution for the
@@ -136,6 +224,17 @@ class DiffusionServer:
         still show up in ``nfe_total``/``padded_samples`` because the
         devices really did burn those evals.
         """
+        if self.cfg.scheduler == "sync":
+            return self._serve_sync(requests)
+        t0 = time.time()
+        handles = [self.submit(req) for req in requests]
+        self.drain()
+        outs = [h.result() for h in handles]
+        self.stats["wall_s"] += time.time() - t0
+        return outs
+
+    def _serve_sync(self, requests: list[Request]) -> list[np.ndarray]:
+        """The legacy synchronous flush loop (the scheduler's parity oracle)."""
         parts: list[list[np.ndarray]] = [[] for _ in requests]
         pending: list[tuple[int, jnp.ndarray]] = []  # (request idx, x_T rows)
         sizes: list[int] = []
@@ -147,10 +246,7 @@ class DiffusionServer:
                 return
             x_t = jnp.concatenate([x for _, x in pending], axis=0)
             n_rows = int(x_t.shape[0])
-            pad = mesh.pad_batch(n_rows)
-            if pad:                       # pad-and-mask to a DP-divisible batch
-                filler = jnp.tile(x_t, (pad // n_rows + 1, 1))[:pad]
-                x_t = jnp.concatenate([x_t, filler], axis=0)
+            x_t, pad = mesh.pad_rows(x_t)   # pad-and-mask, DP-divisible
             x0 = np.asarray(self._run_batch(x_t))
             off = 0
             for (i, _), n in zip(pending, sizes):
@@ -164,9 +260,11 @@ class DiffusionServer:
 
         budget = self.cfg.max_batch
         for i, req in enumerate(requests):
-            x_t = self.pipeline.prior(jax.random.key(req.seed), req.n_samples)
             self.stats["requests"] += 1
             self.stats["samples"] += req.n_samples
+            if req.n_samples == 0:
+                continue         # answered with an empty (0, dim) response
+            x_t = self.pipeline.prior(jax.random.key(req.seed), req.n_samples)
             if req.n_samples <= budget:
                 if sum(sizes) + req.n_samples > budget:
                     flush()
@@ -182,5 +280,7 @@ class DiffusionServer:
                         flush()
         flush()
         self.stats["wall_s"] += time.time() - t0
-        return [p[0] if len(p) == 1 else np.concatenate(p, axis=0)
+        empty = np.zeros((0, self.dim), np.dtype(self.pipeline.spec.dtype))
+        return [p[0] if len(p) == 1 else
+                (np.concatenate(p, axis=0) if p else empty)
                 for p in parts]

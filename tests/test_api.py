@@ -336,9 +336,16 @@ def test_serve_config_to_spec_round_trip():
     assert spec.nfe == 7 and spec.solver == "ipndm2"
     ts = spec.ts()
     assert ts[0] == 40.0 and ts[-1] == 0.01
-    # from_pipeline derives an equivalent config
+    # from_pipeline reproduces the pipeline's spec *exactly* (regression:
+    # rebuilding from schedule endpoints dropped raw points / custom rho)
     gmm = analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
     server = DiffusionServer.from_pipeline(
         Pipeline.from_spec(spec, gmm.eps, dim=DIM))
     assert server.cfg.nfe == 7 and server.cfg.t_max == 40.0
+    assert server.cfg.to_spec() == spec
+    for tricky in (spec.replace(schedule=ScheduleSpec.raw(ts)),
+                   spec.replace(schedule=ScheduleSpec(
+                       t_min=0.01, t_max=40.0, rho=3.0))):
+        pipe = Pipeline.from_spec(tricky, gmm.eps, dim=DIM)
+        assert DiffusionServer.from_pipeline(pipe).cfg.to_spec() == tricky
     assert Path(PASArtifact.root("x")).name == "pas_artifact"

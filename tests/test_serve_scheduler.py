@@ -1,0 +1,475 @@
+"""Async serve scheduler: the serve-loop refactor's acceptance contract.
+
+* the sync facade (``DiffusionServer.serve`` routed through the scheduler)
+  is **bit-identical** to the legacy synchronous flush loop on the same
+  seeds — mixed sizes, oversized chunking, zero-sample requests — in
+  process here and on a dp=8 virtual mesh in the slow subprocess half;
+* deadline-aware batch formation: a lone request flushes partial when its
+  slack expires instead of waiting for the budget;
+* per-request streaming: oversized requests yield chunks in row order
+  *before* their last chunk lands;
+* donation safety under double-buffering: every flush stages a fresh
+  buffer, the engine refuses to donate an already-donated one;
+* serve-loop round-trip bugfixes: ``ServeConfig`` carries the full spec
+  (raw points / non-default rho round-trip ``cfg.to_spec() ==
+  pipeline.spec``), ``Request(n_samples=0)`` gets an empty (0, dim)
+  response, and ``launch.serve`` rejects malformed ``--mesh`` values;
+* the hypothesis property: every request gets back exactly ``n_samples``
+  rows in order and no flush exceeds ``max_batch`` + DP pad.
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (PASConfig, Pipeline, SamplerSpec, ScheduleSpec,
+                       TeacherSpec)
+from repro.core import analytic
+from repro.launch.serve import parse_mesh
+from repro.runtime import DiffusionServer, Request, ServeConfig
+
+DIM = 16
+NFE = 5
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="module")
+def gmm():
+    return analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+
+
+def _server(gmm, *, scheduler="async", max_batch=8, **kw) -> DiffusionServer:
+    cfg = ServeConfig(nfe=NFE, solver="ddim", max_batch=max_batch,
+                      use_pas=False, scheduler=scheduler, **kw)
+    return DiffusionServer(gmm.eps, DIM, cfg)
+
+
+def _track_flushes(server):
+    seen = []
+    orig = server._run_batch
+
+    def tracked(x_t):
+        seen.append(int(x_t.shape[0]))
+        return orig(x_t)
+
+    server._run_batch = tracked
+    return seen
+
+
+# ---------------------------------------------------------------------------
+# sync facade == legacy flush loop, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_facade_bit_identical_to_sync_loop(gmm):
+    """Same seeds, mixed sizes (packed, oversized, zero): identical bits
+    and identical flush composition/stats."""
+    reqs = [Request(seed=0, n_samples=4), Request(seed=1, n_samples=20),
+            Request(seed=2, n_samples=0), Request(seed=3, n_samples=3),
+            Request(seed=4, n_samples=8)]
+    sync = _server(gmm, scheduler="sync")
+    sync_seen = _track_flushes(sync)
+    want = sync.serve(reqs)
+
+    srv = _server(gmm, scheduler="async")
+    seen = _track_flushes(srv)
+    got = srv.serve(reqs)
+
+    assert [o.shape for o in got] == [(4, DIM), (20, DIM), (0, DIM),
+                                      (3, DIM), (8, DIM)]
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    assert seen == sync_seen                  # same flush composition
+    for k in ("requests", "samples", "batches", "nfe_total",
+              "padded_samples"):
+        assert srv.stats[k] == sync.stats[k], k
+    srv.close()
+
+
+def test_facade_bit_identical_with_pas_correction(gmm):
+    """The corrected prefix (donated PAS variant) is identical too."""
+    from repro.core.pas import PASParams
+    import jax.numpy as jnp
+    active = np.zeros(NFE, bool)
+    active[[1, 3]] = True
+    coords = np.zeros((NFE, 4), np.float32)
+    coords[1] = [1.0, 0.05, 0.0, 0.0]
+    coords[3] = [0.98, -0.04, 0.0, 0.0]
+    params = PASParams(active=active, coords=jnp.asarray(coords))
+    reqs = [Request(seed=0, n_samples=4), Request(seed=1, n_samples=12)]
+
+    def pas_server(mode):
+        cfg = ServeConfig(nfe=NFE, solver="ddim", max_batch=8, use_pas=True,
+                          scheduler=mode)
+        srv = DiffusionServer(gmm.eps, DIM, cfg)
+        srv.set_pas(params)
+        return srv
+
+    want = pas_server("sync").serve(reqs)
+    srv = pas_server("async")
+    got = srv.serve(reqs)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    srv.close()
+
+
+def test_facade_serve_repeated_calls_accumulate_stats(gmm):
+    srv = _server(gmm, scheduler="async")
+    srv.serve([Request(seed=0, n_samples=3)])
+    srv.serve([Request(seed=1, n_samples=5)])
+    assert srv.stats["requests"] == 2 and srv.stats["samples"] == 8
+    assert srv.stats["batches"] == 2
+    assert srv.stats["nfe_total"] == 8 * NFE
+    assert srv.stats["wall_s"] > 0
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# zero-sample requests (bugfix)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scheduler", ["sync", "async"])
+def test_zero_sample_request_returns_empty(gmm, scheduler):
+    """A Request(n_samples=0) answers with an empty (0, dim) array — it
+    never joins a flush and never crashes response assembly."""
+    srv = _server(gmm, scheduler=scheduler)
+    seen = _track_flushes(srv)
+    outs = srv.serve([Request(seed=0, n_samples=0)])
+    assert outs[0].shape == (0, DIM)
+    assert outs[0].dtype == np.float32
+    assert seen == []                         # no flush was dispatched
+    assert srv.stats["requests"] == 1 and srv.stats["samples"] == 0
+    assert srv.stats["batches"] == 0
+    srv.close()
+
+
+def test_zero_sample_handle_completes_immediately(gmm):
+    srv = _server(gmm, scheduler="async")
+    h = srv.submit(Request(seed=0, n_samples=0))
+    assert h.done()
+    assert h.result(timeout=1).shape == (0, DIM)
+    assert list(h.chunks(timeout=1)) == []
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware batch formation
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_forces_partial_flush(gmm):
+    """A lone 4-row request against a 256 budget flushes when its slack
+    expires, not when the budget fills (which would be never)."""
+    srv = _server(gmm, max_batch=256, deadline_ms=50)
+    h = srv.submit(Request(seed=7, n_samples=4))
+    out = h.result(timeout=60)
+    assert out.shape == (4, DIM)
+    assert srv.stats["flushes_deadline"] == 1
+    assert srv.stats["flushes_budget"] == 0
+    assert srv.stats["batches"] == 1
+    srv.close()
+
+
+def test_per_request_deadline_overrides_default(gmm):
+    srv = _server(gmm, max_batch=256)         # no default deadline
+    h = srv.submit(Request(seed=1, n_samples=2, deadline_ms=40))
+    assert h.result(timeout=60).shape == (2, DIM)
+    assert srv.stats["flushes_deadline"] == 1
+    srv.close()
+
+
+def test_no_deadline_waits_for_drain(gmm):
+    srv = _server(gmm, max_batch=256)
+    h = srv.submit(Request(seed=1, n_samples=2))
+    assert not h.done()
+    srv.drain(timeout=60)
+    assert h.done() and srv.stats["flushes_drain"] == 1
+    srv.close()
+
+
+def test_budget_fill_still_wins_over_deadline(gmm):
+    """Requests already queued pack into a full flush even when a deadline
+    has technically expired by the time the scheduler gets to them."""
+    srv = _server(gmm, max_batch=8, deadline_ms=200)
+    seen = _track_flushes(srv)
+    handles = [srv.submit(Request(seed=i, n_samples=4)) for i in range(4)]
+    for h in handles:
+        assert h.result(timeout=60).shape == (4, DIM)
+    assert seen == [8, 8]
+    assert srv.stats["flushes_budget"] == 2
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# per-request streaming
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_chunk_ordering_and_early_yield(gmm):
+    """An oversized request streams budget-sized chunks in row order; the
+    first chunks arrive while the request is still incomplete."""
+    srv = _server(gmm, max_batch=8, deadline_ms=150)
+    h = srv.submit(Request(seed=1, n_samples=20))
+    chunks, done_flags = [], []
+    for c in h.chunks(timeout=60):
+        chunks.append(c)
+        done_flags.append(h.done())
+    assert [c.shape[0] for c in chunks] == [8, 8, 4]
+    assert done_flags[-1] is True
+    assert not all(done_flags[:-1])   # rows landed before the last chunk
+    got = np.concatenate(chunks, axis=0)
+    np.testing.assert_array_equal(got, h.result())
+
+    # row-identical to the legacy loop on the same seed
+    sync = _server(gmm, scheduler="sync", max_batch=8)
+    np.testing.assert_array_equal(
+        got, sync.serve([Request(seed=1, n_samples=20)])[0])
+    assert h.latency_s is not None and h.latency_s > 0
+    srv.close()
+
+
+def test_result_timeout_raises(gmm):
+    srv = _server(gmm, max_batch=256)         # nothing will flush
+    h = srv.submit(Request(seed=0, n_samples=2))
+    with pytest.raises(TimeoutError, match="rows outstanding"):
+        h.result(timeout=0.05)
+    with pytest.raises(TimeoutError, match="no chunk within"):
+        next(iter(h.chunks(timeout=0.05)))
+    srv.drain(timeout=60)
+    srv.close()
+
+
+def test_submit_requires_async_scheduler(gmm):
+    srv = _server(gmm, scheduler="sync")
+    with pytest.raises(RuntimeError, match="scheduler='async'"):
+        srv.submit(Request(seed=0, n_samples=2))
+
+
+def test_flush_failure_fails_handles_without_deadlock(gmm):
+    """A failing flush executor must surface through the handles (and a
+    raising serve()/drain()), never as a hung consumer — regression for
+    orphaned chunks and the drain deadlock."""
+    srv = _server(gmm, scheduler="async", max_batch=8)
+
+    def boom(x_t):
+        raise RuntimeError("device on fire")
+
+    srv._run_batch = boom
+    h = srv.submit(Request(seed=0, n_samples=20))   # oversized: flushes now
+    with pytest.raises(RuntimeError, match="device on fire"):
+        h.result(timeout=60)
+    with pytest.raises(RuntimeError, match="device on fire"):
+        list(h.chunks(timeout=60))
+    srv.drain(timeout=60)                           # must not deadlock
+    with pytest.raises(RuntimeError, match="device on fire"):
+        srv.serve([Request(seed=1, n_samples=4)])
+    # the scheduler survives an aborted flush: restore and serve again
+    del srv._run_batch                              # back to the real path
+    out = srv.serve([Request(seed=2, n_samples=4)])
+    assert out[0].shape == (4, DIM)
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# donation safety under double-buffering
+# ---------------------------------------------------------------------------
+
+
+def test_engine_rejects_reuse_of_donated_buffer(gmm):
+    pipe = Pipeline.from_spec(
+        SamplerSpec(solver="ddim", nfe=NFE,
+                    pas=PASConfig(n_sgd_iters=20)), gmm.eps, dim=DIM)
+    x = pipe.prior(jax.random.key(0), 4)
+    y, valid = pipe.sample_async(x, use_pas=False, donate_x=True)
+    assert valid.all() and np.asarray(y).shape == (4, DIM)
+    with pytest.raises(ValueError, match="already donated"):
+        pipe.sample_async(x, use_pas=False, donate_x=True)
+
+
+def test_double_buffered_flushes_stay_correct(gmm):
+    """Back-to-back in-flight flushes (depth 2) never cross-contaminate:
+    every request's rows match the legacy loop bit for bit."""
+    reqs = [Request(seed=i, n_samples=8) for i in range(12)]
+    sync = _server(gmm, scheduler="sync", max_batch=8)
+    want = sync.serve(reqs)
+    srv = _server(gmm, max_batch=8, max_in_flight=2)
+    got = srv.serve(reqs)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    assert srv.stats["batches"] == 12
+    srv.close()
+
+
+def test_sample_async_pads_and_masks(gmm):
+    """sample_async returns the device future plus the host-side row mask
+    (all-valid on a trivial mesh; DP padding is exercised in the
+    subprocess half on 8 virtual devices)."""
+    pipe = Pipeline.from_spec(SamplerSpec(solver="ddim", nfe=NFE), gmm.eps,
+                              dim=DIM)
+    x = pipe.prior(jax.random.key(0), 6)
+    y, valid = pipe.sample_async(x, use_pas=False)
+    assert valid.shape == (6,) and valid.all()
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(pipe.sample(x, use_pas=False)))
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig round-trip (bugfix) + validation
+# ---------------------------------------------------------------------------
+
+
+def test_serve_config_round_trips_raw_schedule(gmm):
+    """from_pipeline must reproduce the pipeline's spec exactly — a raw
+    grid used to collapse to a default polynomial over its endpoints."""
+    ts = np.linspace(50.0, 0.01, NFE + 1)
+    spec = SamplerSpec(solver="ipndm2", nfe=NFE,
+                       schedule=ScheduleSpec.raw(ts))
+    server = DiffusionServer.from_pipeline(
+        Pipeline.from_spec(spec, gmm.eps, dim=DIM))
+    assert server.cfg.to_spec() == spec
+    np.testing.assert_array_equal(server.cfg.to_spec().ts(), ts)
+
+
+def test_serve_config_round_trips_non_default_rho(gmm):
+    spec = SamplerSpec(solver="ddim", nfe=NFE,
+                       schedule=ScheduleSpec(rho=3.0),
+                       dtype="bfloat16",
+                       teacher=TeacherSpec(solver="dpm2", nfe=60))
+    server = DiffusionServer.from_pipeline(
+        Pipeline.from_spec(spec, gmm.eps, dim=DIM))
+    assert server.cfg.to_spec() == spec
+    # the scalar shortcut fields stay coherent for introspection
+    assert server.cfg.nfe == NFE and server.cfg.solver == "ddim"
+
+
+def test_serve_config_scalar_fields_still_build_specs():
+    cfg = ServeConfig(nfe=7, solver="ipndm2", t_min=0.01, t_max=40.0)
+    spec = cfg.to_spec()
+    assert spec.nfe == 7 and spec.schedule.t_max == 40.0
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="scheduler"):
+        ServeConfig(scheduler="turbo")
+    with pytest.raises(ValueError, match="max_in_flight"):
+        ServeConfig(max_in_flight=0)
+
+
+# ---------------------------------------------------------------------------
+# --mesh parsing (bugfix)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("value,expect", [
+    ("8x1", (8, 1)), ("2x4", (2, 4)), (" 1x1 ", (1, 1))])
+def test_parse_mesh_accepts_valid_grids(value, expect):
+    assert parse_mesh(value) == expect
+
+
+@pytest.mark.parametrize("value", ["8", "x4", "8x", "2x3x4", "axb", "-1x2",
+                                   "0x2", "2x0", ""])
+def test_parse_mesh_rejects_malformed(value):
+    with pytest.raises(argparse.ArgumentTypeError):
+        parse_mesh(value)
+
+
+# ---------------------------------------------------------------------------
+# the serving property: exact rows, in order, bounded flushes
+# ---------------------------------------------------------------------------
+
+
+def test_serve_property_rows_in_order_bounded_flushes(gmm):
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    budget = 4
+    srv = _server(gmm, scheduler="async", max_batch=budget)
+    seen = _track_flushes(srv)
+    ref = _server(gmm, scheduler="sync", max_batch=budget)
+
+    @hyp.settings(max_examples=12, deadline=None)
+    @hyp.given(sizes=st.lists(st.integers(min_value=0, max_value=11),
+                              min_size=1, max_size=6))
+    def check(sizes):
+        seen.clear()
+        reqs = [Request(seed=i, n_samples=n) for i, n in enumerate(sizes)]
+        outs = srv.serve(reqs)
+        # every request: exactly n_samples rows, in order, right values
+        assert [o.shape[0] for o in outs] == sizes
+        want = ref.serve(reqs)
+        for a, b in zip(want, outs):
+            np.testing.assert_array_equal(a, b)
+        # no flush exceeds the budget (+ DP pad — trivial mesh: 0)
+        assert all(0 < s <= budget for s in seen)
+        assert sum(s for s in seen) == sum(sizes)
+
+    check()
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# dp=8 virtual mesh: facade bit-identity + padded deadline flushes
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import jax, numpy as np
+from repro.api import MeshSpec
+from repro.core import two_mode_gmm
+from repro.runtime import DiffusionServer, Request, ServeConfig
+
+assert len(jax.devices()) == 8, jax.devices()
+DIM, NFE = 24, 6
+gmm = two_mode_gmm(DIM, sep=6.0, var=0.25)
+
+def server(mode, **kw):
+    return DiffusionServer(gmm.eps, DIM, ServeConfig(
+        nfe=NFE, solver="ddim", max_batch=16, use_pas=False,
+        mesh=MeshSpec(dp=8), scheduler=mode, **kw))
+
+reqs = [Request(seed=0, n_samples=5), Request(seed=1, n_samples=6),
+        Request(seed=2, n_samples=20), Request(seed=3, n_samples=0),
+        Request(seed=4, n_samples=3)]
+
+# 1) facade == legacy loop, bit for bit, on the dp=8 mesh
+sync = server("sync")
+want = sync.serve(reqs)
+srv = server("async")
+got = srv.serve(reqs)
+assert [o.shape[0] for o in got] == [5, 6, 20, 0, 3]
+for a, b in zip(want, got):
+    assert np.array_equal(a, b), np.abs(a - b).max()
+for k in ("batches", "nfe_total", "padded_samples"):
+    assert srv.stats[k] == sync.stats[k], (k, srv.stats[k], sync.stats[k])
+assert srv.stats["padded_samples"] > 0          # DP padding really happened
+print("DP8_FACADE_BITEXACT_OK")
+
+# 2) a deadline flush pads to a DP-divisible row count and masks back out
+d = server("async", deadline_ms=50)
+h = d.submit(Request(seed=9, n_samples=5))
+out = h.result(timeout=120)
+assert out.shape == (5, DIM)
+assert d.stats["flushes_deadline"] == 1
+assert d.stats["padded_samples"] == 3           # 5 rows padded to 8
+assert d.stats["nfe_total"] == 8 * NFE
+print("DP8_DEADLINE_PAD_OK")
+"""
+
+
+@pytest.mark.slow
+def test_facade_bit_identity_dp8_subprocess():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = _SRC
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "DP8_FACADE_BITEXACT_OK" in out.stdout
+    assert "DP8_DEADLINE_PAD_OK" in out.stdout
