@@ -15,16 +15,16 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,table2,table5,table6,table8,"
                          "table9,table11,fig6,learned,overhead,sharded,"
-                         "serve")
+                         "serve,router")
     ap.add_argument("--fast", action="store_true",
                     help="smaller NFE grids (CI mode)")
     args = ap.parse_args()
 
     from . import (fig2_pca_variance, fig3_truncation, fig6_ablations,
                    learned_denoiser, pas_overhead, serve_latency,
-                   sharded_throughput, table2_solvers, table5_nfe_sweep,
-                   table6_adaptive_steps, table8_tolerance, table9_teacher,
-                   table11_l1l2)
+                   serve_router, sharded_throughput, table2_solvers,
+                   table5_nfe_sweep, table6_adaptive_steps, table8_tolerance,
+                   table9_teacher, table11_l1l2)
 
     suite = {
         "fig2": lambda: fig2_pca_variance.run(),
@@ -45,6 +45,7 @@ def main() -> None:
         # root-level BENCH_sharded_throughput.json perf record
         "sharded": lambda: sharded_throughput.run(dry_run=args.fast),
         "serve": lambda: serve_latency.run(dry_run=args.fast)["rows"],
+        "router": lambda: serve_router.run(dry_run=args.fast)["rows"],
     }
     only = args.only.split(",") if args.only else list(suite)
 

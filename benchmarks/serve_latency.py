@@ -51,7 +51,7 @@ def _percentiles(lat_s: list[float]) -> dict:
 
 
 def _requests(sizes):
-    from repro.runtime import Request
+    from repro.api import Request
     return [Request(seed=i, n_samples=n) for i, n in enumerate(sizes)]
 
 
@@ -76,7 +76,7 @@ def _serve_async(server, sizes):
 def run(sizes=None, repeat: int = 3, nfe: int = NFE,
         max_batch: int = MAX_BATCH, dry_run: bool = False) -> dict:
     from repro.core import two_mode_gmm
-    from repro.runtime import DiffusionServer, ServeConfig
+    from repro.api import DiffusionServer, ServeConfig
 
     if sizes is None:
         sizes = SIZES

@@ -1,0 +1,239 @@
+"""Router SLA curves: latency vs offered load, per priority class.
+
+A two-lane ``PipelineRouter`` — a PAS-corrected low-NFE lane ("fast",
+ddim@4 + synthetic correction) and a teacher-grade lane ("hq", ddim@20,
+uncorrected) — serves a seeded Poisson request stream at several offered
+loads.  Each arrival carries a priority class and a deadline
+(``runtime.traffic.poisson_arrivals``): interactive requests are small with
+a tight deadline, so the slack router lands them on the fast lane and the
+scheduler packs them ahead of batch backfill; batch requests are large with
+a loose deadline and ride the hq lane.  Both lanes share one submit queue,
+one scheduler thread and one in-flight window — the SLA separation is pure
+scheduling, not extra hardware.
+
+Per (offered load, priority class): p50/p95/p99 submit-to-last-chunk
+latency, request/sample counts and the per-lane routing split, into a
+root-level ``BENCH_serve_router.json`` so the SLA trajectory is tracked PR
+over PR.  The run asserts the acceptance contract: pooled over the mixed
+Poisson load, **interactive p95 < batch p95**, and both lanes actually
+served flushes.
+
+Lane executors bucket-pad every flush to the lane budget before sampling
+(the retire path only reads the real rows back), so each lane compiles one
+batch shape once and the latency curves measure scheduling, not
+recompilation.
+
+  PYTHONPATH=src python -m benchmarks.serve_router [--rates 60,120,240] \
+      [--duration 1.5] [--trace FILE] [--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_serve_router.json"
+
+DIM = 64
+FAST_NFE, HQ_NFE = 4, 20
+# the hq budget is deliberately large (a bulk lane amortises into big
+# flushes): with a small budget the batch class fills it instantly at high
+# offered load and flushes *faster* than the interactive deadline, which
+# inverts the SLA ordering the curves are meant to show
+BUDGETS = {"fast": 32, "hq": 512}
+# ms of slack one model eval is worth: 2.0 prices the fast lane at 8 ms and
+# the hq lane at 40 ms, so a 25 ms interactive deadline routes fast and a
+# 250 ms batch deadline routes hq
+SLACK_MS_PER_EVAL = 2.0
+INTERACTIVE_DEADLINE_MS = 25.0
+BATCH_DEADLINE_MS = 250.0
+RATES_RPS = (60.0, 120.0, 240.0)
+DURATION_S = 1.5
+
+
+def _percentiles(lat_s) -> dict:
+    lat = np.asarray(sorted(lat_s))
+    return {f"p{p}_ms": round(float(np.percentile(lat, p)) * 1e3, 2)
+            for p in (50, 95, 99)}
+
+
+def _build_zoo():
+    """The shared pipeline zoo: built once so every load point's router
+    reuses the same compiled programs (prior/sample caches live on the
+    pipeline objects — fresh routers over shared lanes measure scheduling,
+    never recompilation)."""
+    import jax.numpy as jnp
+
+    from repro.api import Pipeline, SamplerSpec
+    from repro.core import two_mode_gmm
+    from repro.core.pas import PASParams
+
+    gmm = two_mode_gmm(DIM, sep=6.0, var=0.25)
+    fast = Pipeline.from_spec(SamplerSpec(solver="ddim", nfe=FAST_NFE),
+                              gmm.eps, dim=DIM)
+    active = np.zeros(FAST_NFE, bool)
+    active[[1, 3]] = True
+    coords = np.zeros((FAST_NFE, 4), np.float32)
+    coords[1] = [1.0, 0.05, 0.0, 0.0]
+    coords[3] = [0.98, -0.04, 0.0, 0.0]
+    fast.set_params(PASParams(active=active, coords=jnp.asarray(coords)))
+    hq = Pipeline.from_spec(SamplerSpec(solver="ddim", nfe=HQ_NFE),
+                            gmm.eps, dim=DIM)
+    pipes = {"fast": fast, "hq": hq}
+
+    def bucketed(key, x_t):
+        # pad to the lane budget (in numpy — host concat never compiles) so
+        # each lane's sampler compiles exactly one batch shape; the retire
+        # path only reads the real rows back off the front
+        import jax
+        budget = BUDGETS[key]
+        x = np.asarray(x_t)
+        if x.shape[0] < budget:
+            x = np.concatenate(
+                [x, np.zeros((budget - x.shape[0], DIM), x.dtype)])
+        return pipes[key].sample(jax.numpy.asarray(x),
+                                 use_pas=(key == "fast"))
+
+    return pipes, bucketed
+
+
+def _router_for(pipes, bucketed, stats: dict):
+    from repro.api import PipelineRouter, ServeConfig
+
+    return PipelineRouter(
+        pipes, budgets=BUDGETS, run_batch=bucketed, stats=stats,
+        cfg=ServeConfig(max_batch=max(BUDGETS.values()),
+                        slack_ms_per_eval=SLACK_MS_PER_EVAL))
+
+
+def _warm(pipes, bucketed, arrivals) -> None:
+    """Compile everything the timed pass will touch: both lanes' bucket
+    shapes, every palette request size's prior draw, and (via one untimed
+    replay of the same schedule) the flush compositions the scheduler's
+    host staging concatenates."""
+    from repro.api import Request, replay
+
+    router = _router_for(pipes, bucketed, {})
+    try:
+        sizes = {a.n_samples for a in arrivals}
+        sizes.update(BUDGETS.values())
+        for key in pipes:
+            for n in sorted(sizes):
+                router.submit(Request(seed=0, n_samples=n), pipeline=key)
+        router.drain(timeout=600)
+        replay(arrivals, router.submit)
+        router.drain(timeout=600)
+    finally:
+        router.close()
+
+
+def _one_load_point(pipes, bucketed, arrivals, rate_rps: float,
+                    duration_s: float) -> list[dict]:
+    from repro.api import replay
+
+    stats: dict = {}
+    router = _router_for(pipes, bucketed, stats)
+    try:
+        pairs = replay(arrivals, router.submit)
+        router.drain(timeout=600)
+    finally:
+        router.close()
+    assert all(ln > 0 for ln in stats["lane_batches"].values()), \
+        f"a lane sat idle under mixed load: {stats['lane_batches']}"
+
+    rows = []
+    for prio in ("interactive", "batch"):
+        handles = [h for _, h in pairs if h.priority == prio]
+        if not handles:
+            continue
+        lanes: dict[str, int] = {}
+        for h in handles:
+            lanes[h.lane] = lanes.get(h.lane, 0) + 1
+        samples = sum(a.n_samples for a, h in pairs if h.priority == prio)
+        rows.append({
+            "rate_rps": rate_rps, "priority": prio,
+            "requests": len(handles), "samples": samples,
+            "offered_samples_per_s": round(samples / duration_s, 1),
+            **_percentiles([h.latency_s for h in handles]),
+            "lanes": lanes,
+            "deadline_ms": (INTERACTIVE_DEADLINE_MS if prio == "interactive"
+                            else BATCH_DEADLINE_MS),
+        })
+    return rows
+
+
+def run(rates=RATES_RPS, duration_s: float = DURATION_S, trace=None,
+        dry_run: bool = False) -> dict:
+    from repro.api import load_trace, poisson_arrivals
+
+    if dry_run:
+        rates, duration_s = (80.0,), 0.5
+
+    pipes, bucketed = _build_zoo()
+    rows: list[dict] = []
+    pooled: dict[str, list[float]] = {"interactive": [], "batch": []}
+    for rate in rates:
+        if trace is not None:
+            arrivals = load_trace(trace)
+        else:
+            arrivals = poisson_arrivals(
+                rate, duration_s, seed=0,
+                interactive_deadline_ms=INTERACTIVE_DEADLINE_MS,
+                batch_deadline_ms=BATCH_DEADLINE_MS)
+        _warm(pipes, bucketed, arrivals)
+        point = _one_load_point(pipes, bucketed, arrivals, rate, duration_s)
+        rows.extend(point)
+        for r in point:
+            pooled[r["priority"]].append(r["p95_ms"])
+        print(f"rate={rate}rps " + " ".join(
+            f"{r['priority']}:p95={r['p95_ms']}ms" for r in point),
+            flush=True)
+
+    # acceptance: under the mixed Poisson load the interactive class beats
+    # the batch class at p95 (worst load point governs)
+    sla_ok = (bool(pooled["interactive"]) and bool(pooled["batch"])
+              and max(pooled["interactive"]) < min(pooled["batch"]))
+    report = {
+        "rows": rows,
+        "lanes": {"fast": {"solver": "ddim", "nfe": FAST_NFE, "pas": True,
+                           "budget": BUDGETS["fast"]},
+                  "hq": {"solver": "ddim", "nfe": HQ_NFE, "pas": False,
+                         "budget": BUDGETS["hq"]}},
+        "slack_ms_per_eval": SLACK_MS_PER_EVAL,
+        "duration_s": duration_s,
+        "interactive_p95_lt_batch_p95": sla_ok,
+        "backend": __import__("jax").default_backend(),
+        "generated": time.strftime("%F %T"),
+    }
+    if not dry_run:               # smoke runs don't pollute the perf record
+        OUT.write_text(json.dumps(report, indent=1))
+        from . import common
+        common.save_table("serve_router", rows,
+                          extra={"backend": report["backend"],
+                                 "interactive_p95_lt_batch_p95": sla_ok})
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rates", default=None,
+                    help="comma list of offered loads, requests/s")
+    ap.add_argument("--duration", type=float, default=DURATION_S)
+    ap.add_argument("--trace", default=None,
+                    help="CSV trace file to replay instead of Poisson")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="one small load point (CI smoke)")
+    args = ap.parse_args()
+    rates = (tuple(float(r) for r in args.rates.split(","))
+             if args.rates else RATES_RPS)
+    rep = run(rates=rates, duration_s=args.duration, trace=args.trace,
+              dry_run=args.dry_run)
+    for r in rep["rows"]:
+        print(r)
+    print(f"interactive_p95_lt_batch_p95={rep['interactive_p95_lt_batch_p95']}")
+    assert rep["interactive_p95_lt_batch_p95"], \
+        "interactive p95 did not beat batch p95 under mixed load"

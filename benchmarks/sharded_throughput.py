@@ -50,15 +50,25 @@ pipe.set_params(PASParams(active=active, coords=jnp.asarray(coords)))
 x = pipe.prior(jax.random.key(0), batch)
 rows = []
 for mode, use_pas in (("plain", False), ("pas", True)):
+    # timing discipline (regression: a dp=2 plain row once recorded ~300k
+    # samples/s, ~10x the dp=1/dp=8 rows — async dispatch measured without a
+    # per-call device sync): one compile call, two warmup calls to reach
+    # steady state, then every repeat individually bracketed by
+    # block_until_ready and the *minimum* repeat taken, so a row can never
+    # report faster than the device actually ran a full sampling pass
     jax.block_until_ready(pipe.sample(x, use_pas=use_pas))   # compile
-    t0 = time.time()
+    for _ in range(2):
+        jax.block_until_ready(pipe.sample(x, use_pas=use_pas))
+    times = []
     for _ in range(n_rep):
-        out = pipe.sample(x, use_pas=use_pas)
-    jax.block_until_ready(out)
-    sps = batch * n_rep / (time.time() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(pipe.sample(x, use_pas=use_pas))
+        times.append(time.perf_counter() - t0)
+    sps = batch / min(times)
     rows.append({"devices": n_dev, "mode": mode, "batch": batch,
                  "solver": solver, "nfe": nfe,
-                 "samples_per_s": round(sps, 1)})
+                 "samples_per_s": round(sps, 1),
+                 "reps": n_rep, "timing": "min-over-reps, per-call sync"})
 print("ROWS_JSON:" + json.dumps(rows))
 """
 

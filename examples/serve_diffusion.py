@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.api import PASArtifact, PASConfig, Pipeline
 from repro.core import two_mode_gmm
-from repro.runtime import DiffusionServer, Request, ServeConfig
+from repro.api import DiffusionServer, Request, ServeConfig
 
 DIM = 64
 

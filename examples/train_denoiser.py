@@ -15,7 +15,7 @@ from repro.core import two_mode_gmm
 from repro.diffusion import (EDMConfig, edm_loss, eps_from_denoiser,
                              init_denoiser, precondition, raw_apply)
 from repro.optim import AdamW, warmup_cosine
-from repro.runtime import TrainLoopConfig, run_train_loop
+from repro.api import TrainLoopConfig, run_train_loop
 
 DIM = 64
 

@@ -3,6 +3,14 @@
 Everything downstream (launchers, serving, examples, benchmarks) builds PAS
 samplers through this package; the per-module wiring underneath
 (``repro.core`` / ``repro.engine``) is internal.
+
+The serving types are part of this surface too — ``Request``,
+``ServeConfig``, ``ServeHandle``, ``DiffusionServer``, the multi-pipeline
+``PipelineRouter``, and the ``runtime.traffic`` arrival generators — so
+callers never import from ``repro.runtime.*``.  They resolve lazily (PEP
+562): ``repro.runtime`` builds *on top of* this package, so importing it
+eagerly here would be circular, and a spec-only consumer shouldn't pay for
+the serving stack at import time.
 """
 
 from repro.core.pas import PASConfig, PASParams
@@ -15,6 +23,25 @@ from .spec import (MeshSpec, SamplerSpec, ScheduleSpec, TeacherSpec,
                    schedule_kinds, solver_names, spec_from_schedule,
                    teacher_names)
 
+# serving surface, re-exported from repro.runtime on first access
+_SERVING_EXPORTS = {
+    "Arrival": "repro.runtime.traffic",
+    "DiffusionServer": "repro.runtime.serve_loop",
+    "PRIORITIES": "repro.runtime.scheduler",
+    "PipelineRouter": "repro.runtime.router",
+    "Request": "repro.runtime.serve_loop",
+    "ServeConfig": "repro.runtime.serve_loop",
+    "ServeHandle": "repro.runtime.scheduler",
+    "ServeScheduler": "repro.runtime.scheduler",
+    "StragglerMonitor": "repro.runtime.train_loop",
+    "TrainLoopConfig": "repro.runtime.train_loop",
+    "load_trace": "repro.runtime.traffic",
+    "poisson_arrivals": "repro.runtime.traffic",
+    "replay": "repro.runtime.traffic",
+    "run_train_loop": "repro.runtime.train_loop",
+    "save_trace": "repro.runtime.traffic",
+}
+
 __all__ = [
     "MeshSpec", "SamplerSpec", "ScheduleSpec", "TeacherSpec",
     "Pipeline", "teacher_trajectory",
@@ -23,4 +50,19 @@ __all__ = [
     "register_solver", "register_schedule", "register_teacher",
     "solver_names", "schedule_kinds", "teacher_names",
     "spec_from_schedule",
+    *sorted(_SERVING_EXPORTS),
 ]
+
+
+def __getattr__(name: str):
+    module = _SERVING_EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value              # cache: next access skips this hook
+    return value
+
+
+def __dir__() -> list[str]:
+    return sorted(set(globals()) | set(__all__))

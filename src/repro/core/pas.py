@@ -282,8 +282,8 @@ def _final_state_gate(solver, eps_fn, x_gate, gt_gate, params: PASParams,
     each trial mask reuses the engine's per-pattern compiled prefix instead
     of re-tracing the eager trajectory loop per trial.
     """
-    from repro.engine import engine_for_solver  # deferred: engine imports core
-    eng = engine_for_solver(solver)
+    from repro.engine.engine import _engine_for_solver  # deferred: engine imports core
+    eng = _engine_for_solver(solver)
     x_plain = eng.sample(eps_fn, x_gate)
     e_plain = float(jnp.mean(jnp.linalg.norm(x_plain - gt_gate[-1], axis=-1)))
     active = params.active.copy()
@@ -362,8 +362,14 @@ def pas_sample(solver: Solver, eps_fn: EpsFn, x_t: Array, params: PASParams,
     ``pas_sample_trajectory`` below remains the reference implementation the
     engine is parity-tested against (tests/test_engine.py).
     """
-    from repro.engine import engine_for_solver  # deferred: engine imports core
-    return engine_for_solver(solver).sample(eps_fn, x_t, params=params, cfg=cfg)
+    import warnings
+    warnings.warn(
+        "pas_sample(solver, eps_fn, ...) is deprecated; migrate to "
+        "repro.api.Pipeline (Pipeline.from_spec(spec, eps_fn).sample) — see "
+        "README 'Migrating from the legacy API'",
+        DeprecationWarning, stacklevel=2)
+    from repro.engine.engine import _engine_for_solver  # deferred: engine imports core
+    return _engine_for_solver(solver).sample(eps_fn, x_t, params=params, cfg=cfg)
 
 
 def pas_sample_trajectory(

@@ -57,8 +57,8 @@ from repro.core.solvers import LinearMultistepSolver, Solver, SolverHist
 
 from repro.kernels import ops
 
-from .engine import (SamplingEngine, _CacheStats, _compiled_lookup, _fn_key,
-                     _lru_lookup, _scaled_coords, engine_for_solver,
+from .engine import (SamplingEngine, _CacheStats, _compiled_lookup,
+                     _engine_for_solver, _fn_key, _lru_lookup, _scaled_coords,
                      get_engine_for_spec)
 
 Array = jax.Array
@@ -97,7 +97,7 @@ class CalibrationEngine:
             if solver is None:
                 raise ValueError("CalibrationEngine needs a spec or a solver")
             sampling = sampling if sampling is not None else \
-                engine_for_solver(solver, dtype)
+                _engine_for_solver(solver, dtype)
             cfg = cfg if cfg is not None else PASConfig()
         self.spec = spec
         self.sampling = sampling

@@ -455,13 +455,26 @@ def get_engine_for_spec(spec) -> SamplingEngine:
                                           mesh=spec.mesh))
 
 
+def _warn_legacy(old: str, new: str) -> None:
+    import warnings
+    warnings.warn(
+        f"{old} is deprecated; migrate to {new} (see README "
+        f"'Migrating from the legacy API')",
+        DeprecationWarning, stacklevel=3)
+
+
 def get_engine(name: str, ts: np.ndarray,
                dtype: jnp.dtype = jnp.float32) -> SamplingEngine:
     """Engine for (solver name, schedule, dtype) — thin shim over the spec
     keying: the ad-hoc tuple is lifted to a canonical ``SamplerSpec`` (see
     ``repro.api.spec_from_schedule``), so legacy callers share cache entries
-    with spec-built pipelines.  Coefficient tables are bound exactly once
-    per key and every later lookup is a cache hit."""
+    with spec-built pipelines.
+
+    .. deprecated::
+        Build a ``SamplerSpec`` and call ``get_engine_for_spec(spec)`` (or
+        go through ``repro.api.Pipeline``, which owns the binding)."""
+    _warn_legacy("get_engine(name, ts, dtype)",
+                 "get_engine_for_spec(SamplerSpec(...))")
     from repro.api.spec import spec_from_schedule  # deferred: api builds on engine
     return get_engine_for_spec(spec_from_schedule(name, ts, dtype))
 
@@ -470,10 +483,23 @@ def engine_for_solver(solver: Solver,
                       dtype: jnp.dtype = jnp.float32) -> SamplingEngine:
     """Engine for an already-bound solver (shares the get_engine cache).
 
-    Custom solver objects whose name is not in the ``repro.api`` registry
-    are still served (the solver is already constructed — nothing to look
-    up); they key on the raw (name, schedule bytes, dtype) tuple instead.
+    .. deprecated::
+        Build a ``SamplerSpec`` and call ``get_engine_for_spec(spec)`` (or
+        go through ``repro.api.Pipeline``).  Custom solver objects whose
+        name is not in the ``repro.api`` registry are still served here
+        (the solver is already constructed — nothing to look up); they key
+        on the raw (name, schedule bytes, dtype) tuple instead.
     """
+    _warn_legacy("engine_for_solver(solver)",
+                 "get_engine_for_spec(SamplerSpec(...)) / Pipeline.from_spec")
+    return _engine_for_solver(solver, dtype)
+
+
+def _engine_for_solver(solver: Solver,
+                       dtype: jnp.dtype = jnp.float32) -> SamplingEngine:
+    """Internal, warning-free half of ``engine_for_solver`` (compat shims
+    and the calibration engine route here so legacy *public* calls warn
+    exactly once, at the caller's boundary)."""
     from repro.api.spec import spec_from_schedule  # deferred: api builds on engine
     try:
         key = spec_from_schedule(solver.name, solver.ts, dtype).engine_key

@@ -26,11 +26,23 @@ fill; ``--stream`` submits requests individually and reports per-request
 chunk arrival + latency percentiles).  ``--scheduler sync`` runs the legacy
 synchronous flush loop (bit-identical responses on the same seeds).
 
+Routing: any repeatable ``--pipeline KEY=SOLVER@NFE`` switches the launch
+onto the multi-lane ``PipelineRouter`` — one submit queue over a zoo of
+samplers sharing the launch schedule/mesh, requests routed by explicit lane
+key or deadline slack, ``interactive`` packing ahead of ``batch``.
+``--priority`` sets the generated request class (``mixed`` interleaves) and
+``--arrival`` staggers submissions: ``poisson`` generates a seeded stream
+at ``--rate``/``--duration``, ``trace`` replays a ``--trace-file`` CSV
+(``t_ms,seed,n_samples,priority,deadline_ms,pipeline``).  The report adds
+per-priority latency percentiles and per-lane flush counts.
+
   PYTHONPATH=src python -m repro.launch.serve --nfe 10 --solver ddim \
       [--t-min 0.002] [--t-max 80.0] [--max-batch 256] [--artifact-dir DIR] \
       [--calibrate-batch B] [--dp N] [--state-shard M | --mesh NxM] \
       [--scheduler {async,sync}] [--deadline-ms MS] [--stream] \
-      [--lower-only]
+      [--pipeline KEY=SOLVER@NFE ...] [--priority CLASS] \
+      [--arrival {upfront,poisson,trace}] [--rate R] [--duration S] \
+      [--trace-file CSV] [--slack-ms-per-eval MS] [--lower-only]
 """
 from __future__ import annotations
 
@@ -41,10 +53,13 @@ import re
 import jax
 import jax.numpy as jnp
 
-from repro.api import MeshSpec, PASArtifact, Pipeline
+# the serving types resolve through repro.api too (lazily, PEP 562): the
+# public surface is the only import boundary launchers use
+from repro.api import (DiffusionServer, MeshSpec, PASArtifact, Pipeline,
+                       PipelineRouter, Request, ServeConfig, load_trace,
+                       poisson_arrivals, replay)
 from repro.core import PASConfig, two_mode_gmm
 from repro.engine import engine_cache_stats
-from repro.runtime import DiffusionServer, Request, ServeConfig
 
 
 def parse_mesh(value: str) -> tuple[int, int]:
@@ -64,6 +79,18 @@ def parse_mesh(value: str) -> tuple[int, int]:
         raise argparse.ArgumentTypeError(
             f"mesh axes must be >= 1, got dp={dp} state={state}")
     return dp, state
+
+
+def parse_pipeline(value: str) -> tuple[str, str, int]:
+    """Parse one ``--pipeline KEY=SOLVER@NFE`` lane spec."""
+    m = re.fullmatch(r"([\w.-]+)=([\w.-]+)@(\d+)", value.strip())
+    if not m:
+        raise argparse.ArgumentTypeError(
+            f"expected KEY=SOLVER@NFE (e.g. fast=ddim@5), got {value!r}")
+    key, solver, nfe = m.group(1), m.group(2), int(m.group(3))
+    if nfe < 1:
+        raise argparse.ArgumentTypeError(f"NFE must be >= 1, got {nfe}")
+    return key, solver, nfe
 
 
 def _oracle_eps(dim: int):
@@ -123,6 +150,83 @@ def _calibrated_pipeline(cfg: ServeConfig, eps_fn, dim: int,
     return pipe
 
 
+# traffic-module class deadlines: what upfront router requests default to
+# when --deadline-ms is not given (the slack router routes on these)
+_CLASS_DEADLINE_MS = {"interactive": 25.0, "batch": 250.0}
+
+
+def _router_requests(args) -> list[Request]:
+    """The upfront request list for router mode (--arrival upfront)."""
+    prios = (["interactive", "batch"] if args.priority == "mixed"
+             else [args.priority])
+    reqs = []
+    for i in range(args.requests):
+        prio = prios[i % len(prios)]
+        ddl = (args.deadline_ms if args.deadline_ms is not None
+               else _CLASS_DEADLINE_MS[prio])
+        reqs.append(Request(seed=i, n_samples=16, priority=prio,
+                            deadline_ms=ddl))
+    return reqs
+
+
+def _serve_router(args, cfg: ServeConfig, eps_fn, dim: int) -> None:
+    """Serve through a multi-lane ``PipelineRouter`` (any ``--pipeline``).
+
+    Every lane shares the launch schedule/mesh/PAS config; only
+    (solver, NFE) varies per ``KEY=SOLVER@NFE``.  Artifacts live per lane
+    under ``<artifact-dir>/<key>/`` — ``from_specs`` reloads the ones that
+    exist, ``calibrate_all`` fills in and persists the rest.
+    """
+    import dataclasses
+
+    base = cfg.to_spec()
+    specs = {key: dataclasses.replace(base, solver=solver, nfe=nfe)
+             for key, solver, nfe in args.pipelines}
+    router = PipelineRouter.from_specs(
+        specs, eps_fn, dim, artifact_dir=args.artifact_dir,
+        use_pas=not args.no_pas, cfg=cfg)
+    if not args.no_pas:
+        router.calibrate_all(jax.random.key(0), batch=args.calibrate_batch,
+                             artifact_dir=args.artifact_dir)
+    print("router lanes: " + ", ".join(
+        f"{k}={p.spec.solver}@{p.spec.nfe} "
+        f"(est {router.lane_cost_ms(k):.0f}ms/row)"
+        for k, p in router.pipelines.items()))
+
+    try:
+        if args.arrival == "upfront":
+            handles = [router.submit(r) for r in _router_requests(args)]
+        else:
+            if args.arrival == "poisson":
+                frac = {"interactive": 1.0, "batch": 0.0,
+                        "mixed": 0.5}[args.priority]
+                arrivals = poisson_arrivals(args.rate, args.duration, seed=0,
+                                            interactive_fraction=frac)
+            else:
+                arrivals = load_trace(args.trace_file)
+            handles = [h for _, h in replay(arrivals, router.submit)]
+        router.drain(timeout=600)
+        stats = router.stats
+        for prio, lats in stats["latency_by_priority"].items():
+            if not lats:
+                continue
+            lat = sorted(1e3 * v for v in lats)
+            print(f"{prio}: {len(lat)} request(s) "
+                  f"p50={lat[len(lat) // 2]:.1f}ms "
+                  f"p95={lat[int(0.95 * (len(lat) - 1))]:.1f}ms")
+        print("lane flushes: " + ", ".join(
+            f"{k}={v} ({stats['lane_rows'][k]} rows)"
+            for k, v in stats["lane_batches"].items()))
+        print(f"served {stats['samples']} samples / {stats['requests']} "
+              f"requests in {stats['batches']} batches "
+              f"({stats['nfe_total']} evals), "
+              f"engine cache {engine_cache_stats()}")
+        assert all(h.done() for h in handles)
+    finally:
+        router.close()
+    print("OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="oracle", choices=["oracle", "diffusion"])
@@ -151,6 +255,30 @@ def main() -> None:
     ap.add_argument("--mesh", default=None, metavar="DPxSTATE",
                     type=parse_mesh,
                     help="shorthand setting both axes, e.g. --mesh 8x1")
+    ap.add_argument("--pipeline", action="append", dest="pipelines",
+                    metavar="KEY=SOLVER@NFE", type=parse_pipeline,
+                    help="add one router lane (repeatable); any --pipeline "
+                         "serves through the multi-lane PipelineRouter "
+                         "instead of the single-pipeline server")
+    ap.add_argument("--priority", default="batch",
+                    choices=["interactive", "batch", "mixed"],
+                    help="priority class for generated requests (mixed: "
+                         "Poisson coin per request / alternating upfront)")
+    ap.add_argument("--arrival", default="upfront",
+                    choices=["upfront", "poisson", "trace"],
+                    help="upfront: submit --requests at once; poisson: "
+                         "seeded Poisson stream (--rate/--duration); trace: "
+                         "replay a CSV schedule (--trace-file)")
+    ap.add_argument("--rate", type=float, default=60.0,
+                    help="offered load for --arrival poisson, requests/s")
+    ap.add_argument("--duration", type=float, default=1.0,
+                    help="stream length for --arrival poisson, seconds")
+    ap.add_argument("--trace-file", default=None,
+                    help="CSV schedule for --arrival trace "
+                         "(t_ms,seed,n_samples,priority,deadline_ms,pipeline)")
+    ap.add_argument("--slack-ms-per-eval", type=float, default=1.0,
+                    help="router cost model: ms of deadline slack one model "
+                         "eval is worth (deadline-slack lane routing)")
     ap.add_argument("--scheduler", default="async",
                     choices=["async", "sync"],
                     help="async: deadline-aware continuous-batching "
@@ -170,6 +298,15 @@ def main() -> None:
     if args.stream and args.scheduler != "async":
         ap.error("--stream serves through the request queue; it requires "
                  "--scheduler async")
+    if args.pipelines and args.scheduler != "async":
+        ap.error("--pipeline routes through the async scheduler; it cannot "
+                 "combine with --scheduler sync")
+    if args.arrival == "trace" and not args.trace_file:
+        ap.error("--arrival trace requires --trace-file")
+    if args.pipelines is not None:
+        keys = [k for k, _, _ in args.pipelines]
+        if len(set(keys)) != len(keys):
+            ap.error(f"duplicate --pipeline keys: {keys}")
     if args.mesh is not None:
         args.dp, args.state_shard = args.mesh
     mesh = MeshSpec(dp=args.dp, state=args.state_shard)
@@ -186,7 +323,8 @@ def main() -> None:
                       pas=PASConfig(val_fraction=0.25, n_sgd_iters=150),
                       mesh=mesh,
                       scheduler=args.scheduler,
-                      deadline_ms=args.deadline_ms)
+                      deadline_ms=args.deadline_ms,
+                      slack_ms_per_eval=args.slack_ms_per_eval)
 
     if args.lower_only:
         # the serve dry-run: compile (never run) the partitioned program —
@@ -197,6 +335,10 @@ def main() -> None:
         info = pipe.engine.aot_compile(eps_fn, batch=batch, dim=dim)
         print(json.dumps(info, indent=1))
         print("LOWER_OK")
+        return
+
+    if args.pipelines:
+        _serve_router(args, cfg, eps_fn, dim)
         return
 
     if args.no_pas:

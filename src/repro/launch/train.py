@@ -18,7 +18,7 @@ from repro import models
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.data.pipeline import Prefetcher, TokenStream
 from repro.optim import AdamW, warmup_cosine
-from repro.runtime import TrainLoopConfig, run_train_loop
+from repro.api import TrainLoopConfig, run_train_loop
 
 
 def main() -> None:

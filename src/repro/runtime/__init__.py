@@ -1,7 +1,11 @@
-from .scheduler import ServeHandle, ServeScheduler
+from .router import PipelineRouter
+from .scheduler import PRIORITIES, ServeHandle, ServeScheduler
 from .serve_loop import DiffusionServer, Request, ServeConfig
+from .traffic import (Arrival, load_trace, poisson_arrivals, replay,
+                      save_trace)
 from .train_loop import StragglerMonitor, TrainLoopConfig, run_train_loop
 
-__all__ = ["DiffusionServer", "Request", "ServeConfig", "ServeHandle",
-           "ServeScheduler", "StragglerMonitor", "TrainLoopConfig",
-           "run_train_loop"]
+__all__ = ["Arrival", "DiffusionServer", "PRIORITIES", "PipelineRouter",
+           "Request", "ServeConfig", "ServeHandle", "ServeScheduler",
+           "StragglerMonitor", "TrainLoopConfig", "load_trace",
+           "poisson_arrivals", "replay", "run_train_loop", "save_trace"]

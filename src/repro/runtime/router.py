@@ -1,0 +1,210 @@
+"""Multi-pipeline SLA router: one queue, many samplers, shared devices.
+
+PAS's product promise is a *zoo* of cheap calibrated samplers — each
+``(solver, NFE)`` spec carries its own ~10-float artifact (paper §3.5), so
+one deployment can hold a teacher-grade pipeline next to several corrected
+low-NFE ones at near-zero marginal cost.  ``PipelineRouter`` turns that
+into a serving feature (the USF "solver searching" framing as
+infrastructure): a single submit queue routes every request onto one lane
+of a pipeline zoo, the lanes share the device (one scheduler thread, one
+``max_in_flight`` back-pressure window), and each lane keeps its own batch
+budget so a cheap interactive sampler is never starved by a bulk lane's
+backlog.
+
+Routing, per request:
+
+* **explicit** — ``Request.pipeline`` (or ``submit(pipeline=...)``) names a
+  lane key directly;
+* **deadline slack** (``route_by="slack"``, default) — a request with a
+  tight deadline lands on the cheapest lane whose estimated cost fits the
+  slack (tight deadline ⇒ low-NFE PAS pipeline); a request with no
+  deadline, or slack enough for anything, gets the most expensive
+  (teacher-grade) lane.  The cost model is deliberately simple and
+  deterministic: ``engine.nfe * cfg.slack_ms_per_eval``.
+
+Priorities ride the underlying scheduler: ``interactive`` chunks pack ahead
+of ``batch`` backfill when any lane's flush forms (see
+``runtime/scheduler.py``), and per-class latency traces land in
+``stats["latency_by_priority"]`` — the curves ``benchmarks/serve_router.py``
+records under Poisson/trace load.
+
+    router = PipelineRouter({"fast": fast_pipe, "hq": hq_pipe},
+                            budgets={"fast": 32, "hq": 256})
+    h = router.submit(Request(seed=0, n_samples=4, deadline_ms=25,
+                              priority="interactive"))   # -> "fast" lane
+    router.submit(Request(seed=1, n_samples=256))        # -> "hq" lane
+    router.drain()
+
+A single-lane router with one priority class packs exactly like the PR-5
+FIFO scheduler — bit-identical flushes (tests/test_router.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Mapping, Optional, Union
+
+import jax
+
+from .scheduler import ServeScheduler, _Lane
+from .serve_loop import ServeConfig
+
+__all__ = ["PipelineRouter"]
+
+Array = jax.Array
+
+PipelineZoo = Union[Mapping[str, object], Iterable[tuple[str, object]]]
+
+
+class PipelineRouter(ServeScheduler):
+    """One submit queue over a zoo of ``Pipeline`` lanes with shared devices.
+
+    ``pipelines`` maps lane key -> ``repro.api.Pipeline`` (insertion order
+    is the drain/flush order).  ``budgets`` overrides the per-lane
+    ``max_batch`` (default ``cfg.max_batch`` for every lane); ``use_pas``
+    may be a bool or a per-key mapping.  Everything else — deadlines,
+    priorities, in-flight depth, routing policy — comes from the
+    ``ServeConfig`` (its ``nfe``/``solver`` scalar fields are ignored here:
+    each lane's pipeline already pins its own spec).
+    """
+
+    def __init__(self, pipelines: PipelineZoo, *,
+                 cfg: Optional[ServeConfig] = None,
+                 budgets: Optional[Mapping[str, int]] = None,
+                 use_pas: Union[bool, Mapping[str, bool]] = True,
+                 run_batch: Optional[Callable[[str, Array], Array]] = None,
+                 stats: Optional[dict] = None):
+        cfg = cfg if cfg is not None else ServeConfig()
+        self.cfg = cfg
+        items = (list(pipelines.items()) if isinstance(pipelines, Mapping)
+                 else list(pipelines))
+        if not items:
+            raise ValueError("PipelineRouter needs at least one pipeline")
+        budgets = dict(budgets or {})
+        lanes = []
+        for key, pipe in items:
+            pas = use_pas if isinstance(use_pas, bool) else use_pas.get(key,
+                                                                        True)
+            budget = int(budgets.pop(key, cfg.max_batch))
+            if budget < 1:
+                raise ValueError(f"lane {key!r} budget must be >= 1, "
+                                 f"got {budget}")
+            runner = (self._default_run_batch(pipe, pas) if run_batch is None
+                      else _bind_lane_runner(run_batch, key))
+            lanes.append(_Lane(key=str(key), pipeline=pipe, max_batch=budget,
+                               run_batch=runner))
+        if budgets:
+            raise ValueError(
+                f"budgets for unknown lanes: {sorted(budgets)} "
+                f"(zoo: {[ln.key for ln in lanes]})")
+        # slack routing ranks lanes by compute cost (total model evals per
+        # row); ties keep zoo order so routing stays deterministic
+        self._by_cost = sorted(
+            lanes, key=lambda ln: (ln.pipeline.engine.nfe, ln.key))
+        self.pipeline = lanes[0].pipeline    # base-class compat: "a" pipeline
+        self.max_batch = lanes[0].max_batch
+        self._init_core(lanes, deadline_ms=cfg.deadline_ms,
+                        max_in_flight=cfg.max_in_flight, stats=stats,
+                        default_priority=cfg.default_priority)
+
+    # -- construction helpers ------------------------------------------------
+
+    @classmethod
+    def from_specs(cls, specs, eps_fn, dim: int, *,
+                   keys: Optional[Iterable[str]] = None,
+                   artifact_dir=None, **kw) -> "PipelineRouter":
+        """Build the zoo from ``SamplerSpec``s against one eps model.
+
+        ``specs`` is a list of specs (lane keys default to
+        ``"{solver}@{nfe}"``) or a mapping key -> spec.  With
+        ``artifact_dir``, each lane whose ``<artifact_dir>/<key>/``
+        contains a matching ``PASArtifact`` loads its calibrated ~10
+        floats (specs are compared modulo placement, like
+        ``Pipeline.load``); lanes without one serve uncorrected until
+        ``.calibrate_all`` or a later ``set_params``.
+        """
+        from pathlib import Path
+
+        from repro.api.artifact import PASArtifact
+        from repro.api.pipeline import Pipeline
+
+        if isinstance(specs, Mapping):
+            items = list(specs.items())
+        else:
+            specs = list(specs)
+            if keys is None:
+                keys = [f"{s.solver}@{s.nfe}" for s in specs]
+            items = list(zip(keys, specs))
+        if len({k for k, _ in items}) != len(items):
+            raise ValueError(f"duplicate lane keys: {[k for k, _ in items]}")
+        zoo = {}
+        for key, spec in items:
+            lane_dir = Path(artifact_dir) / key if artifact_dir else None
+            if lane_dir is not None and PASArtifact.exists(lane_dir):
+                zoo[key] = Pipeline.load(lane_dir, eps_fn, dim=dim,
+                                         expected_spec=spec, mesh=spec.mesh)
+            else:
+                zoo[key] = Pipeline.from_spec(spec, eps_fn, dim=dim)
+        return cls(zoo, **kw)
+
+    def calibrate_all(self, key: Array, batch: int = 256,
+                      artifact_dir=None) -> "PipelineRouter":
+        """Calibrate every uncalibrated lane (and persist per-lane artifacts
+        under ``<artifact_dir>/<lane_key>/`` when a directory is given)."""
+        from pathlib import Path
+        for name, pipe in self.pipelines.items():
+            if not pipe.calibrated:
+                pipe.calibrate(key=key, batch=batch)
+            if artifact_dir is not None:
+                pipe.save(Path(artifact_dir) / name)
+        return self
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def pipelines(self) -> dict[str, object]:
+        """Lane key -> ``Pipeline``, in zoo order."""
+        return {k: ln.pipeline for k, ln in self._lanes.items()}
+
+    @property
+    def lane_keys(self) -> list[str]:
+        return list(self._lanes)
+
+    def lane_cost_ms(self, key: str) -> float:
+        """The slack router's estimated per-row cost for one lane."""
+        return (self._lanes[key].pipeline.engine.nfe
+                * self.cfg.slack_ms_per_eval)
+
+    # -- routing -------------------------------------------------------------
+
+    def _route(self, request, pipeline_key: Optional[str],
+               deadline_ms: Optional[float], priority: str) -> _Lane:
+        if pipeline_key is not None:
+            try:
+                return self._lanes[pipeline_key]
+            except KeyError:
+                raise ValueError(
+                    f"unknown pipeline {pipeline_key!r}; zoo: "
+                    f"{self.lane_keys}") from None
+        if self.cfg.route_by == "explicit":
+            raise ValueError(
+                "route_by='explicit' requires Request.pipeline (or "
+                f"submit(pipeline=...)); zoo: {self.lane_keys}")
+        # deadline-slack routing: the most expensive lane whose estimated
+        # cost fits the request's slack; no deadline means teacher-grade
+        if deadline_ms is None:
+            return self._by_cost[-1]
+        for lane in reversed(self._by_cost):
+            if (lane.pipeline.engine.nfe * self.cfg.slack_ms_per_eval
+                    <= deadline_ms):
+                return lane
+        return self._by_cost[0]              # nothing fits: cheapest lane
+
+    def serve(self, requests: list) -> list:
+        """Sync convenience: submit everything, drain, results in order."""
+        handles = [self.submit(r) for r in requests]
+        self.drain()
+        return [h.result() for h in handles]
+
+
+def _bind_lane_runner(run_batch: Callable[[str, Array], Array],
+                      key: str) -> Callable[[Array], Array]:
+    return lambda x_t: run_batch(key, x_t)

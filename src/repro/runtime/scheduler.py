@@ -26,12 +26,28 @@ samples — tests/test_serve_scheduler.py):
   and every finished chunk is pushed to the handle as its flush retires, so
   a large request yields rows *before* its last chunk lands
   (``handle.chunks()``), while ``handle.result()`` blocks for the full
-  response.
+  response;
+* **priority classes** — each request is ``interactive`` or ``batch``
+  (``Request.priority``, defaulting to ``ServeConfig.default_priority``).
+  When a flush forms, interactive chunks pack first and batch chunks
+  backfill the remaining budget; within a class, admit order is preserved.
+  A stream where every request shares one class therefore packs exactly
+  like the PR-5 FIFO scheduler — bit-identical flushes (asserted in
+  tests/test_router.py);
+* **lanes (multi-pipeline flush selection)** — the scheduler core runs any
+  number of *lanes*, each one ``(pipeline, max_batch budget, flush
+  executor)``, behind the single submit queue with shared device ownership
+  (one ``max_in_flight`` back-pressure window across all lanes, one
+  scheduler thread).  ``ServeScheduler`` itself is the single-lane facade;
+  ``runtime.router.PipelineRouter`` routes requests across a zoo of lanes
+  by explicit spec key or deadline slack.
 
 Stats ride the same dict the sync loop uses (``requests``/``samples``/
 ``batches``/``nfe_total``/``padded_samples``) plus per-trigger flush
-counters (``flushes_budget``/``flushes_deadline``/``flushes_drain``) and a
-per-request latency trace under ``latency_s``.
+counters (``flushes_budget``/``flushes_deadline``/``flushes_drain``), a
+per-request latency trace under ``latency_s``, per-priority traces under
+``latency_by_priority`` and per-lane flush counts under ``lane_batches``/
+``lane_rows``.
 """
 from __future__ import annotations
 
@@ -43,14 +59,25 @@ import time
 from typing import Callable, Iterator, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ServeHandle", "ServeScheduler"]
+__all__ = ["PRIORITIES", "ServeHandle", "ServeScheduler"]
 
 Array = jax.Array
 
 _UNSET = object()
+
+#: Priority classes, highest first: ``interactive`` requests pre-empt
+#: ``batch`` backfill when a flush forms.
+PRIORITIES = ("interactive", "batch")
+
+
+def _priority_rank(name: str) -> int:
+    try:
+        return PRIORITIES.index(name)
+    except ValueError:
+        raise ValueError(
+            f"priority must be one of {PRIORITIES}, got {name!r}") from None
 
 
 class ServeHandle:
@@ -65,9 +92,12 @@ class ServeHandle:
 
     _DONE = object()
 
-    def __init__(self, n_samples: int, dim: int, dtype, submit_t: float):
+    def __init__(self, n_samples: int, dim: int, dtype, submit_t: float,
+                 priority: str = "batch", lane: str = "default"):
         self.n_samples = int(n_samples)
         self.submit_t = submit_t
+        self.priority = priority
+        self.lane = lane                  # which pipeline served this request
         self.complete_t: Optional[float] = None
         self._dim = dim
         self._dtype = np.dtype(dtype)
@@ -157,6 +187,27 @@ class _Chunk:
     rows: Array
     n: int
     deadline: Optional[float]        # absolute perf_counter time, None = never
+    priority: int = 1                # rank into PRIORITIES; lower packs first
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One pipeline behind the shared queue: its budget and pending chunks.
+
+    ``run_batch`` is the lane's flush executor: it receives the fully
+    staged (concatenated, DP-padded) flush buffer and must return the
+    device result *without blocking* (``Pipeline.sample_async``).
+    """
+    key: str
+    pipeline: object
+    max_batch: int
+    run_batch: Callable[[Array], Array]
+    pending: list[_Chunk] = dataclasses.field(default_factory=list)
+    pending_rows: int = 0
+
+    def min_deadline(self) -> Optional[float]:
+        return min((c.deadline for c in self.pending
+                    if c.deadline is not None), default=None)
 
 
 @dataclasses.dataclass
@@ -175,17 +226,43 @@ class ServeScheduler:
     result *without blocking* (``Pipeline.sample_async`` / the server's
     ``_run_batch``).  ``DiffusionServer`` passes a late-bound hook so its
     existing ``_run_batch`` monkeypatch surface keeps working.
+
+    The internals are lane-based (see the module docstring): this class is
+    the single-lane facade, ``runtime.router.PipelineRouter`` the
+    multi-lane one.  Both share the thread, the submit queue, the
+    priority-aware flush selection, and the in-flight window.
     """
 
     def __init__(self, pipeline, *, max_batch: int, use_pas: bool = True,
                  deadline_ms: Optional[float] = None, max_in_flight: int = 2,
                  run_batch: Optional[Callable[[Array], Array]] = None,
-                 stats: Optional[dict] = None):
-        if max_in_flight < 1:
-            raise ValueError(f"max_in_flight must be >= 1, got {max_in_flight}")
+                 stats: Optional[dict] = None,
+                 default_priority: str = "batch"):
         self.pipeline = pipeline
         self.max_batch = int(max_batch)
+        lane = _Lane(key="default", pipeline=pipeline,
+                     max_batch=self.max_batch,
+                     run_batch=(run_batch if run_batch is not None
+                                else self._default_run_batch(pipeline,
+                                                             use_pas)))
+        self._init_core([lane], deadline_ms=deadline_ms,
+                        max_in_flight=max_in_flight, stats=stats,
+                        default_priority=default_priority)
+
+    def _init_core(self, lanes: list[_Lane], *, deadline_ms, max_in_flight,
+                   stats, default_priority) -> None:
+        """Shared constructor tail: stats, queue, and the scheduler thread."""
+        if max_in_flight < 1:
+            raise ValueError(f"max_in_flight must be >= 1, got {max_in_flight}")
+        if not lanes:
+            raise ValueError("scheduler needs at least one lane")
+        if len({ln.key for ln in lanes}) != len(lanes):
+            raise ValueError(
+                f"duplicate lane keys: {[ln.key for ln in lanes]}")
+        _priority_rank(default_priority)     # validate early
+        self._lanes: dict[str, _Lane] = {ln.key: ln for ln in lanes}
         self.default_deadline_ms = deadline_ms
+        self.default_priority = default_priority
         self.max_in_flight = int(max_in_flight)
         self.stats = stats if stats is not None else {}
         for k in ("requests", "samples", "batches", "nfe_total",
@@ -193,33 +270,53 @@ class ServeScheduler:
                   "flushes_drain"):
             self.stats.setdefault(k, 0)
         self.stats.setdefault("latency_s", [])
-        self._run_batch = (run_batch if run_batch is not None
-                           else self._default_run_batch(use_pas))
+        self.stats.setdefault("latency_by_priority",
+                              {p: [] for p in PRIORITIES})
+        self.stats.setdefault("lane_batches", {ln.key: 0 for ln in lanes})
+        self.stats.setdefault("lane_rows", {ln.key: 0 for ln in lanes})
         self._lock = threading.Lock()        # guards stats against readers
         self._queue: queue.SimpleQueue = queue.SimpleQueue()
-        self._pending: list[_Chunk] = []
-        self._pending_rows = 0
         self._in_flight: collections.deque[_Flight] = collections.deque()
         self._closed = False
         self._thread = threading.Thread(
             target=self._run, name="serve-scheduler", daemon=True)
         self._thread.start()
 
-    def _default_run_batch(self, use_pas: bool) -> Callable[[Array], Array]:
+    @staticmethod
+    def _default_run_batch(pipeline, use_pas: bool) -> Callable[[Array], Array]:
         def run(x_t: Array) -> Array:
-            y, _ = self.pipeline.sample_async(x_t, use_pas=use_pas,
-                                              donate_x=True)
+            y, _ = pipeline.sample_async(x_t, use_pas=use_pas, donate_x=True)
             return y
         return run
 
+    # -- routing (overridden by PipelineRouter) ------------------------------
+
+    def _route(self, request, pipeline_key: Optional[str],
+               deadline_ms: Optional[float], priority: str) -> _Lane:
+        """Pick the lane serving ``request``; the single-lane base accepts
+        only its own key (or none)."""
+        lane = next(iter(self._lanes.values()))
+        if pipeline_key is not None and pipeline_key != lane.key:
+            raise ValueError(
+                f"unknown pipeline {pipeline_key!r}; this scheduler serves "
+                f"only {lane.key!r} (use runtime.router.PipelineRouter for a "
+                f"multi-pipeline zoo)")
+        return lane
+
     # -- client API ----------------------------------------------------------
 
-    def submit(self, request, deadline_ms=_UNSET) -> ServeHandle:
+    def submit(self, request, deadline_ms=_UNSET, *,
+               pipeline: Optional[str] = None,
+               priority: Optional[str] = None) -> ServeHandle:
         """Enqueue one request; returns its ``ServeHandle`` immediately.
 
         ``deadline_ms`` bounds how long the request may wait for its batch
         to fill (per-call > ``request.deadline_ms`` > the scheduler
         default; ``None`` means it waits for the budget or a drain).
+        ``priority`` resolves the same way (per-call > ``request.priority``
+        > the scheduler default) and decides packing order when a flush
+        forms; ``pipeline`` (per-call > ``request.pipeline``) pins the
+        request to one lane by key instead of letting the router choose.
         """
         if self._closed:
             raise RuntimeError("scheduler is closed")
@@ -227,18 +324,28 @@ class ServeScheduler:
             deadline_ms = getattr(request, "deadline_ms", None)
             if deadline_ms is None:
                 deadline_ms = self.default_deadline_ms
+        if priority is None:
+            priority = getattr(request, "priority", None)
+            if priority is None:
+                priority = self.default_priority
+        rank = _priority_rank(priority)
+        if pipeline is None:
+            pipeline = getattr(request, "pipeline", None)
+        lane = self._route(request, pipeline, deadline_ms, priority)
         now = time.perf_counter()
-        handle = ServeHandle(request.n_samples, self.pipeline.dim,
-                             self.pipeline.spec.dtype, submit_t=now)
+        handle = ServeHandle(request.n_samples, lane.pipeline.dim,
+                             lane.pipeline.spec.dtype, submit_t=now,
+                             priority=priority, lane=lane.key)
         with self._lock:
             self.stats["requests"] += 1
             self.stats["samples"] += handle.n_samples
         if handle.n_samples == 0:
             with self._lock:
                 self.stats["latency_s"].append(0.0)
+                self.stats["latency_by_priority"][priority].append(0.0)
             return handle                    # completed in the constructor
         deadline = None if deadline_ms is None else now + deadline_ms / 1e3
-        self._queue.put(("req", request, handle, deadline))
+        self._queue.put(("req", lane, request, handle, deadline, rank))
         return handle
 
     def drain(self, timeout: Optional[float] = None) -> None:
@@ -270,9 +377,10 @@ class ServeScheduler:
             kind = item[0]
             try:
                 if kind == "req":
-                    self._admit(item[1], item[2], item[3])
+                    self._admit(*item[1:])
                 else:                                   # drain / stop
-                    self._flush("drain")
+                    for lane in self._lanes.values():
+                        self._flush(lane, "drain")
                     self._retire(block=True, drain=True)
             except BaseException as exc:                # noqa: BLE001
                 self._abort(exc)
@@ -296,73 +404,107 @@ class ServeScheduler:
         except queue.Empty:
             pass
         timeout = 0.05
-        if self._pending:
-            deadline = min((c.deadline for c in self._pending
-                            if c.deadline is not None), default=None)
-            if deadline is not None:
-                wait = deadline - time.perf_counter()
-                if wait <= 0:
-                    self._flush("deadline")
-                    return None
-                timeout = min(wait, timeout)
-        elif self._in_flight:
+        urgent: Optional[_Lane] = None
+        urgent_d: Optional[float] = None
+        any_pending = False
+        for lane in self._lanes.values():
+            if not lane.pending:
+                continue
+            any_pending = True
+            d = lane.min_deadline()
+            if d is not None and (urgent_d is None or d < urgent_d):
+                urgent, urgent_d = lane, d
+        if urgent is not None:
+            wait = urgent_d - time.perf_counter()
+            if wait <= 0:
+                self._flush(urgent, "deadline")
+                return None
+            timeout = min(wait, timeout)
+        elif not any_pending and self._in_flight:
             timeout = 0.005          # re-poll readiness of in-flight flushes
         try:
             return self._queue.get(timeout=timeout)
         except queue.Empty:
             return None
 
-    def _admit(self, request, handle: ServeHandle,
-               deadline: Optional[float]) -> None:
+    def _admit(self, lane: _Lane, request, handle: ServeHandle,
+               deadline: Optional[float], priority: int) -> None:
         """Stage a request's prior rows and pack them into pending chunks.
 
-        Packing reproduces the sync loop's composition exactly: a request
-        within budget stays whole (flush first if it would overflow); an
+        Packing reproduces the sync loop's composition exactly when every
+        request shares one priority class: a request within budget stays
+        whole (the budget flush fires first when it would overflow); an
         oversized request is cut into budget-sized chunks, each flushing as
         it fills, with the final partial chunk left pending so later
         requests pack into the same batch.  Any failure fails this handle —
         a consumer blocked on it must never hang.
         """
         try:
-            x_t = self.pipeline.prior(jax.random.key(request.seed),
+            x_t = lane.pipeline.prior(jax.random.key(request.seed),
                                       handle.n_samples)
-            budget = self.max_batch
+            budget = lane.max_batch
             for off in range(0, handle.n_samples, budget):
                 rows = (x_t if handle.n_samples <= budget
                         else x_t[off:off + budget])
-                n = int(rows.shape[0])
-                if self._pending_rows + n > budget:
-                    self._flush("budget")
-                self._pending.append(_Chunk(handle, rows, n, deadline))
-                self._pending_rows += n
-                if self._pending_rows >= budget:
-                    self._flush("budget")
+                lane.pending.append(_Chunk(handle, rows, int(rows.shape[0]),
+                                           deadline, priority))
+                lane.pending_rows += int(rows.shape[0])
+                while lane.pending_rows >= budget:
+                    self._flush(lane, "budget")
         except BaseException as exc:
             handle._fail(exc)              # no-op if a flush failed it first
             raise
 
-    def _flush(self, reason: str) -> None:
-        """Stage + dispatch one batch; never blocks on device compute.
+    def _select(self, lane: _Lane) -> tuple[list[_Chunk], int]:
+        """Pick the chunks forming this flush: interactive pre-empts batch.
+
+        Chunks are ordered by (priority class, admit order) — interactive
+        first, batch backfilling the remaining budget — and taken greedily
+        until the first chunk that does not fit (never skipping past a
+        blocked chunk, so composition is deterministic).  With a single
+        priority class in play the order degenerates to admit order and the
+        selection takes everything pending ≤ budget: exactly the PR-5 FIFO
+        composition.
+        """
+        ordered = sorted(lane.pending, key=lambda c: c.priority)  # stable
+        take: list[_Chunk] = []
+        rows = 0
+        for c in ordered:
+            if rows + c.n > lane.max_batch:
+                break
+            take.append(c)
+            rows += c.n
+        return take, rows
+
+    def _flush(self, lane: _Lane, reason: str) -> None:
+        """Stage + dispatch one batch on ``lane``; never blocks on compute.
 
         A staging/dispatch failure fails every handle riding this flush
         (then re-raises for ``_abort``) — their consumers must never hang.
         """
-        if not self._pending:
+        if not lane.pending:
             return
-        chunks, self._pending = self._pending, []
-        self._pending_rows = 0
+        chunks, n_rows = self._select(lane)
+        taken = set(map(id, chunks))
+        lane.pending = [c for c in lane.pending if id(c) not in taken]
+        lane.pending_rows -= n_rows
         try:
             # host staging: concatenate + DP-pad into a fresh flush buffer
             # (the only buffer the executor may donate — in-flight flushes
             # each own their previously staged buffer, so donation never
-            # aliases one)
+            # aliases one).  Multi-chunk batches concatenate in numpy:
+            # chunk compositions vary per flush, and an eager device
+            # concatenate would XLA-compile every distinct composition on
+            # this thread, stalling the queue for ~100ms apiece under mixed
+            # load — host memcpy of staged rows costs microseconds and is
+            # bit-identical
             x_t = (chunks[0].rows if len(chunks) == 1
-                   else jnp.concatenate([c.rows for c in chunks], axis=0))
-            n_rows = int(x_t.shape[0])
-            x_t, pad = self.pipeline.mesh_spec.pad_rows(x_t)
+                   else np.concatenate([np.asarray(c.rows) for c in chunks],
+                                       axis=0))
+            x_t, pad = lane.pipeline.mesh_spec.pad_rows(x_t)
             if len(self._in_flight) >= self.max_in_flight:
                 self._retire(block=True)   # back-pressure: oldest flush lands
-            y = self._run_batch(x_t)       # async dispatch: returns the future
+            y = lane.run_batch(x_t)        # async dispatch: returns the future
         except BaseException as exc:
             for c in chunks:
                 c.handle._fail(exc)
@@ -370,15 +512,20 @@ class ServeScheduler:
         self._in_flight.append(_Flight(y, chunks, n_rows))
         with self._lock:
             self.stats["batches"] += 1
-            self.stats["nfe_total"] += (n_rows + pad) * self.pipeline.engine.nfe
+            self.stats["nfe_total"] += (n_rows + pad) * lane.pipeline.engine.nfe
             self.stats["padded_samples"] += pad
             self.stats[f"flushes_{reason}"] += 1
+            self.stats["lane_batches"][lane.key] += 1
+            self.stats["lane_rows"][lane.key] += n_rows
 
     def _retire(self, block: bool, drain: bool = False) -> None:
         """Read back finished flushes and scatter rows to their handles."""
         while self._in_flight:
             fl = self._in_flight[0]
-            if not (block or fl.y.is_ready()):
+            # custom executors may return host arrays (no readiness probe):
+            # anything without is_ready() is by definition already ready
+            ready = getattr(fl.y, "is_ready", None)
+            if not (block or ready is None or ready()):
                 return
             self._in_flight.popleft()
             try:
@@ -394,15 +541,18 @@ class ServeScheduler:
                 if c.handle.done():
                     with self._lock:
                         self.stats["latency_s"].append(c.handle.latency_s)
+                        self.stats["latency_by_priority"][
+                            c.handle.priority].append(c.handle.latency_s)
             if not drain:                 # keep at most one blocking read
                 block = False
 
     def _abort(self, exc: BaseException) -> None:
         """Fail every outstanding handle so no consumer blocks forever."""
-        for c in self._pending:
-            c.handle._fail(exc)
-        self._pending = []
-        self._pending_rows = 0
+        for lane in self._lanes.values():
+            for c in lane.pending:
+                c.handle._fail(exc)
+            lane.pending = []
+            lane.pending_rows = 0
         while self._in_flight:
             fl = self._in_flight.popleft()
             for c in fl.chunks:

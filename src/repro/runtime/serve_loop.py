@@ -49,6 +49,9 @@ class Request:
     seed: int
     n_samples: int
     deadline_ms: Optional[float] = None   # per-request batching slack bound
+    priority: Optional[str] = None        # "interactive" | "batch" (None =
+                                          # ServeConfig.default_priority)
+    pipeline: Optional[str] = None        # explicit lane key for the router
 
 
 @dataclasses.dataclass
@@ -74,6 +77,11 @@ class ServeConfig:
     scheduler: str = "async"              # "async" (ServeScheduler) | "sync"
     deadline_ms: Optional[float] = None   # default batching slack, ms
     max_in_flight: int = 2                # double-buffered flush depth
+    # routing fields (the multi-pipeline PipelineRouter reads these; the
+    # single-pipeline scheduler only uses default_priority for packing)
+    default_priority: str = "batch"       # class for Request.priority=None
+    route_by: str = "slack"               # "slack" | "explicit" lane routing
+    slack_ms_per_eval: float = 1.0        # deadline-slack cost model, ms/eval
 
     def __post_init__(self):
         if self.scheduler not in ("async", "sync"):
@@ -82,6 +90,18 @@ class ServeConfig:
         if self.max_in_flight < 1:
             raise ValueError(
                 f"max_in_flight must be >= 1, got {self.max_in_flight}")
+        from .scheduler import PRIORITIES
+        if self.default_priority not in PRIORITIES:
+            raise ValueError(
+                f"default_priority must be one of {PRIORITIES}, got "
+                f"{self.default_priority!r}")
+        if self.route_by not in ("slack", "explicit"):
+            raise ValueError(
+                f"route_by must be 'slack' or 'explicit', got "
+                f"{self.route_by!r}")
+        if self.slack_ms_per_eval <= 0:
+            raise ValueError(
+                f"slack_ms_per_eval must be > 0, got {self.slack_ms_per_eval}")
 
     def to_spec(self) -> SamplerSpec:
         """The declarative sampler description this config serves."""
@@ -185,7 +205,8 @@ class DiffusionServer:
                 deadline_ms=self.cfg.deadline_ms,
                 max_in_flight=self.cfg.max_in_flight,
                 run_batch=lambda x_t: self._run_batch(x_t),
-                stats=self.stats)
+                stats=self.stats,
+                default_priority=self.cfg.default_priority)
         return self._scheduler
 
     def submit(self, request: Request, **kw) -> ServeHandle:

@@ -1,0 +1,147 @@
+"""Trace-driven load: arrival processes for the serving stack.
+
+The continuous-batching payoff (PR 5) and the router's SLA story (PR 6)
+only show under *staggered* arrivals — a benchmark that submits its whole
+stream up-front measures throughput, never latency-under-load.  This module
+generates reproducible request arrival schedules:
+
+* ``poisson_arrivals`` — a seeded Poisson process at a given offered load
+  (requests/s), with a configurable interactive/batch priority mix: the
+  interactive class draws small sizes and a tight deadline, the batch class
+  large sizes and a loose one — the deadline is what the router's slack
+  policy routes on;
+* ``load_trace``/``save_trace`` — the same schedule as a CSV
+  (``t_ms,seed,n_samples,priority,deadline_ms,pipeline``) so recorded
+  production traces replay byte-for-byte;
+* ``replay`` — walls-clock playback: sleeps to each arrival instant and
+  submits through any ``submit(request)`` callable (``DiffusionServer`` or
+  ``PipelineRouter``), returning ``(arrival, handle)`` pairs for latency
+  accounting.
+
+Everything is host-side and jax-free; determinism comes from
+``numpy.random.default_rng(seed)``.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Iterable, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["Arrival", "load_trace", "poisson_arrivals", "replay",
+           "save_trace"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One scheduled request: when it arrives and what it asks for."""
+
+    t_s: float                            # offset from stream start, seconds
+    seed: int
+    n_samples: int
+    priority: str = "batch"
+    deadline_ms: Optional[float] = None
+    pipeline: Optional[str] = None        # explicit lane key (router only)
+
+    def request(self):
+        """The ``repro.api.Request`` this arrival submits."""
+        from .serve_loop import Request
+        return Request(seed=self.seed, n_samples=self.n_samples,
+                       deadline_ms=self.deadline_ms, priority=self.priority,
+                       pipeline=self.pipeline)
+
+
+def poisson_arrivals(rate_rps: float, duration_s: float, *, seed: int = 0,
+                     interactive_fraction: float = 0.5,
+                     interactive_sizes: Sequence[int] = (1, 2, 4, 8),
+                     batch_sizes: Sequence[int] = (16, 32, 64),
+                     interactive_deadline_ms: Optional[float] = 25.0,
+                     batch_deadline_ms: Optional[float] = 250.0,
+                     ) -> list[Arrival]:
+    """A seeded Poisson arrival schedule at ``rate_rps`` offered load.
+
+    Inter-arrival gaps are exponential(1/rate); each arrival flips a
+    (seeded) coin for its priority class and draws a size from that class's
+    palette.  Request seeds are the arrival index, so the *sample values*
+    of a schedule are stable across rates — only timing and mix change.
+    """
+    if rate_rps <= 0:
+        raise ValueError(f"rate_rps must be > 0, got {rate_rps}")
+    if not 0.0 <= interactive_fraction <= 1.0:
+        raise ValueError(f"interactive_fraction must be in [0, 1], got "
+                         f"{interactive_fraction}")
+    rng = np.random.default_rng(seed)
+    out: list[Arrival] = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(1.0 / rate_rps))
+        if t >= duration_s:
+            return out
+        if rng.random() < interactive_fraction:
+            prio, sizes, ddl = ("interactive", interactive_sizes,
+                                interactive_deadline_ms)
+        else:
+            prio, sizes, ddl = "batch", batch_sizes, batch_deadline_ms
+        out.append(Arrival(t_s=t, seed=len(out),
+                           n_samples=int(sizes[rng.integers(len(sizes))]),
+                           priority=prio, deadline_ms=ddl))
+
+
+_FIELDS = ("t_ms", "seed", "n_samples", "priority", "deadline_ms", "pipeline")
+
+
+def save_trace(path, arrivals: Iterable[Arrival]) -> Path:
+    """Write a schedule as CSV (the format ``load_trace`` reads back)."""
+    path = Path(path)
+    with path.open("w", newline="") as fh:
+        w = csv.writer(fh)
+        w.writerow(_FIELDS)
+        for a in arrivals:
+            w.writerow([f"{1e3 * a.t_s:.3f}", a.seed, a.n_samples,
+                        a.priority,
+                        "" if a.deadline_ms is None else a.deadline_ms,
+                        a.pipeline or ""])
+    return path
+
+
+def load_trace(path) -> list[Arrival]:
+    """Parse a CSV trace (header optional; '#' lines are comments)."""
+    out: list[Arrival] = []
+    with Path(path).open(newline="") as fh:
+        for row in csv.reader(fh):
+            if not row or row[0].lstrip().startswith("#"):
+                continue
+            if row[0].strip() == "t_ms":            # header
+                continue
+            row = [c.strip() for c in row] + [""] * (len(_FIELDS) - len(row))
+            out.append(Arrival(
+                t_s=float(row[0]) / 1e3, seed=int(row[1]),
+                n_samples=int(row[2]), priority=row[3] or "batch",
+                deadline_ms=float(row[4]) if row[4] else None,
+                pipeline=row[5] or None))
+    return sorted(out, key=lambda a: a.t_s)
+
+
+def replay(arrivals: Iterable[Arrival], submit: Callable, *,
+           speed: float = 1.0) -> list[tuple[Arrival, object]]:
+    """Play a schedule against a submit callable in (scaled) wall time.
+
+    Sleeps to each arrival instant (``speed > 1`` compresses the clock) and
+    calls ``submit(arrival.request())``; returns ``(arrival, handle)``
+    pairs in arrival order.  The caller drains afterwards — handles carry
+    their own submit-to-completion latency.
+    """
+    if speed <= 0:
+        raise ValueError(f"speed must be > 0, got {speed}")
+    schedule = sorted(arrivals, key=lambda a: a.t_s)
+    out = []
+    t0 = time.perf_counter()
+    for a in schedule:
+        wait = a.t_s / speed - (time.perf_counter() - t0)
+        if wait > 0:
+            time.sleep(wait)
+        out.append((a, submit(a.request())))
+    return out

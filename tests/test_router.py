@@ -1,0 +1,463 @@
+"""Multi-pipeline SLA router + priority scheduling: PR-6 acceptance contract.
+
+* **routing** — explicit lane keys (``Request.pipeline`` /
+  ``submit(pipeline=...)``) and deadline-slack tiering: tight deadline ⇒
+  cheap low-NFE lane, slack/no deadline ⇒ teacher-grade lane, unknown keys
+  rejected with the zoo listed;
+* **deadline precedence** — per-call ``submit(deadline_ms=)`` >
+  ``Request.deadline_ms`` > ``ServeConfig.deadline_ms``, observable through
+  the lane the slack router picks;
+* **priority packing** — ``interactive`` chunks pack ahead of ``batch``
+  backfill when a flush forms (asserted on the staged flush rows), while a
+  uniform-priority stream keeps FIFO admit order;
+* **the acceptance bit-identity** — a single-lane router serving one
+  priority class is bit-identical (responses, flush composition, stats) to
+  the PR-5 sync flush loop;
+* **the hypothesis property** — across mixed-priority multi-lane streams
+  with per-lane budgets, every request's rows come back exactly once, in
+  order, on the lane it was routed to, and no flush exceeds its lane's
+  budget;
+* **traffic** — Poisson schedules are seed-deterministic and CSV traces
+  round-trip;
+* **the public surface** — the serving types resolve through ``repro.api``
+  (lazily) and the legacy engine entry points warn with a migration hint.
+"""
+import importlib
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (DiffusionServer, Pipeline, PipelineRouter, Request,
+                       SamplerSpec, ServeConfig)
+from repro.core import analytic
+
+DIM = 16
+FAST_NFE = 2
+HQ_NFE = 8
+
+
+@pytest.fixture(scope="module")
+def gmm():
+    return analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+
+
+def _pipe(gmm, nfe, solver="ddim") -> Pipeline:
+    return Pipeline.from_spec(SamplerSpec(solver=solver, nfe=nfe), gmm.eps,
+                              dim=DIM)
+
+
+def _router(gmm, *, budgets=None, run_batch=None, **cfg_kw) -> PipelineRouter:
+    """Two-lane zoo: ``fast`` (ddim@2, est cost 2ms) + ``hq`` (ddim@8,
+    est cost 8ms) under the default 1.0 ms/eval slack model."""
+    cfg = ServeConfig(max_batch=8, use_pas=False, **cfg_kw)
+    return PipelineRouter({"fast": _pipe(gmm, FAST_NFE),
+                           "hq": _pipe(gmm, HQ_NFE)},
+                          cfg=cfg, use_pas=False, budgets=budgets,
+                          run_batch=run_batch)
+
+
+def _prior(router, lane, seed, n) -> np.ndarray:
+    return np.asarray(router.pipelines[lane].prior(jax.random.key(seed), n))
+
+
+# ---------------------------------------------------------------------------
+# routing: explicit keys, slack tiers, validation
+# ---------------------------------------------------------------------------
+
+
+def test_explicit_key_routes_and_unknown_key_rejected(gmm):
+    router = _router(gmm)
+    try:
+        h1 = router.submit(Request(seed=0, n_samples=2), pipeline="fast")
+        h2 = router.submit(Request(seed=1, n_samples=2, pipeline="hq"))
+        assert (h1.lane, h2.lane) == ("fast", "hq")
+        with pytest.raises(ValueError, match=r"unknown pipeline.*'fast'"):
+            router.submit(Request(seed=2, n_samples=2, pipeline="teacher"))
+        router.drain(timeout=60)
+        assert h1.result().shape == (2, DIM)
+    finally:
+        router.close()
+
+
+def test_slack_routing_tiers(gmm):
+    """No deadline ⇒ teacher-grade; generous slack ⇒ most expensive lane
+    that fits; tight slack ⇒ cheap lane; impossible slack ⇒ cheapest."""
+    router = _router(gmm)
+    try:
+        cases = [(None, "hq"), (100.0, "hq"), (3.0, "fast"), (1.0, "fast")]
+        for i, (ddl, lane) in enumerate(cases):
+            h = router.submit(Request(seed=i, n_samples=1, deadline_ms=ddl))
+            assert h.lane == lane, (ddl, h.lane)
+        router.drain(timeout=60)
+    finally:
+        router.close()
+    assert router.lane_cost_ms("fast") == FAST_NFE * 1.0
+    assert router.lane_cost_ms("hq") == HQ_NFE * 1.0
+
+
+def test_route_by_explicit_requires_key(gmm):
+    router = _router(gmm, route_by="explicit")
+    try:
+        with pytest.raises(ValueError, match="route_by='explicit'"):
+            router.submit(Request(seed=0, n_samples=2))
+        h = router.submit(Request(seed=0, n_samples=2, pipeline="fast"))
+        router.drain(timeout=60)
+        assert h.lane == "fast"
+    finally:
+        router.close()
+
+
+def test_budgets_for_unknown_lane_rejected(gmm):
+    with pytest.raises(ValueError, match="unknown lanes.*teacher"):
+        PipelineRouter({"fast": _pipe(gmm, FAST_NFE)},
+                       cfg=ServeConfig(max_batch=8, use_pas=False),
+                       use_pas=False, budgets={"teacher": 4})
+
+
+def test_invalid_priority_rejected(gmm):
+    router = _router(gmm)
+    try:
+        with pytest.raises(ValueError, match="priority"):
+            router.submit(Request(seed=0, n_samples=2, priority="urgent"))
+    finally:
+        router.close()
+    with pytest.raises(ValueError, match="default_priority"):
+        ServeConfig(default_priority="urgent")
+
+
+# ---------------------------------------------------------------------------
+# deadline precedence: per-call > Request > ServeConfig
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_precedence_call_beats_request_beats_config(gmm):
+    """The slack router sees the *resolved* deadline, so precedence is
+    observable as the lane choice: 3ms ⇒ fast, 100ms ⇒ hq."""
+    router = _router(gmm, deadline_ms=100.0)      # config default: hq tier
+    try:
+        # config default applies when nothing else is set
+        assert router.submit(Request(seed=0, n_samples=1)).lane == "hq"
+        # Request.deadline_ms overrides the config default
+        assert router.submit(
+            Request(seed=1, n_samples=1, deadline_ms=3.0)).lane == "fast"
+        # per-call submit(deadline_ms=) overrides the Request field
+        assert router.submit(Request(seed=2, n_samples=1, deadline_ms=3.0),
+                             deadline_ms=100.0).lane == "hq"
+        # per-call None clears the Request deadline: teacher-grade lane
+        assert router.submit(Request(seed=3, n_samples=1, deadline_ms=3.0),
+                             deadline_ms=None).lane == "hq"
+        router.drain(timeout=60)
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# priority packing: interactive pre-empts batch backfill
+# ---------------------------------------------------------------------------
+
+
+def _staging_tracker(flushes):
+    """A lane runner that records each staged flush (copied to host before
+    the identity return — compositions stay inspectable, nothing is
+    donated)."""
+    def run(key, x_t):
+        x = np.array(x_t)
+        flushes.append((key, x))
+        return x
+    return run
+
+
+def test_interactive_packs_ahead_of_batch(gmm):
+    """A batch chunk admitted *first* still flushes *behind* an interactive
+    chunk that arrives before the budget fills."""
+    flushes = []
+    router = _router(gmm, budgets={"fast": 8, "hq": 8},
+                     run_batch=_staging_tracker(flushes))
+    try:
+        router.submit(Request(seed=0, n_samples=4, pipeline="fast",
+                              priority="batch"))
+        router.submit(Request(seed=1, n_samples=4, pipeline="fast",
+                              priority="interactive"))   # fills the budget
+        router.drain(timeout=60)
+    finally:
+        router.close()
+    assert len(flushes) == 1 and flushes[0][0] == "fast"
+    staged = flushes[0][1]
+    np.testing.assert_array_equal(staged[:4], _prior(router, "fast", 1, 4))
+    np.testing.assert_array_equal(staged[4:], _prior(router, "fast", 0, 4))
+
+
+def test_uniform_priority_keeps_fifo_order(gmm):
+    flushes = []
+    router = _router(gmm, budgets={"fast": 8, "hq": 8},
+                     run_batch=_staging_tracker(flushes))
+    try:
+        router.submit(Request(seed=0, n_samples=4, pipeline="fast"))
+        router.submit(Request(seed=1, n_samples=4, pipeline="fast"))
+        router.drain(timeout=60)
+    finally:
+        router.close()
+    staged = flushes[0][1]
+    np.testing.assert_array_equal(staged[:4], _prior(router, "fast", 0, 4))
+    np.testing.assert_array_equal(staged[4:], _prior(router, "fast", 1, 4))
+
+
+def test_latency_stats_bucketed_by_priority(gmm):
+    router = _router(gmm)
+    try:
+        router.submit(Request(seed=0, n_samples=2, priority="interactive"))
+        router.submit(Request(seed=1, n_samples=2, priority="batch"))
+        router.drain(timeout=60)
+        by_prio = router.stats["latency_by_priority"]
+        assert len(by_prio["interactive"]) == 1
+        assert len(by_prio["batch"]) == 1
+        assert all(v >= 0 for vs in by_prio.values() for v in vs)
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# acceptance: single-lane router == PR-5 sync flush loop, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def test_single_lane_router_bit_identical_to_sync_loop(gmm):
+    """One lane, one priority class: the router *is* the PR-5 scheduler —
+    same bits, same flush composition, same stats."""
+    reqs = [Request(seed=0, n_samples=4), Request(seed=1, n_samples=20),
+            Request(seed=2, n_samples=0), Request(seed=3, n_samples=3),
+            Request(seed=4, n_samples=8)]
+    cfg = ServeConfig(nfe=HQ_NFE, solver="ddim", max_batch=8, use_pas=False,
+                      scheduler="sync")
+    sync = DiffusionServer(gmm.eps, DIM, cfg)
+    sync_seen = []
+    orig = sync._run_batch
+    sync._run_batch = lambda x_t: (sync_seen.append(int(x_t.shape[0])),
+                                   orig(x_t))[1]
+    want = sync.serve(reqs)
+
+    seen = []
+    pipe = _pipe(gmm, HQ_NFE)
+
+    def tracked(key, x_t):
+        seen.append(int(x_t.shape[0]))
+        return pipe.sample(x_t, use_pas=False)
+
+    router = PipelineRouter({"only": pipe},
+                            cfg=ServeConfig(max_batch=8, use_pas=False),
+                            run_batch=tracked)
+    try:
+        got = router.serve(reqs)
+    finally:
+        router.close()
+    assert [o.shape for o in got] == [(4, DIM), (20, DIM), (0, DIM),
+                                     (3, DIM), (8, DIM)]
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    assert seen == sync_seen                  # same flush composition
+    for k in ("requests", "samples", "batches", "nfe_total",
+              "padded_samples"):
+        assert router.stats[k] == sync.stats[k], k
+
+
+# ---------------------------------------------------------------------------
+# the router property: exactly-once rows, in order, per-lane budgets
+# ---------------------------------------------------------------------------
+
+
+_BUDGETS = {"fast": 4, "hq": 6}
+
+
+def _check_stream(router, flushes, reqs) -> None:
+    """One mixed stream through a two-lane router with an identity
+    executor: every request's rows come back exactly once, in order, on the
+    lane it was routed to; no flush exceeds its lane's budget; per-lane
+    rows are conserved."""
+    flushes.clear()
+    handles = [
+        router.submit(Request(seed=1000 + i, n_samples=n, priority=prio,
+                              deadline_ms=ddl, pipeline=lane))
+        for i, (n, prio, ddl, lane) in enumerate(reqs)]
+    router.drain(timeout=60)
+    routed_rows = {"fast": 0, "hq": 0}
+    for i, (h, (n, prio, ddl, lane)) in enumerate(zip(handles, reqs)):
+        # explicit key wins; else the slack tier decides
+        want_lane = lane or ("hq" if ddl is None or ddl >= HQ_NFE
+                             else "fast")
+        assert h.lane == want_lane and h.priority == prio
+        # exactly n rows, in order, bit-equal to this request's staged
+        # prior (identity executor ⇒ any loss/duplication/reorder of
+        # rows across flush compositions would break equality)
+        out = h.result(timeout=60)
+        assert out.shape == (n, DIM)
+        np.testing.assert_array_equal(
+            out, _prior(router, want_lane, 1000 + i, n))
+        routed_rows[want_lane] += n
+    # no flush exceeds its lane's budget; per-lane rows conserved
+    flushed = {"fast": 0, "hq": 0}
+    for key, staged in flushes:
+        assert 0 < staged.shape[0] <= _BUDGETS[key]
+        flushed[key] += staged.shape[0]
+    assert flushed == routed_rows
+
+
+def test_router_mixed_stream_fixed_cases(gmm):
+    """The exactly-once property on hand-picked adversarial streams —
+    oversized chunking, zero-sample, explicit pins, every deadline tier and
+    priority interleaving (runs even without hypothesis installed)."""
+    flushes = []
+    router = _router(gmm, budgets=_BUDGETS,
+                     run_batch=_staging_tracker(flushes))
+    streams = [
+        # oversized vs both budgets + zero-sample + explicit pins
+        [(11, "batch", None, None), (0, "interactive", 3.0, None),
+         (5, "interactive", 3.0, "hq"), (4, "batch", 100.0, "fast")],
+        # priority interleaving on one lane, budget-exact fills
+        [(2, "batch", 3.0, None), (2, "interactive", 3.0, None),
+         (2, "batch", 3.0, None), (2, "interactive", 3.0, None)],
+        # everything on the teacher lane, mixed priorities
+        [(6, "interactive", None, None), (6, "batch", 100.0, None),
+         (1, "interactive", None, None)],
+    ]
+    try:
+        for reqs in streams:
+            _check_stream(router, flushes, reqs)
+    finally:
+        router.close()
+
+
+def test_router_property_exactly_once_in_order(gmm):
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    flushes = []
+    router = _router(gmm, budgets=_BUDGETS,
+                     run_batch=_staging_tracker(flushes))
+
+    req_st = st.tuples(
+        st.integers(min_value=0, max_value=11),            # n_samples
+        st.sampled_from(["interactive", "batch"]),         # priority
+        st.sampled_from([None, 3.0, 100.0]),               # deadline tier
+        st.sampled_from([None, "fast", "hq"]))             # explicit lane
+
+    @hyp.settings(max_examples=12, deadline=None)
+    @hyp.given(reqs=st.lists(req_st, min_size=1, max_size=7))
+    def check(reqs):
+        _check_stream(router, flushes, reqs)
+
+    try:
+        check()
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# traffic: determinism + trace round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_arrivals_deterministic_and_classed():
+    from repro.api import poisson_arrivals
+
+    a = poisson_arrivals(200.0, 0.5, seed=7)
+    b = poisson_arrivals(200.0, 0.5, seed=7)
+    assert a == b and len(a) > 10
+    assert poisson_arrivals(200.0, 0.5, seed=8) != a
+    assert all(x.t_s < 0.5 for x in a)
+    assert sorted(a, key=lambda x: x.t_s) == a
+    prios = {x.priority for x in a}
+    assert prios == {"interactive", "batch"}
+    for x in a:
+        want = 25.0 if x.priority == "interactive" else 250.0
+        assert x.deadline_ms == want
+    # class knobs: all-interactive / all-batch streams
+    assert {x.priority for x in poisson_arrivals(
+        200.0, 0.3, seed=7, interactive_fraction=1.0)} == {"interactive"}
+    with pytest.raises(ValueError, match="rate_rps"):
+        poisson_arrivals(0.0, 1.0)
+
+
+def test_trace_round_trip(tmp_path):
+    from repro.api import load_trace, poisson_arrivals, save_trace
+
+    import dataclasses
+
+    a = poisson_arrivals(120.0, 0.4, seed=3)
+    a[0] = dataclasses.replace(a[0], pipeline="fast")
+    path = save_trace(tmp_path / "trace.csv", a)
+    back = load_trace(path)
+    assert len(back) == len(a)
+    for x, y in zip(a, back):
+        assert abs(x.t_s - y.t_s) < 1e-3          # t_ms written at 3 decimals
+        assert (x.seed, x.n_samples, x.priority, x.deadline_ms,
+                x.pipeline) == (y.seed, y.n_samples, y.priority,
+                                y.deadline_ms, y.pipeline)
+    req = back[0].request()
+    assert isinstance(req, Request) and req.pipeline == "fast"
+    assert req.n_samples == back[0].n_samples
+
+
+# ---------------------------------------------------------------------------
+# public surface: repro.api serving exports + legacy deprecations
+# ---------------------------------------------------------------------------
+
+
+def test_api_exports_serving_surface():
+    api = importlib.import_module("repro.api")
+    for name, module in (("Request", "repro.runtime.serve_loop"),
+                         ("ServeConfig", "repro.runtime.serve_loop"),
+                         ("DiffusionServer", "repro.runtime.serve_loop"),
+                         ("ServeHandle", "repro.runtime.scheduler"),
+                         ("ServeScheduler", "repro.runtime.scheduler"),
+                         ("PRIORITIES", "repro.runtime.scheduler"),
+                         ("PipelineRouter", "repro.runtime.router"),
+                         ("Arrival", "repro.runtime.traffic"),
+                         ("poisson_arrivals", "repro.runtime.traffic"),
+                         ("replay", "repro.runtime.traffic")):
+        assert name in api.__all__
+        assert getattr(api, name) is getattr(
+            importlib.import_module(module), name), name
+    assert "PipelineRouter" in dir(api)
+
+
+def test_legacy_engine_entry_points_warn(gmm):
+    from repro.core import make_solver, pas_sample
+    from repro.core.pas import PASConfig, PASParams
+    from repro.engine import engine_for_solver, get_engine
+
+    spec = SamplerSpec(solver="ddim", nfe=4)
+    with pytest.warns(DeprecationWarning,
+                      match="Migrating from the legacy API"):
+        eng = get_engine("ddim", spec.ts())
+    assert eng.nfe == 4
+    with pytest.warns(DeprecationWarning,
+                      match="Migrating from the legacy API"):
+        eng2 = engine_for_solver(make_solver("ddim", spec.ts()))
+    assert eng2 is eng                         # shims share the spec cache
+
+    import jax.numpy as jnp
+    x = gmm.sample_prior(jax.random.key(0), 2, float(spec.ts()[0]))
+    params = PASParams(active=np.zeros(4, bool),
+                       coords=jnp.zeros((4, 4), jnp.float32))
+    with pytest.warns(DeprecationWarning, match="repro.api.Pipeline"):
+        out = pas_sample(make_solver("ddim", spec.ts()), gmm.eps, x, params,
+                         PASConfig())
+    assert np.asarray(out).shape == (2, DIM)
+
+
+def test_pipeline_path_is_warning_free(gmm):
+    """The supported surface never trips its own deprecation shims."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        pipe = _pipe(gmm, FAST_NFE)
+        x = pipe.prior(jax.random.key(0), 2)
+        pipe.sample(x, use_pas=False)
+        router = PipelineRouter({"fast": pipe},
+                                cfg=ServeConfig(max_batch=8, use_pas=False),
+                                use_pas=False)
+        try:
+            router.serve([Request(seed=0, n_samples=2)])
+        finally:
+            router.close()
