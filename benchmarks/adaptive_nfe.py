@@ -1,0 +1,306 @@
+"""Adaptive-NFE curves: error-controlled sampling + the NFE-ladder router.
+
+Two experiments, one JSON record (root-level ``BENCH_adaptive_nfe.json``):
+
+* **NFE vs error** — fixed Karras grids (ddim = Euler, heun) against the
+  error-controlled embedded-pair sampler (``repro.engine.adaptive``) over an
+  rtol sweep, error = mean L2 to a heun@200 reference on the shared GMM
+  oracle.  The acceptance claim (``claim_a``): some adaptive point reaches
+  its error with a *lower mean NFE* than the cheapest fixed grid reaching
+  the same error — per-sample step-size control beats one-size-fits-all
+  grids once the error target is tight (at loose targets the Karras grid's
+  few-step tuning wins; the curves record both regimes honestly).
+
+* **Ladder deadline hit-rate** — an ``NFELadder`` router (PAS rungs +
+  teacher-grade lane from one base spec/artifact family) against a
+  single-lane teacher-grade baseline under the *same* seeded Poisson load
+  with mixed 25 ms / 250 ms deadlines.  Hit = submit-to-last-chunk latency
+  within the request's deadline, warm (pre-replayed) schedules on both
+  sides.  The acceptance claim (``claim_b``): the ladder's overall hit rate
+  is at least the baseline's — tight deadlines route to few-step PAS rungs
+  instead of queueing behind teacher-grade flushes.
+
+Mean NFE for adaptive rows counts evals actually executed (accepted +
+rejected embedded steps, 2 evals each) — the same honest counter the serve
+stack accounts at retire time; the compiled scan's fixed-iteration capacity
+cost is recorded separately as ``scan_evals_per_sample``.
+
+  PYTHONPATH=src python -m benchmarks.adaptive_nfe [--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_adaptive_nfe.json"
+
+N_EVAL = 256
+REF_NFE = 200                       # heun reference grid (400 evals)
+FIXED_NFES = (5, 8, 10, 15, 20, 25, 30, 40)
+RTOLS = (0.05, 0.02, 0.01, 0.005, 0.002)
+MAX_ITERS = 64
+
+# ladder experiment: rungs + a moderate teacher lane (heun@40 = 80 evals —
+# teacher-grade for the load test without making every flush glacial on CPU)
+LADDER_NFES = (4, 8)
+LADDER_TEACHER_NFE = 40
+LADDER_BUDGETS = {"nfe4": 32, "nfe8": 32, "teacher": 256}
+# prices nfe8 at 8 ms of slack and the teacher lane at 80 ms, so with the
+# half-SLA batching deadline below an interactive request (12.5 ms batching
+# slack) routes to a cheap rung and a batch request (125 ms) to the teacher
+SLACK_MS_PER_EVAL = 1.0
+# requests flush when their *batching* deadline expires; batching at the
+# full SLA would land every deadline-triggered flush just after it, so the
+# scheduler gets half the SLA and the other half covers flush compute
+BATCHING_FRAC = 0.5
+INTERACTIVE_DEADLINE_MS = 25.0
+BATCH_DEADLINE_MS = 250.0
+RATE_RPS = 80.0
+DURATION_S = 1.5
+
+
+# -- part (a): NFE vs error --------------------------------------------------
+
+def _nfe_vs_error(dry_run: bool) -> tuple[list[dict], bool]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import ErrorControlConfig, Pipeline, SamplerSpec
+    from repro.engine import get_adaptive_engine_for_spec
+
+    from . import common
+
+    fixed_nfes = (5, 10, 20) if dry_run else FIXED_NFES
+    rtols = (0.05, 0.01) if dry_run else RTOLS
+    n_eval = 64 if dry_run else N_EVAL
+
+    gmm = common.oracle()
+    x_t = gmm.sample_prior(jax.random.key(99), n_eval, common.T_MAX)
+    ref = Pipeline.from_spec(
+        SamplerSpec(solver="heun", nfe=REF_NFE), gmm.eps,
+        dim=common.DIM).sample(x_t, use_pas=False)
+
+    def err(x) -> float:
+        return float(jnp.mean(jnp.linalg.norm(x - ref, axis=-1)))
+
+    rows: list[dict] = []
+    for solver in ("ddim", "heun"):
+        for n in fixed_nfes:
+            pipe = Pipeline.from_spec(SamplerSpec(solver=solver, nfe=n),
+                                      gmm.eps, dim=common.DIM)
+            e = err(pipe.sample(x_t, use_pas=False))
+            rows.append({"method": f"{solver}@{n}", "kind": "fixed",
+                         "evals_per_sample": pipe.engine.nfe,
+                         "mean_nfe": float(pipe.engine.nfe),
+                         "err_l2": round(e, 4)})
+            print(f"fixed {solver}@{n}: evals={pipe.engine.nfe} "
+                  f"err={e:.4f}", flush=True)
+
+    for rtol in rtols:
+        ec = ErrorControlConfig(rtol=rtol, max_iters=MAX_ITERS)
+        spec = SamplerSpec(solver="ddim", nfe=10, error_control=ec)
+        eng = get_adaptive_engine_for_spec(spec)
+        x, info = eng.sample_with_info(gmm.eps, x_t)
+        nfe = np.asarray(info["nfe"])
+        e = err(x)
+        rows.append({
+            "method": f"adaptive@rtol{rtol}", "kind": "adaptive",
+            "rtol": rtol, "atol": ec.atol,
+            "mean_nfe": round(float(nfe.mean()), 2),
+            "max_nfe": int(nfe.max()), "min_nfe": int(nfe.min()),
+            "finished_frac": round(float(np.asarray(
+                info["finished"]).mean()), 4),
+            "scan_evals_per_sample": 2 * ec.max_iters,
+            "err_l2": round(e, 4)})
+        print(f"adaptive rtol={rtol}: mean_nfe={nfe.mean():.1f} "
+              f"err={e:.4f}", flush=True)
+
+    # claim (a): some adaptive point beats the cheapest fixed grid that
+    # reaches the same error
+    fixed = [r for r in rows if r["kind"] == "fixed"]
+    claim_a = False
+    for r in rows:
+        if r["kind"] != "adaptive":
+            continue
+        qualifying = [f["evals_per_sample"] for f in fixed
+                      if f["err_l2"] <= r["err_l2"]]
+        r["best_fixed_evals_at_err"] = min(qualifying, default=None)
+        r["beats_best_fixed"] = (bool(qualifying)
+                                 and r["mean_nfe"] < min(qualifying))
+        claim_a = claim_a or r["beats_best_fixed"]
+    return rows, claim_a
+
+
+# -- part (b): ladder router deadline hit-rate -------------------------------
+
+def _hit_rate(pairs) -> dict:
+    """Deadline hit stats over (arrival, handle) pairs from one replay."""
+    hits = total = 0
+    by_class: dict[str, list[int]] = {}
+    for arrival, handle in pairs:
+        ddl_ms = arrival.deadline_ms
+        if ddl_ms is None or handle.latency_s is None:
+            continue
+        hit = int(handle.latency_s * 1e3 <= ddl_ms)
+        hits += hit
+        total += 1
+        by_class.setdefault(handle.priority, []).append(hit)
+    return {
+        "hit_rate": round(hits / total, 4) if total else None,
+        "requests": total,
+        "by_priority": {p: round(float(np.mean(v)), 4)
+                        for p, v in by_class.items()},
+    }
+
+
+def _bucketed_runner(pipes, budgets: dict, use_pas: dict, dim: int):
+    """Lane executors that pad every flush to the lane budget, so each lane
+    compiles exactly one batch shape (the serve_router idiom) — the hit-rate
+    curves then measure scheduling, never per-shape recompilation."""
+    import jax.numpy as jnp
+
+    def run(key, x_t):
+        budget = budgets[key]
+        x = np.asarray(x_t)
+        if x.shape[0] < budget:
+            x = np.concatenate(
+                [x, np.zeros((budget - x.shape[0], dim), x.dtype)])
+        return pipes[key].sample(jnp.asarray(x),
+                                 use_pas=use_pas.get(key, False))
+    return run
+
+
+def _replay_on(router, arrivals) -> dict:
+    """Warm replay (compile everything), then one timed replay; stats."""
+    from repro.api import replay
+
+    def submit(req):
+        # batching slack = half the SLA (see BATCHING_FRAC); the request's
+        # own deadline_ms stays the SLA the hit-rate is scored against
+        ddl = req.deadline_ms
+        return router.submit(
+            req, deadline_ms=(None if ddl is None else ddl * BATCHING_FRAC))
+
+    replay(arrivals, submit)               # warmup: compile flush shapes
+    router.drain(timeout=600)
+    pairs = replay(arrivals, submit)
+    router.drain(timeout=600)
+    out = _hit_rate(pairs)
+    out["lane_rows"] = dict(router.stats["lane_rows"])
+    return out
+
+
+def _ladder_vs_baseline(dry_run: bool) -> dict:
+    import jax
+
+    from repro.api import (NFELadder, Pipeline, PipelineRouter, SamplerSpec,
+                           ServeConfig, TeacherSpec, poisson_arrivals)
+
+    from . import common
+
+    duration = 0.5 if dry_run else DURATION_S
+    base = SamplerSpec(
+        solver="ddim", nfe=10,
+        teacher=TeacherSpec(solver="heun", nfe=LADDER_TEACHER_NFE),
+        pas=common.default_pas_cfg(n_sgd_iters=100))
+    gmm = common.oracle()
+    cfg = ServeConfig(max_batch=max(LADDER_BUDGETS.values()),
+                      slack_ms_per_eval=SLACK_MS_PER_EVAL)
+
+    ladder = NFELadder(base, nfes=LADDER_NFES)
+    use_pas = ({k: False for k in ladder.keys} if dry_run
+               else dict(ladder.use_pas))
+    with tempfile.TemporaryDirectory() as family_dir:
+        pipes = {k: Pipeline.from_spec(spec, gmm.eps, dim=common.DIM)
+                 for k, spec in ladder.specs.items()}
+        router = PipelineRouter(
+            pipes, budgets=dict(LADDER_BUDGETS), cfg=cfg,
+            run_batch=_bucketed_runner(pipes, LADDER_BUDGETS, use_pas,
+                                       common.DIM))
+        if not dry_run:
+            # the "one artifact family" workflow end to end: calibrate every
+            # PAS rung against the shared teacher, persist rung artifacts +
+            # the ladder manifest in one directory
+            ladder.calibrate(router, jax.random.key(0), batch=128,
+                             artifact_dir=family_dir)
+        arrivals = poisson_arrivals(
+            RATE_RPS, duration, seed=0,
+            interactive_deadline_ms=INTERACTIVE_DEADLINE_MS,
+            batch_deadline_ms=BATCH_DEADLINE_MS)
+        try:
+            ladder_stats = _replay_on(router, arrivals)
+        finally:
+            router.close()
+
+        # equal-load baseline: the teacher-grade lane alone
+        base_pipes = {"teacher": Pipeline.from_spec(
+            ladder.specs["teacher"], gmm.eps, dim=common.DIM)}
+        base_budgets = {"teacher": LADDER_BUDGETS["teacher"]}
+        baseline = PipelineRouter(
+            base_pipes, budgets=base_budgets, cfg=cfg,
+            run_batch=_bucketed_runner(base_pipes, base_budgets,
+                                       {"teacher": False}, common.DIM))
+        try:
+            base_stats = _replay_on(baseline, arrivals)
+        finally:
+            baseline.close()
+
+    report = {
+        "ladder": ladder_stats, "baseline": base_stats,
+        "rungs": ladder.keys, "rate_rps": RATE_RPS, "duration_s": duration,
+        "deadlines_ms": {"interactive": INTERACTIVE_DEADLINE_MS,
+                         "batch": BATCH_DEADLINE_MS},
+        "slack_ms_per_eval": SLACK_MS_PER_EVAL,
+        "claim_b": (ladder_stats["hit_rate"] is not None
+                    and base_stats["hit_rate"] is not None
+                    and ladder_stats["hit_rate"] >= base_stats["hit_rate"]),
+    }
+    print(f"ladder hit_rate={ladder_stats['hit_rate']} "
+          f"baseline hit_rate={base_stats['hit_rate']}", flush=True)
+    return report
+
+
+def run(dry_run: bool = False) -> dict:
+    import jax
+
+    rows, claim_a = _nfe_vs_error(dry_run)
+    ladder = _ladder_vs_baseline(dry_run)
+    report = {
+        "rows": rows,
+        "claim_a_adaptive_beats_best_fixed": claim_a,
+        "ladder": ladder,
+        "claim_b_ladder_hit_rate_ge_baseline": ladder["claim_b"],
+        "backend": jax.default_backend(),
+        "generated": time.strftime("%F %T"),
+    }
+    if not dry_run:               # smoke runs don't pollute the perf record
+        OUT.write_text(json.dumps(report, indent=1))
+        from . import common
+        common.save_table(
+            "adaptive_nfe", rows,
+            extra={"claim_a": claim_a, "claim_b": ladder["claim_b"],
+                   "backend": report["backend"]})
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="small sweep, no root JSON write (CI smoke)")
+    args = ap.parse_args()
+    rep = run(dry_run=args.dry_run)
+    for r in rep["rows"]:
+        print(r)
+    print(f"claim_a={rep['claim_a_adaptive_beats_best_fixed']} "
+          f"claim_b={rep['claim_b_ladder_hit_rate_ge_baseline']}")
+    if not args.dry_run:
+        assert rep["claim_a_adaptive_beats_best_fixed"], \
+            "no adaptive point beat the best fixed grid at its error"
+        assert rep["claim_b_ladder_hit_rate_ge_baseline"], \
+            "ladder router missed more deadlines than the single-lane baseline"

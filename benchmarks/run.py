@@ -13,18 +13,18 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3,table2,table5,table6,table8,"
+                    help="comma list: fig2,fig3,table2,table5,table8,"
                          "table9,table11,fig6,learned,overhead,sharded,"
-                         "serve,router")
+                         "serve,router,adaptive")
     ap.add_argument("--fast", action="store_true",
                     help="smaller NFE grids (CI mode)")
     args = ap.parse_args()
 
-    from . import (fig2_pca_variance, fig3_truncation, fig6_ablations,
-                   learned_denoiser, pas_overhead, serve_latency,
-                   serve_router, sharded_throughput, table2_solvers,
-                   table5_nfe_sweep, table6_adaptive_steps, table8_tolerance,
-                   table9_teacher, table11_l1l2)
+    from . import (adaptive_nfe, fig2_pca_variance, fig3_truncation,
+                   fig6_ablations, learned_denoiser, pas_overhead,
+                   serve_latency, serve_router, sharded_throughput,
+                   table2_solvers, table5_nfe_sweep, table6_adaptive_steps,
+                   table8_tolerance, table9_teacher, table11_l1l2)
 
     suite = {
         "fig2": lambda: fig2_pca_variance.run(),
@@ -33,8 +33,12 @@ def main() -> None:
                                              else (5, 6, 8, 10)),
         "table5": lambda: table5_nfe_sweep.run((5, 8, 10) if args.fast
                                                else (4, 5, 6, 7, 8, 9, 10)),
-        "table6": lambda: table6_adaptive_steps.run((5, 10) if args.fast
-                                                    else (5, 6, 8, 10)),
+        # the adaptive story as one target: the paper tables' corrected-step
+        # selection (table6) + the adaptive-NFE engine/ladder curves
+        "adaptive": lambda: (
+            table6_adaptive_steps.run((5, 10) if args.fast
+                                      else (5, 6, 8, 10))
+            + adaptive_nfe.run(dry_run=args.fast)["rows"]),
         "table8": lambda: table8_tolerance.run(),
         "table9": lambda: table9_teacher.run(),
         "table11": lambda: table11_l1l2.run(),

@@ -18,15 +18,16 @@ from repro.core.pas import PASConfig, PASParams
 from .artifact import (ARTIFACT_DIRNAME, ARTIFACT_VERSION, ArtifactError,
                        PASArtifact)
 from .pipeline import Pipeline, teacher_trajectory
-from .spec import (MeshSpec, SamplerSpec, ScheduleSpec, TeacherSpec,
-                   register_schedule, register_solver, register_teacher,
-                   schedule_kinds, solver_names, spec_from_schedule,
-                   teacher_names)
+from .spec import (ErrorControlConfig, MeshSpec, SamplerSpec, ScheduleSpec,
+                   TeacherSpec, register_schedule, register_solver,
+                   register_teacher, schedule_kinds, solver_names,
+                   spec_from_schedule, teacher_names)
 
 # serving surface, re-exported from repro.runtime on first access
 _SERVING_EXPORTS = {
     "Arrival": "repro.runtime.traffic",
     "DiffusionServer": "repro.runtime.serve_loop",
+    "NFELadder": "repro.runtime.ladder",
     "PRIORITIES": "repro.runtime.scheduler",
     "PipelineRouter": "repro.runtime.router",
     "Request": "repro.runtime.serve_loop",
@@ -43,7 +44,8 @@ _SERVING_EXPORTS = {
 }
 
 __all__ = [
-    "MeshSpec", "SamplerSpec", "ScheduleSpec", "TeacherSpec",
+    "ErrorControlConfig", "MeshSpec", "SamplerSpec", "ScheduleSpec",
+    "TeacherSpec",
     "Pipeline", "teacher_trajectory",
     "PASArtifact", "ArtifactError", "ARTIFACT_VERSION", "ARTIFACT_DIRNAME",
     "PASConfig", "PASParams",

@@ -66,8 +66,12 @@ class Pipeline:
         self.dim = dim
         self.params = params
         self.diag = diag or {}
-        self.engine = get_engine_for_spec(spec)
+        self.engine = get_engine_for_spec(spec.replace(error_control=None))
         self.solver = self.engine.solver
+        self._adaptive_engine = None
+        #: info dict from the most recent adaptive ``sample`` call (per-sample
+        #: nfe / accept / reject counters); None until then.
+        self.last_adaptive_info: Optional[dict] = None
 
     @classmethod
     def from_spec(cls, spec: SamplerSpec, eps_fn: EpsFn,
@@ -88,6 +92,33 @@ class Pipeline:
         self.params = params
         self.diag = diag or {}
         return self
+
+    @property
+    def is_adaptive(self) -> bool:
+        """Whether sampling runs the error-controlled (adaptive-NFE) path."""
+        ec = self.spec.error_control
+        return ec is not None and ec.enabled
+
+    @property
+    def adaptive_engine(self):
+        """The spec's cached ``AdaptiveEngine`` (error-controlled scan)."""
+        if self._adaptive_engine is None:
+            from repro.engine import get_adaptive_engine_for_spec
+            self._adaptive_engine = get_adaptive_engine_for_spec(self.spec)
+        return self._adaptive_engine
+
+    @property
+    def evals_per_sample(self) -> int:
+        """Model evals one sample costs — the routing/accounting unit.
+
+        Fixed grids: exactly ``engine.nfe`` (which already counts evals, not
+        steps — a two-eval solver at N steps reports 2N).  Adaptive: the
+        compiled worst case ``2 * max_iters``; per-sample actuals come back
+        in the sample info and replace this bound at retire time.
+        """
+        if self.is_adaptive:
+            return self.adaptive_engine.evals_per_sample
+        return self.engine.nfe
 
     @property
     def mesh_spec(self):
@@ -120,8 +151,16 @@ class Pipeline:
 
     @property
     def calibration_engine(self):
-        """The spec's cached ``CalibrationEngine`` (Alg. 1, fully compiled)."""
-        return get_calibration_engine_for_spec(self.spec)
+        """The spec's cached ``CalibrationEngine`` (Alg. 1, fully compiled).
+
+        Calibration always runs on the spec's *fixed* grid (Algorithm 1 is
+        defined against the nested teacher there); the adaptive sampler then
+        transfers the learned coordinates to its own grid by nearest cell.
+        Dropping ``error_control`` from the cache key keeps one compiled
+        calibrator per artifact family instead of one per rtol setting.
+        """
+        return get_calibration_engine_for_spec(
+            self.spec.replace(error_control=None))
 
     def calibrate(self, key: Optional[Array] = None, batch: int = 256, *,
                   x_t: Optional[Array] = None,
@@ -157,16 +196,25 @@ class Pipeline:
         ``donate_x=True`` donates the input buffer to the compiled scan
         (serve-loop flushes: the flush batch is never reused); the caller's
         ``x_t`` is invalidated.
+
+        When the spec carries an enabled ``error_control`` the sample runs
+        the adaptive engine instead of the fixed grid; per-sample NFE
+        counters land in ``self.last_adaptive_info``.
         """
         x_t = self._resolve_x(x_t, key, batch)
         params = self.params if use_pas else None
+        if self.is_adaptive:
+            x, self.last_adaptive_info = self.adaptive_engine.sample_with_info(
+                self.eps_fn, x_t, params=params, cfg=self.spec.pas,
+                donate_x=donate_x)
+            return x
         return self.engine.sample(self.eps_fn, x_t, params=params,
                                   cfg=self.spec.pas, donate_x=donate_x)
 
     def sample_async(self, x_t: Optional[Array] = None, *,
                      key: Optional[Array] = None, batch: Optional[int] = None,
-                     use_pas: bool = True,
-                     donate_x: bool = False) -> tuple[Array, np.ndarray]:
+                     use_pas: bool = True, donate_x: bool = False,
+                     want_evals: bool = False):
         """Non-blocking sample: dispatch the compiled scan, return the future.
 
         Pads the batch to a DP-divisible row count under a mesh (repeated
@@ -181,15 +229,31 @@ class Pipeline:
         the caller must not reuse ``x_t``, and must never pass a buffer a
         still-in-flight flush owns (the engine rejects already-donated
         buffers).
+
+        ``want_evals=True`` appends a third element: a per-row device array
+        of model evals actually executed (the adaptive path's honest NFE;
+        on a fixed grid, a constant ``engine.nfe`` per row).  The scheduler
+        uses it for retire-time accounting — it rides the same async
+        dispatch, so requesting it does not block.
         """
         x_t = self._resolve_x(x_t, key, batch)
         n = int(x_t.shape[0])
         x_t, pad = self.mesh_spec.pad_rows(x_t)
         params = self.params if use_pas else None
-        y = self.engine.sample(self.eps_fn, x_t, params=params,
-                               cfg=self.spec.pas, donate_x=donate_x)
+        if self.is_adaptive:
+            y, info = self.adaptive_engine.sample_with_info(
+                self.eps_fn, x_t, params=params, cfg=self.spec.pas,
+                donate_x=donate_x)
+            self.last_adaptive_info = info
+            evals = info["nfe"]
+        else:
+            y = self.engine.sample(self.eps_fn, x_t, params=params,
+                                   cfg=self.spec.pas, donate_x=donate_x)
+            evals = np.full(n + pad, self.engine.nfe, dtype=np.int64)
         valid = np.zeros(n + pad, dtype=bool)
         valid[:n] = True
+        if want_evals:
+            return y, valid, evals
         return y, valid
 
     def trajectory(self, x_t: Optional[Array] = None, *,

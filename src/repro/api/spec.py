@@ -25,18 +25,20 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.error_control import ErrorControlConfig
 from repro.core.pas import PASConfig
 from repro.core.schedules import polynomial_schedule, teacher_refinement
 from repro.core.solvers import SOLVER_NAMES, Solver, make_solver
 from repro.parallel.mesh import MeshSpec
 
 __all__ = [
-    "MeshSpec", "ScheduleSpec", "TeacherSpec", "SamplerSpec",
+    "ErrorControlConfig", "MeshSpec", "ScheduleSpec", "TeacherSpec",
+    "SamplerSpec",
     "register_solver", "register_schedule", "register_teacher",
     "solver_names", "schedule_kinds", "teacher_names",
     "spec_from_schedule",
@@ -188,6 +190,11 @@ class SamplerSpec:
     teacher: TeacherSpec = TeacherSpec()
     pas: PASConfig = PASConfig()
     mesh: MeshSpec = MeshSpec()
+    #: Error-controlled (adaptive-NFE) sampling; ``None`` = fixed grid.
+    #: When set, sampling runs the embedded-pair PID solver between the
+    #: schedule's endpoints (``repro.engine.adaptive``) and ``nfe`` only
+    #: names the *calibration* grid PAS coordinates live on.
+    error_control: Optional[ErrorControlConfig] = None
 
     def __post_init__(self):
         object.__setattr__(self, "nfe", int(self.nfe))
@@ -244,8 +251,16 @@ class SamplerSpec:
         Teacher and PASConfig are calibration-time concerns; two specs
         differing only there share one ``SamplingEngine``.  Placement is
         engine-relevant: a mesh engine is a different compiled program.
+        So is error control: an adaptive spec appends its
+        ``ErrorControlConfig`` to the key (a different compiled program),
+        while ``error_control=None`` keeps the historical 5-tuple exactly —
+        existing artifacts and cache entries for fixed-NFE specs are
+        untouched.
         """
-        return (self.solver, self.nfe, self.schedule, self.dtype, self.mesh)
+        key = (self.solver, self.nfe, self.schedule, self.dtype, self.mesh)
+        if self.error_control is None:
+            return key
+        return key + (self.error_control,)
 
     def sans_mesh(self) -> "SamplerSpec":
         """The placement-free projection: the sampler's *math*.
@@ -268,6 +283,7 @@ class SamplerSpec:
     def from_dict(cls, d: dict) -> "SamplerSpec":
         sched = d.get("schedule", {})
         pts = sched.get("points")
+        ec = d.get("error_control")   # absent in pre-adaptive JSON: fixed grid
         return cls(
             solver=d["solver"], nfe=int(d["nfe"]),
             schedule=ScheduleSpec(
@@ -280,6 +296,8 @@ class SamplerSpec:
             teacher=TeacherSpec(**d.get("teacher", {})),
             pas=PASConfig(**d.get("pas", {})),
             mesh=MeshSpec.from_dict(d.get("mesh")),
+            error_control=(ErrorControlConfig.from_dict(ec)
+                           if ec is not None else None),
         )
 
     def to_json(self) -> str:

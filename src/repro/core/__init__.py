@@ -1,6 +1,7 @@
 """repro.core — PAS (PCA-based Adaptive Search) and its solver substrate."""
 
 from .analytic import GaussianMixture, gaussian_ode_solution, make_gmm, two_mode_gmm
+from .error_control import ErrorControlConfig, adaptive_sample_reference
 from .pas import (PASConfig, PASParams, calibrate, calibrate_reference,
                   pas_sample, pas_sample_trajectory, truncation_error_curve)
 from .pca import cumulative_variance, pas_basis, schmidt, topk_right_singular
@@ -11,6 +12,7 @@ from . import teleport
 from .teleport import GaussianStats, gaussian_stats_from_data, tp_schedule
 
 __all__ = [
+    "ErrorControlConfig", "adaptive_sample_reference",
     "GaussianMixture", "gaussian_ode_solution", "make_gmm", "two_mode_gmm",
     "PASConfig", "PASParams", "calibrate", "calibrate_reference",
     "pas_sample", "pas_sample_trajectory",

@@ -1,0 +1,238 @@
+"""Error-controlled step sizing: the PID controller behind adaptive NFE.
+
+PAS corrects a *fixed* grid; this module supplies the other half of the
+adaptive-NFE story (ROADMAP "Adaptive-NFE serving"): a low/high embedded
+solver pair (Euler inside Heun on the EDM eps-ODE ``dx/dt = eps(x, t)``,
+``sigma = t``) whose step size is driven by a PID controller over the
+per-sample local-error estimate — the k-diffusion ``dpm_solver_adaptive``
+idiom (SNIPPETS.md snippet 1), vectorised over the batch so it can ride a
+fixed-iteration ``lax.scan`` inside the compiled engine
+(``repro.engine.adaptive``).
+
+Three layers live here, deliberately below ``repro.api``/``repro.engine``
+so the spec can embed the config without an import cycle:
+
+* ``ErrorControlConfig`` — the frozen, hashable, JSON-round-trippable knob
+  set that rides inside ``repro.api.SamplerSpec`` (and hence in
+  ``engine_key``: an adaptive engine is a different compiled program);
+* the vectorised PID controller — ``PIDState`` + ``pid_init`` /
+  ``pid_propose`` operating on ``(B,)`` error vectors, used verbatim by the
+  compiled scan body;
+* ``adaptive_sample_reference`` — the eager single-sample Python loop, the
+  parity oracle the compiled engine is tested against
+  (tests/test_adaptive.py).
+
+Steps are taken in log-time ("lambda") space: the controller's ``h`` is a
+log-step, ``t_next = max(t * exp(-h), t_min)``, so one dimensionless step
+size serves the whole EDM range [0.002, 80] without scale-dependent tuning.
+A sample finishes when a step landing exactly on ``t_min`` is accepted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+__all__ = [
+    "ErrorControlConfig",
+    "PIDState",
+    "pid_init",
+    "pid_propose",
+    "error_ratio",
+    "adaptive_sample_reference",
+]
+
+#: Guard against division by a zero error estimate (k-diffusion's eps).
+_ERR_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorControlConfig:
+    """The ~8 knobs of the error-controlled solver (defaults: k-diffusion).
+
+    ``rtol <= 0`` disables error control (``enabled`` is False): the
+    adaptive engine then delegates to the spec's fixed-grid engine, so a
+    spec carrying a disabled config samples bit-identically to one carrying
+    none.  ``max_iters`` bounds the compiled scan (each iteration is one
+    accepted-or-rejected embedded step = 2 model evals); samples that have
+    not landed on ``t_min`` within the budget are reported via the
+    ``finished`` info mask rather than silently extended.
+    """
+
+    rtol: float = 0.05
+    atol: float = 0.0078
+    h_init: float = 0.35           # initial log-time step
+    pcoeff: float = 0.0
+    icoeff: float = 1.0
+    dcoeff: float = 0.0
+    accept_safety: float = 0.81    # accept iff PID factor >= this
+    order: int = 2                 # embedded-pair order (PID exponents)
+    max_iters: int = 64            # compiled scan length (accept + reject)
+
+    def __post_init__(self):
+        for f in ("rtol", "atol", "h_init", "pcoeff", "icoeff", "dcoeff",
+                  "accept_safety"):
+            object.__setattr__(self, f, float(getattr(self, f)))
+        object.__setattr__(self, "order", int(self.order))
+        object.__setattr__(self, "max_iters", int(self.max_iters))
+        if self.rtol > 0 and self.atol < 0:
+            raise ValueError(f"atol must be >= 0, got {self.atol}")
+        if self.h_init <= 0:
+            raise ValueError(f"h_init must be > 0, got {self.h_init}")
+        if not 0 < self.accept_safety < 2.5:
+            # limiter range is (1 - pi/2, 1 + pi/2); a threshold outside it
+            # would accept everything or nothing
+            raise ValueError(
+                f"accept_safety must be in (0, 2.5), got {self.accept_safety}")
+        if self.order < 1:
+            raise ValueError(f"order must be >= 1, got {self.order}")
+        if self.max_iters < 1:
+            raise ValueError(f"max_iters must be >= 1, got {self.max_iters}")
+
+    @property
+    def enabled(self) -> bool:
+        """Whether error control is active (rtol > 0)."""
+        return self.rtol > 0
+
+    # -- serialisation (mirrors the other spec members) ---------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ErrorControlConfig":
+        return cls(**d)
+
+
+class PIDState(NamedTuple):
+    """Vectorised controller state, one lane per sample.
+
+    ``inv_err1``/``inv_err2`` are the inverse errors of the two previous
+    *accepted* proposals; ``seeded`` marks lanes whose history is real (the
+    first proposal seeds both to the current inverse error, k-diffusion's
+    empty-``errs`` branch).
+    """
+
+    h: Array          # (B,) current log-time step
+    inv_err1: Array   # (B,)
+    inv_err2: Array   # (B,)
+    seeded: Array     # (B,) bool
+
+
+def pid_init(batch: int, cfg: ErrorControlConfig,
+             dtype=jnp.float32) -> PIDState:
+    return PIDState(
+        h=jnp.full((batch,), cfg.h_init, dtype),
+        inv_err1=jnp.ones((batch,), dtype),
+        inv_err2=jnp.ones((batch,), dtype),
+        seeded=jnp.zeros((batch,), bool),
+    )
+
+
+def _limiter(x: Array) -> Array:
+    """Soft step-factor clamp 1 + atan(x - 1): range (1 - pi/2, 1 + pi/2)."""
+    return 1.0 + jnp.arctan(x - 1.0)
+
+
+def pid_propose(state: PIDState, err: Array,
+                cfg: ErrorControlConfig) -> tuple[PIDState, Array]:
+    """One controller update per lane: (new state, accept mask).
+
+    The PID exponents follow k-diffusion's ``PIDStepSizeController``::
+
+        b1 = (p + i + d) / order,  b2 = -(p + 2d) / order,  b3 = d / order
+        factor = limiter(inv_err^b1 * inv_err1^b2 * inv_err2^b3)
+
+    ``h`` is multiplied by the factor whether the step is accepted or not;
+    the history shifts only on accept.  Caller masks finished lanes.
+    """
+    order = float(cfg.order)
+    b1 = (cfg.pcoeff + cfg.icoeff + cfg.dcoeff) / order
+    b2 = -(cfg.pcoeff + 2.0 * cfg.dcoeff) / order
+    b3 = cfg.dcoeff / order
+    inv = 1.0 / (err + _ERR_EPS)
+    e1 = jnp.where(state.seeded, state.inv_err1, inv)
+    e2 = jnp.where(state.seeded, state.inv_err2, inv)
+    factor = _limiter(inv ** b1 * e1 ** b2 * e2 ** b3)
+    accept = factor >= cfg.accept_safety
+    new = PIDState(
+        h=state.h * factor,
+        inv_err1=jnp.where(accept, inv, e1),
+        inv_err2=jnp.where(accept, e1, e2),
+        seeded=jnp.ones_like(state.seeded),
+    )
+    return new, accept
+
+
+def error_ratio(x_low: Array, x_high: Array, x_prev: Array,
+                cfg: ErrorControlConfig) -> Array:
+    """Per-sample RMS of (low - high) / (atol + rtol * max(|low|, |prev|)).
+
+    ``x_*`` are (..., D); the reduction is over the trailing state axis, so
+    a batched (B, D) call returns a (B,) error vector (the snippet's global
+    ``norm / sqrt(numel)`` made per-sample).
+    """
+    delta = cfg.atol + cfg.rtol * jnp.maximum(jnp.abs(x_low), jnp.abs(x_prev))
+    r = (x_low - x_high) / delta
+    return jnp.sqrt(jnp.mean(r * r, axis=-1))
+
+
+def adaptive_sample_reference(eps_fn: Callable[[Array, Array], Array],
+                              x: Array, t_min: float, t_max: float,
+                              cfg: ErrorControlConfig) -> tuple[Array, dict]:
+    """Eager single-sample adaptive Heun loop — the compiled scan's oracle.
+
+    ``x`` is one (D,) sample; ``eps_fn`` takes a (1, D) batch and a scalar
+    t (exactly how the compiled engine evaluates each lane under ``vmap``).
+    Runs the identical math to ``repro.engine.adaptive`` one Python
+    iteration at a time and returns ``(x_0, info)`` with the controller
+    counters — tests assert the compiled path reproduces both the state and
+    the exact accept/reject sequence.
+    """
+    if x.ndim != 1:
+        raise ValueError(f"reference loop takes one (D,) sample, "
+                         f"got shape {x.shape}")
+    dtype = x.dtype
+    t = jnp.asarray(t_max, dtype)
+    t_min = jnp.asarray(t_min, dtype)
+    pid = pid_init(1, cfg, dtype)
+    pid = PIDState(pid.h[0], pid.inv_err1[0], pid.inv_err2[0], pid.seeded[0])
+    x_prev = x
+    n_accept = n_reject = 0
+    finished = False
+    accepts: list[bool] = []
+    for _ in range(cfg.max_iters):
+        if finished:
+            break
+        t_next = jnp.maximum(t * jnp.exp(-pid.h), t_min)
+        lands = bool(t_next <= t_min * (1.0 + 1e-6))
+        dt = t_next - t
+        d1 = eps_fn(x[None], t)[0]
+        x_low = x + dt * d1
+        d2 = eps_fn(x_low[None], t_next)[0]
+        x_high = x + dt * 0.5 * (d1 + d2)
+        err = error_ratio(x_low, x_high, x_prev, cfg)
+        pid, accept = pid_propose(pid, err, cfg)
+        accept = bool(accept)
+        accepts.append(accept)
+        if accept:
+            x_prev = x_low
+            x = x_high
+            t = t_next
+            n_accept += 1
+            finished = lands
+        else:
+            n_reject += 1
+    info = {
+        "nfe": 2 * (n_accept + n_reject),
+        "n_accept": n_accept,
+        "n_reject": n_reject,
+        "finished": finished,
+        "t": float(t),
+        "accepts": accepts,
+    }
+    return x, info

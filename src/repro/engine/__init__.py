@@ -8,6 +8,9 @@ shims onto it.  ``SamplingEngine`` (engine.py) compiles Algorithm 2;
 the same mesh and kernels.
 """
 
+from .adaptive import (AdaptiveEngine, adaptive_engine_cache_stats,
+                       clear_adaptive_engine_cache,
+                       get_adaptive_engine_for_spec)
 from .calibration import (CalibrationEngine, calibration_engine_cache_stats,
                           calibration_engine_for_solver,
                           clear_calibration_engine_cache,
@@ -16,14 +19,18 @@ from .engine import (SamplingEngine, clear_engine_cache, engine_cache_stats,
                      engine_for_solver, get_engine, get_engine_for_spec)
 
 __all__ = [
+    "AdaptiveEngine",
     "CalibrationEngine",
     "SamplingEngine",
+    "adaptive_engine_cache_stats",
     "calibration_engine_cache_stats",
     "calibration_engine_for_solver",
+    "clear_adaptive_engine_cache",
     "clear_calibration_engine_cache",
     "clear_engine_cache",
     "engine_cache_stats",
     "engine_for_solver",
     "get_engine",
+    "get_adaptive_engine_for_spec",
     "get_engine_for_spec",
 ]

@@ -1,0 +1,332 @@
+"""AdaptiveEngine: the error-controlled sampling path, compiled.
+
+The fixed-grid ``SamplingEngine`` runs a predetermined schedule; this engine
+runs the embedded Euler/Heun pair with the PID step-size controller from
+``repro.core.error_control`` (the k-diffusion ``dpm_solver_adaptive`` idiom,
+SNIPPETS.md snippet 1), so each *sample* chooses its own step count between
+the spec schedule's endpoints.  The data-dependent loop is compiled as a
+**fixed-iteration ``lax.scan`` with an active mask** — ``max_iters``
+iterations always trace, each lane (sample) masks itself out once a step
+landing on ``t_min`` is accepted — which keeps the program jittable,
+batchable, donation-friendly and mesh-placeable exactly like the fixed
+engine's scan.
+
+NFE accounting is honest per the serve-loop convention: ``info["nfe"]`` is
+``2 * (n_accept + n_reject)`` per sample — every eval the controller
+actually spent, rejected proposals included.  (The device additionally
+burns masked evals for lanes that finish early — a *capacity* cost of the
+fixed-length scan, reported as ``info["scan_evals"]``, never attributed to
+samples.)
+
+PAS on the adaptive grid: when calibrated params are supplied, each
+accepted direction is pushed into a per-sample rolling Q window and every
+step falling into a *corrected cell* of the calibration grid (the fixed
+``spec.ts()`` interval containing the current t) applies that cell's
+coordinates through the same fused kernels the fixed engine uses
+(``ops.fused_pas_step`` folds projection + Euler update into one pass).
+The coordinates were calibrated on the fixed grid, so this is a nearest-
+cell transfer — benchmarks/adaptive_nfe.py quantifies what it buys.
+
+``ErrorControlConfig.enabled`` is False (rtol <= 0) ⇒ every call delegates
+to the spec's fixed-grid engine (the *same cached object* plain specs use),
+so the rtol=0 adaptive path is bit-identical to the fixed engine by
+construction (asserted in tests/test_adaptive.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import error_control as ec_mod
+from repro.core.error_control import PIDState, pid_init, pid_propose
+from repro.core.pca import pas_basis
+from repro.kernels import ops
+
+from .engine import (_CacheStats, _compiled_lookup, _fn_key, _lru_lookup,
+                     get_engine_for_spec)
+
+Array = jax.Array
+EpsFn = Callable[[Array, Array], Array]
+
+__all__ = [
+    "AdaptiveEngine",
+    "get_adaptive_engine_for_spec",
+    "clear_adaptive_engine_cache",
+    "adaptive_engine_cache_stats",
+]
+
+
+class AdaptiveEngine:
+    """One compiled error-controlled sampler bound to a spec.
+
+    Owns no solver tables of its own: the schedule endpoints, calibration
+    grid, dtype, and mesh placement all come from the spec's fixed
+    ``SamplingEngine`` (``self.fixed`` — the shared cache entry the plain
+    spec would use), so an adaptive spec adds exactly one new compiled
+    program, not a parallel engine stack.
+    """
+
+    def __init__(self, spec):
+        ec = spec.error_control
+        if ec is None:
+            raise ValueError(
+                "AdaptiveEngine needs a spec with error_control set; plain "
+                "specs are served by SamplingEngine (get_engine_for_spec)")
+        self.spec = spec
+        self.ec = ec
+        self.fixed = get_engine_for_spec(spec.replace(error_control=None))
+        self.dtype = self.fixed.dtype
+        self.ts = self.fixed.ts                   # (N+1,) descending, float64
+        self.t_min = float(self.ts[-1])
+        self.t_max = float(self.ts[0])
+        self._compiled: dict[Any, tuple[Callable, Callable]] = {}
+
+    # -- cost model ----------------------------------------------------------
+
+    @property
+    def nfe(self) -> int:
+        """Nominal fixed-grid NFE (the spec's); kept for display parity."""
+        return self.fixed.nfe
+
+    @property
+    def evals_per_sample(self) -> int:
+        """Worst-case evals one sample can cost: 2 per scan iteration.
+
+        The honest *realised* cost is per-sample ``info["nfe"]``; this bound
+        is what deadline-slack routing prices an adaptive lane at.
+        """
+        return 2 * self.ec.max_iters
+
+    # -- placement delegation ------------------------------------------------
+
+    def shard(self, x: Array) -> Array:
+        return self.fixed.shard(x)
+
+    @property
+    def mesh(self):
+        return self.fixed.mesh
+
+    # -- compiled program ----------------------------------------------------
+
+    def _build(self, eps_fn: EpsFn, pas_key, donate: bool) -> Callable:
+        """Trace the fixed-iteration masked scan.
+
+        ``pas_key`` is ``None`` (plain) or ``(active tuple, coord_mode,
+        n_basis)`` — static, like the fixed engine's corrected-prefix key.
+        Each lane evaluates eps per-sample (t varies across the batch) via
+        ``vmap`` of the exact single-row call the eager reference makes, so
+        the parity oracle and the compiled path run the same model math.
+        """
+        cfg = self.ec
+        dtype = self.dtype
+        t_min = jnp.asarray(self.t_min, dtype)
+        t_max = jnp.asarray(self.t_max, dtype)
+        constrain = self.fixed._constrain
+        eps_vec = jax.vmap(lambda xb, tb: eps_fn(xb[None, :], tb)[0])
+        # identity multistep row [alpha=1, beta0=1, t=0]: the fused kernel
+        # computes x + nat with per-sample step size folded into nat
+        coef_id = jnp.asarray([1.0, 1.0, 0.0], dtype)
+
+        if pas_key is not None:
+            active, coord_mode, n_basis = pas_key
+            n_steps = len(self.ts) - 1
+            ts_asc = jnp.asarray(self.ts[::-1].copy(), dtype)   # ascending
+            active_tab = jnp.asarray(np.asarray(active, bool))  # (N,)
+            cap_d = n_basis + 1       # rolling window of accepted directions
+
+        def run_core(x_t: Array, coords_tab: Optional[Array]):
+            x0 = constrain(x_t.astype(dtype))
+            b = x0.shape[0]
+            x0_rows = x0[:, None, :]            # (B, 1, D): the Q's x_T row
+
+            def step(carry, _):
+                if pas_key is not None:
+                    x, x_prev, t, pid, alive, n_acc, n_rej, dirs, ndirs = carry
+                else:
+                    x, x_prev, t, pid, alive, n_acc, n_rej = carry
+                hist0 = jnp.zeros((1,) + x.shape, x.dtype)
+                t_next = jnp.maximum(t * jnp.exp(-pid.h), t_min)
+                lands = t_next <= t_min * (1.0 + 1e-6)
+                dt = t_next - t                                  # (B,) <= 0
+                d1 = eps_vec(x, t)
+                dd1 = dt[:, None] * d1
+                x_low = constrain(ops.fused_step(x, dd1, hist0, coef_id))
+
+                if pas_key is not None:
+                    # which calibration-grid cell holds t — is it corrected?
+                    j = jnp.clip(n_steps - jnp.searchsorted(ts_asc, t,
+                                                            side="left"),
+                                 0, n_steps - 1)
+                    gate = active_tab[j] & alive
+                    rows = jnp.concatenate([x0_rows, dirs], 1)   # (B,cap,D)
+                    mask = jnp.concatenate(
+                        [jnp.ones((b, 1), bool),
+                         jnp.arange(cap_d)[None, :] < ndirs[:, None]], axis=1)
+                    u = jax.vmap(pas_basis, in_axes=(0, 0, 0, None))(
+                        rows, mask, d1, n_basis)                 # (B,k,D)
+                    cs = coords_tab[j]                           # (B,k)
+                    if coord_mode == "relative":
+                        cs = cs * jnp.sqrt(jnp.sum(d1 * d1, -1))[:, None]
+                    # fold the per-sample step size into the coordinates so
+                    # the fused projection+update pass lands x_low directly
+                    x_low_c, dd1_c, _ = ops.fused_pas_step(
+                        x, u, cs * dt[:, None], hist0, coef_id,
+                        native_x0=False)
+                    g = gate[:, None]
+                    x_low = jnp.where(g, constrain(x_low_c), x_low)
+                    dd1 = jnp.where(g, dd1_c, dd1)
+
+                d2 = eps_vec(x_low, t_next)
+                x_high = constrain(ops.fused_step(
+                    x, 0.5 * (dd1 + dt[:, None] * d2), hist0, coef_id))
+                err = ec_mod.error_ratio(x_low, x_high, x_prev, cfg)
+                pid_new, accept = pid_propose(pid, err, cfg)
+                acc = accept & alive
+                rej = jnp.logical_and(~accept, alive)
+                am = acc[:, None]
+                x = jnp.where(am, x_high, x)
+                x_prev = jnp.where(am, x_low, x_prev)
+                t = jnp.where(acc, t_next, t)
+                pid = PIDState(*(jnp.where(alive, new, old) for new, old
+                                 in zip(pid_new, pid)))
+                n_acc = n_acc + acc.astype(jnp.int32)
+                n_rej = n_rej + rej.astype(jnp.int32)
+                alive_next = jnp.logical_and(alive, ~(acc & lands))
+                if pas_key is not None:
+                    d_used = dd1 / jnp.where(dt == 0, 1.0, dt)[:, None]
+                    rolled = jnp.roll(dirs, 1, axis=1).at[:, 0].set(d_used)
+                    dirs = jnp.where(acc[:, None, None], rolled, dirs)
+                    ndirs = jnp.minimum(ndirs + acc.astype(jnp.int32), cap_d)
+                    out = (x, x_prev, t, pid, alive_next, n_acc, n_rej,
+                           dirs, ndirs)
+                else:
+                    out = (x, x_prev, t, pid, alive_next, n_acc, n_rej)
+                return out, alive
+
+            t = jnp.full((b,), t_max, dtype)
+            carry = (x0, x0, t, pid_init(b, cfg, dtype),
+                     jnp.ones((b,), bool), jnp.zeros((b,), jnp.int32),
+                     jnp.zeros((b,), jnp.int32))
+            if pas_key is not None:
+                carry = carry + (
+                    jnp.zeros((b, cap_d) + x0.shape[1:], x0.dtype),
+                    jnp.zeros((b,), jnp.int32))
+            carry, trace = jax.lax.scan(step, carry, None,
+                                        length=cfg.max_iters)
+            x, _, t, _, alive, n_acc, n_rej = carry[:7]
+            return x, n_acc, n_rej, t, ~alive, trace
+
+        if pas_key is not None:
+            def run(x_t: Array, coords: Array):
+                return run_core(x_t, coords)
+        else:
+            def run(x_t: Array):
+                return run_core(x_t, None)
+
+        return self.fixed._jit(run, donate)
+
+    # -- public API ----------------------------------------------------------
+
+    def sample_with_info(self, eps_fn: EpsFn, x_t: Array, params=None,
+                         cfg=None, *, donate_x: bool = False
+                         ) -> tuple[Array, dict]:
+        """Adaptive sample + controller info (all device arrays, unread).
+
+        info keys: ``nfe`` (B,) int32 — 2*(accepted+rejected) evals per
+        sample; ``n_accept``/``n_reject`` (B,) int32; ``finished`` (B,)
+        bool — landed on t_min within the iteration budget; ``t`` (B,) —
+        final time (t_min when finished); ``alive_trace`` (max_iters, B)
+        bool — lane activity per scan iteration (monotonically
+        non-increasing per lane); ``scan_evals`` int — evals the device
+        executed for the whole batch including masked lanes.
+        """
+        if not self.ec.enabled:
+            # error control off: the fixed-grid engine *is* the sampler
+            x = self.fixed.sample(eps_fn, x_t, params=params, cfg=cfg,
+                                  donate_x=donate_x)
+            b = int(x.shape[0])
+            nfe = np.full((b,), self.fixed.nfe, np.int32)
+            return x, {"nfe": nfe, "n_accept": None, "n_reject": None,
+                       "finished": np.ones((b,), bool), "t": None,
+                       "alive_trace": None, "scan_evals": b * self.fixed.nfe}
+
+        use_pas = params is not None and bool(np.asarray(params.active).any())
+        if use_pas:
+            if cfg is None:
+                from repro.core.pas import PASConfig
+                cfg = PASConfig()
+            pas_key = (tuple(bool(a) for a in np.asarray(params.active)),
+                       cfg.coord_mode, int(params.coords.shape[1]))
+            key = ("adaptive-pas", _fn_key(eps_fn), pas_key, donate_x)
+            fn = self._get_compiled(
+                key, lambda: self._build(eps_fn, pas_key, donate_x), eps_fn)
+            out = fn(x_t, jnp.asarray(params.coords, self.dtype))
+        else:
+            key = ("adaptive", _fn_key(eps_fn), donate_x)
+            fn = self._get_compiled(
+                key, lambda: self._build(eps_fn, None, donate_x), eps_fn)
+            out = fn(x_t)
+        x, n_acc, n_rej, t, finished, trace = out
+        info = {
+            "nfe": 2 * (n_acc + n_rej),
+            "n_accept": n_acc,
+            "n_reject": n_rej,
+            "finished": finished,
+            "t": t,
+            "alive_trace": trace,
+            "scan_evals": 2 * self.ec.max_iters * int(x.shape[0]),
+        }
+        return x, info
+
+    def sample(self, eps_fn: EpsFn, x_t: Array, params=None, cfg=None, *,
+               donate_x: bool = False) -> Array:
+        """Adaptive sample, info discarded (mirrors the fixed engine API)."""
+        x, _ = self.sample_with_info(eps_fn, x_t, params=params, cfg=cfg,
+                                     donate_x=donate_x)
+        return x
+
+    def _get_compiled(self, key, build, eps_fn) -> Callable:
+        return _compiled_lookup(self._compiled, key, build, eps_fn)
+
+    def compiled_variants(self) -> int:
+        return len(self._compiled)
+
+
+# ---------------------------------------------------------------------------
+# cache (same LRU contract as the fixed-engine cache)
+# ---------------------------------------------------------------------------
+
+_ADAPTIVE: dict[Any, AdaptiveEngine] = {}
+_STATS = _CacheStats()
+_MAX_ADAPTIVE = 32
+
+
+def get_adaptive_engine_for_spec(spec) -> AdaptiveEngine:
+    """Adaptive engine for a spec with ``error_control`` set.
+
+    Keyed on ``spec.engine_key`` — which includes the ``ErrorControlConfig``
+    when present, so two adaptive specs differing only in tolerances get
+    distinct compiled programs while their shared fixed engine stays one
+    cache entry.
+    """
+    if spec.error_control is None:
+        raise ValueError(
+            "spec has no error_control; use get_engine_for_spec for "
+            "fixed-grid sampling")
+    return _lru_lookup(_ADAPTIVE, _STATS, spec.engine_key,
+                       lambda: AdaptiveEngine(spec), _MAX_ADAPTIVE)
+
+
+def clear_adaptive_engine_cache() -> None:
+    _ADAPTIVE.clear()
+    _STATS.hits = _STATS.misses = 0
+
+
+def adaptive_engine_cache_stats() -> dict[str, int]:
+    return {"engines": len(_ADAPTIVE), "hits": _STATS.hits,
+            "misses": _STATS.misses,
+            "compiled_variants": sum(e.compiled_variants()
+                                     for e in _ADAPTIVE.values())}

@@ -26,6 +26,15 @@ fill; ``--stream`` submits requests individually and reports per-request
 chunk arrival + latency percentiles).  ``--scheduler sync`` runs the legacy
 synchronous flush loop (bit-identical responses on the same seeds).
 
+Adaptive NFE: ``--adaptive`` swaps the fixed grid for the error-controlled
+embedded-pair sampler (``--rtol``/``--atol`` set the tolerances); the PAS
+artifact is still calibrated/loaded on the spec's fixed grid and its
+coordinates transfer to the adaptive grid, so one artifact family serves
+both.  ``--nfe-ladder N1,N2,...`` instead serves a ``runtime.ladder``
+ladder: PAS-corrected fixed rungs at those step counts plus a teacher-grade
+lane, auto-populating the ``PipelineRouter`` so deadline slack picks the
+step count per request.
+
 Routing: any repeatable ``--pipeline KEY=SOLVER@NFE`` switches the launch
 onto the multi-lane ``PipelineRouter`` — one submit queue over a zoo of
 samplers sharing the launch schedule/mesh, requests routed by explicit lane
@@ -42,7 +51,8 @@ per-priority latency percentiles and per-lane flush counts.
       [--scheduler {async,sync}] [--deadline-ms MS] [--stream] \
       [--pipeline KEY=SOLVER@NFE ...] [--priority CLASS] \
       [--arrival {upfront,poisson,trace}] [--rate R] [--duration S] \
-      [--trace-file CSV] [--slack-ms-per-eval MS] [--lower-only]
+      [--trace-file CSV] [--slack-ms-per-eval MS] [--lower-only] \
+      [--adaptive] [--rtol R] [--atol A] [--nfe-ladder N1,N2,...]
 """
 from __future__ import annotations
 
@@ -55,9 +65,10 @@ import jax.numpy as jnp
 
 # the serving types resolve through repro.api too (lazily, PEP 562): the
 # public surface is the only import boundary launchers use
-from repro.api import (DiffusionServer, MeshSpec, PASArtifact, Pipeline,
-                       PipelineRouter, Request, ServeConfig, load_trace,
-                       poisson_arrivals, replay)
+from repro.api import (DiffusionServer, ErrorControlConfig, MeshSpec,
+                       NFELadder, PASArtifact, Pipeline, PipelineRouter,
+                       Request, ServeConfig, load_trace, poisson_arrivals,
+                       replay)
 from repro.core import PASConfig, two_mode_gmm
 from repro.engine import engine_cache_stats
 
@@ -79,6 +90,22 @@ def parse_mesh(value: str) -> tuple[int, int]:
         raise argparse.ArgumentTypeError(
             f"mesh axes must be >= 1, got dp={dp} state={state}")
     return dp, state
+
+
+def parse_nfe_list(value: str) -> tuple[int, ...]:
+    """Parse a ``--nfe-ladder N1,N2,...`` rung list."""
+    try:
+        nfes = tuple(int(v) for v in value.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"expected comma-separated integers (e.g. 5,8,10), "
+            f"got {value!r}") from None
+    if not nfes or any(n < 1 for n in nfes):
+        raise argparse.ArgumentTypeError(
+            f"ladder NFEs must be positive integers, got {value!r}")
+    if len(set(nfes)) != len(nfes):
+        raise argparse.ArgumentTypeError(f"duplicate ladder NFEs: {value!r}")
+    return nfes
 
 
 def parse_pipeline(value: str) -> tuple[str, str, int]:
@@ -188,11 +215,34 @@ def _serve_router(args, cfg: ServeConfig, eps_fn, dim: int) -> None:
     if not args.no_pas:
         router.calibrate_all(jax.random.key(0), batch=args.calibrate_batch,
                              artifact_dir=args.artifact_dir)
+    _drive_router(args, router)
+
+
+def _serve_ladder(args, cfg: ServeConfig, eps_fn, dim: int) -> None:
+    """Serve an ``NFELadder`` router (``--nfe-ladder N1,N2,...``).
+
+    The ladder derives PAS-corrected fixed rungs at the given step counts
+    plus an uncorrected teacher-grade lane from the launch spec, all sharing
+    one artifact family under ``--artifact-dir`` (per-rung artifacts + the
+    ``ladder.json`` manifest).
+    """
+    ladder = NFELadder(cfg.to_spec(), nfes=args.nfe_ladder)
+    router = ladder.build_router(
+        eps_fn, dim, cfg=cfg, artifact_dir=args.artifact_dir,
+        use_pas=(False if args.no_pas else None))
+    if not args.no_pas:
+        ladder.calibrate(router, jax.random.key(0),
+                         batch=args.calibrate_batch,
+                         artifact_dir=args.artifact_dir)
+    _drive_router(args, router)
+
+
+def _drive_router(args, router: PipelineRouter) -> None:
+    """Shared router driver: submit per ``--arrival``, drain, report."""
     print("router lanes: " + ", ".join(
         f"{k}={p.spec.solver}@{p.spec.nfe} "
         f"(est {router.lane_cost_ms(k):.0f}ms/row)"
         for k, p in router.pipelines.items()))
-
     try:
         if args.arrival == "upfront":
             handles = [router.submit(r) for r in _router_requests(args)]
@@ -279,6 +329,19 @@ def main() -> None:
     ap.add_argument("--slack-ms-per-eval", type=float, default=1.0,
                     help="router cost model: ms of deadline slack one model "
                          "eval is worth (deadline-slack lane routing)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="error-controlled sampling: the embedded-pair PID "
+                         "solver picks the step count per sample; --nfe only "
+                         "names the PAS calibration grid")
+    ap.add_argument("--rtol", type=float, default=0.05,
+                    help="relative tolerance for --adaptive error control")
+    ap.add_argument("--atol", type=float, default=0.0078,
+                    help="absolute tolerance for --adaptive error control")
+    ap.add_argument("--nfe-ladder", default=None, metavar="N1,N2,...",
+                    type=parse_nfe_list,
+                    help="serve an NFELadder router: PAS rungs at these step "
+                         "counts + a teacher-grade lane, deadline slack "
+                         "picking the rung per request")
     ap.add_argument("--scheduler", default="async",
                     choices=["async", "sync"],
                     help="async: deadline-aware continuous-batching "
@@ -303,6 +366,19 @@ def main() -> None:
                  "combine with --scheduler sync")
     if args.arrival == "trace" and not args.trace_file:
         ap.error("--arrival trace requires --trace-file")
+    if args.nfe_ladder and args.pipelines:
+        ap.error("--nfe-ladder builds its own router lanes; it cannot "
+                 "combine with --pipeline")
+    if args.nfe_ladder and args.scheduler != "async":
+        ap.error("--nfe-ladder routes through the async scheduler; it "
+                 "cannot combine with --scheduler sync")
+    if args.adaptive and (args.pipelines or args.nfe_ladder):
+        ap.error("--adaptive is per-sample step-count adaptation on the "
+                 "single-pipeline server; router lanes are fixed rungs "
+                 "(use --nfe-ladder for per-request adaptation)")
+    if args.adaptive and args.lower_only:
+        ap.error("--lower-only compiles the fixed-grid program; it cannot "
+                 "combine with --adaptive")
     if args.pipelines is not None:
         keys = [k for k, _, _ in args.pipelines]
         if len(set(keys)) != len(keys):
@@ -340,13 +416,29 @@ def main() -> None:
     if args.pipelines:
         _serve_router(args, cfg, eps_fn, dim)
         return
+    if args.nfe_ladder:
+        _serve_ladder(args, cfg, eps_fn, dim)
+        return
 
     if args.no_pas:
-        server = DiffusionServer(eps_fn, dim, cfg)
+        pipe = Pipeline.from_spec(cfg.to_spec(), eps_fn, dim=dim)
     else:
+        # calibration runs on the fixed grid either way: with --adaptive the
+        # learned coordinates transfer to the adaptive grid, so the same
+        # artifact family serves both samplers
         pipe = _calibrated_pipeline(cfg, eps_fn, dim, args.artifact_dir,
                                     calibrate_batch=args.calibrate_batch)
-        server = DiffusionServer.from_pipeline(pipe, cfg)
+    if args.adaptive:
+        import dataclasses
+        ec = ErrorControlConfig(rtol=args.rtol, atol=args.atol)
+        adaptive = Pipeline.from_spec(pipe.spec.replace(error_control=ec),
+                                      eps_fn, dim=dim)
+        adaptive.set_params(pipe.params, pipe.diag)
+        pipe = adaptive
+        cfg = dataclasses.replace(cfg, spec=pipe.spec)
+        print(f"adaptive sampling: rtol={ec.rtol} atol={ec.atol} "
+              f"(worst case {pipe.evals_per_sample} evals/sample)")
+    server = DiffusionServer.from_pipeline(pipe, cfg)
 
     reqs = [Request(seed=i, n_samples=16) for i in range(args.requests)]
     if args.stream:
@@ -369,6 +461,11 @@ def main() -> None:
               f"{server.stats.get('flushes_drain', 0)} drain flushes)")
     else:
         outs = server.serve(reqs)
+    if getattr(pipe, "is_adaptive", False) and server.stats["samples"]:
+        mean_nfe = server.stats["nfe_total"] / (server.stats["samples"]
+                                                + server.stats["padded_samples"])
+        print(f"adaptive NFE: {mean_nfe:.1f} evals/sample mean "
+              f"(bound {pipe.evals_per_sample})")
     print(f"served {server.stats['samples']} samples / "
           f"{server.stats['requests']} requests in "
           f"{server.stats['batches']} batches "

@@ -1,0 +1,163 @@
+"""NFELadder: one artifact family -> a deadline-graded rung of pipelines.
+
+The adaptive-NFE serving story has two halves.  ``repro.engine.adaptive``
+adapts the step count *inside* one sample via error control; this module
+adapts it *across* requests: from ONE base ``SamplerSpec`` it derives a
+ladder of fixed-grid rungs — several PAS-corrected low-NFE lanes plus an
+uncorrected teacher-grade lane — and populates a ``PipelineRouter`` with
+them, so deadline-slack routing picks the step count per request (tight
+deadline -> few steps + PAS correction, slack -> teacher-grade NFE).
+
+All rungs share the base spec's schedule family, dtype, teacher, PAS config
+and mesh; only ``nfe`` (and, for the teacher rung, the solver) varies.  The
+rungs therefore form a single *artifact family*: ``calibrate`` writes one
+directory holding a per-rung ``PASArtifact`` plus a ``ladder.json``
+manifest, and ``from_manifest`` rebuilds the identical ladder (and router)
+from that directory alone.
+
+    ladder = NFELadder(SamplerSpec(solver="ddim", nfe=10), nfes=(5, 8, 10))
+    router = ladder.build_router(eps_fn, dim=D)
+    ladder.calibrate(router, key=jax.random.key(0), artifact_dir=family_dir)
+    router.submit(Request(seed=0, n_samples=4, deadline_ms=10))  # few steps
+    router.submit(Request(seed=1, n_samples=64))                 # teacher
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Iterable, Optional
+
+import jax
+
+from repro.api.spec import SamplerSpec
+
+__all__ = ["NFELadder"]
+
+Array = jax.Array
+
+#: Manifest filename inside the artifact-family directory.
+MANIFEST = "ladder.json"
+_MANIFEST_VERSION = 1
+
+#: Router lane key for the uncorrected teacher-grade rung.
+TEACHER_KEY = "teacher"
+
+
+class NFELadder:
+    """Derive (NFE, PAS-artifact) router lanes from one base spec.
+
+    ``nfes`` lists the corrected rung step counts (ascending is
+    conventional but not required — lane order follows the given order);
+    each becomes a lane ``"nfe<n>"`` running ``base_spec.replace(nfe=n)``
+    with PAS on.  ``teacher_rung=True`` appends a ``"teacher"`` lane
+    running the base spec's own teacher solver/NFE with PAS off — the
+    quality ceiling the cheap rungs were calibrated against.
+
+    Any ``error_control`` on the base spec is stripped: ladder rungs are
+    fixed grids by construction (the per-sample adaptive engine is the
+    orthogonal half of adaptive NFE).
+    """
+
+    def __init__(self, base_spec: SamplerSpec, nfes: Iterable[int] = (5, 8, 10),
+                 *, teacher_rung: bool = True):
+        base = base_spec.replace(error_control=None)
+        nfes = [int(n) for n in nfes]
+        if not nfes:
+            raise ValueError("NFELadder needs at least one rung NFE")
+        if len(set(nfes)) != len(nfes):
+            raise ValueError(f"duplicate rung NFEs: {nfes}")
+        if any(n < 1 for n in nfes):
+            raise ValueError(f"rung NFEs must be >= 1, got {nfes}")
+        self.base_spec = base
+        self.nfes = tuple(nfes)
+        self.teacher_rung = bool(teacher_rung)
+        self.specs: dict[str, SamplerSpec] = {
+            f"nfe{n}": base.replace(nfe=n) for n in nfes}
+        self.use_pas: dict[str, bool] = {k: True for k in self.specs}
+        if teacher_rung:
+            if TEACHER_KEY in self.specs:
+                raise ValueError(f"rung key {TEACHER_KEY!r} is reserved")
+            self.specs[TEACHER_KEY] = base.replace(
+                solver=base.teacher.solver, nfe=base.teacher.nfe)
+            self.use_pas[TEACHER_KEY] = False
+
+    @property
+    def keys(self) -> list[str]:
+        return list(self.specs)
+
+    # -- router construction -------------------------------------------------
+
+    def build_router(self, eps_fn, dim: int, *, cfg=None,
+                     artifact_dir=None, use_pas=None, **kw):
+        """A ``PipelineRouter`` with one lane per rung.
+
+        With ``artifact_dir``, rungs whose ``<dir>/<key>/`` holds a matching
+        ``PASArtifact`` load their calibrated floats (``from_specs``
+        semantics); others serve uncorrected until ``calibrate``.
+        ``use_pas`` (bool or per-key mapping) overrides the ladder's own
+        per-rung map — ``False`` serves every rung uncorrected.
+        """
+        from .router import PipelineRouter
+        if use_pas is None:
+            use_pas = dict(self.use_pas)
+        return PipelineRouter.from_specs(
+            self.specs, eps_fn, dim, artifact_dir=artifact_dir, cfg=cfg,
+            use_pas=use_pas, **kw)
+
+    def calibrate(self, router, key: Array, batch: int = 256,
+                  artifact_dir=None) -> "NFELadder":
+        """Calibrate every PAS rung lane of ``router`` (teacher rung skipped
+        — it serves uncorrected) and persist the artifact family.
+
+        With ``artifact_dir``, each calibrated rung saves its
+        ``PASArtifact`` under ``<dir>/<key>/`` and the ladder manifest is
+        written alongside, making the directory a self-contained family:
+        ``NFELadder.from_manifest(dir)`` + ``build_router(...,
+        artifact_dir=dir)`` rebuilds the calibrated router.
+        """
+        for name in self.keys:
+            if not self.use_pas[name]:
+                continue
+            pipe = router.pipelines[name]
+            if not pipe.calibrated:
+                pipe.calibrate(key=key, batch=batch)
+            if artifact_dir is not None:
+                pipe.save(Path(artifact_dir) / name)
+        if artifact_dir is not None:
+            self.save_manifest(artifact_dir)
+        return self
+
+    # -- persistence ---------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "version": _MANIFEST_VERSION,
+            "base_spec": self.base_spec.to_dict(),
+            "nfes": list(self.nfes),
+            "teacher_rung": self.teacher_rung,
+            "rungs": {k: {"use_pas": self.use_pas[k]} for k in self.keys},
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "NFELadder":
+        if d.get("version") != _MANIFEST_VERSION:
+            raise ValueError(
+                f"unsupported ladder manifest version {d.get('version')!r}")
+        return cls(SamplerSpec.from_dict(d["base_spec"]), d["nfes"],
+                   teacher_rung=d["teacher_rung"])
+
+    def save_manifest(self, artifact_dir) -> Path:
+        path = Path(artifact_dir)
+        path.mkdir(parents=True, exist_ok=True)
+        out = path / MANIFEST
+        out.write_text(json.dumps(self.to_dict(), indent=2, sort_keys=True))
+        return out
+
+    @classmethod
+    def from_manifest(cls, artifact_dir) -> "NFELadder":
+        path = Path(artifact_dir) / MANIFEST
+        return cls.from_dict(json.loads(path.read_text()))
+
+    def __repr__(self) -> str:
+        rungs = ", ".join(self.keys)
+        return (f"NFELadder({self.base_spec.solver} family, rungs=[{rungs}])")

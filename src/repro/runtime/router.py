@@ -20,7 +20,11 @@ Routing, per request:
   slack (tight deadline ⇒ low-NFE PAS pipeline); a request with no
   deadline, or slack enough for anything, gets the most expensive
   (teacher-grade) lane.  The cost model is deliberately simple and
-  deterministic: ``engine.nfe * cfg.slack_ms_per_eval``.
+  deterministic: ``pipeline.evals_per_sample * cfg.slack_ms_per_eval``,
+  where ``evals_per_sample`` counts *total model evals per sample* — a
+  two-eval solver at N steps prices as 2N, an adaptive lane as its compiled
+  worst case ``2 * max_iters`` (the slack router must guarantee the
+  deadline, so it prices the bound, not the optimistic mean).
 
 Priorities ride the underlying scheduler: ``interactive`` chunks pack ahead
 of ``batch`` backfill when any lane's flush forms (see
@@ -98,7 +102,7 @@ class PipelineRouter(ServeScheduler):
         # slack routing ranks lanes by compute cost (total model evals per
         # row); ties keep zoo order so routing stays deterministic
         self._by_cost = sorted(
-            lanes, key=lambda ln: (ln.pipeline.engine.nfe, ln.key))
+            lanes, key=lambda ln: (_lane_evals(ln), ln.key))
         self.pipeline = lanes[0].pipeline    # base-class compat: "a" pipeline
         self.max_batch = lanes[0].max_batch
         self._init_core(lanes, deadline_ms=cfg.deadline_ms,
@@ -169,9 +173,13 @@ class PipelineRouter(ServeScheduler):
         return list(self._lanes)
 
     def lane_cost_ms(self, key: str) -> float:
-        """The slack router's estimated per-row cost for one lane."""
-        return (self._lanes[key].pipeline.engine.nfe
-                * self.cfg.slack_ms_per_eval)
+        """The slack router's estimated per-row cost for one lane.
+
+        Priced in total model evals per sample (``Pipeline.evals_per_sample``
+        — 2N for a two-eval solver at N steps, the compiled ``2 * max_iters``
+        worst case for an adaptive lane), times the config's ms/eval.
+        """
+        return _lane_evals(self._lanes[key]) * self.cfg.slack_ms_per_eval
 
     # -- routing -------------------------------------------------------------
 
@@ -193,7 +201,7 @@ class PipelineRouter(ServeScheduler):
         if deadline_ms is None:
             return self._by_cost[-1]
         for lane in reversed(self._by_cost):
-            if (lane.pipeline.engine.nfe * self.cfg.slack_ms_per_eval
+            if (_lane_evals(lane) * self.cfg.slack_ms_per_eval
                     <= deadline_ms):
                 return lane
         return self._by_cost[0]              # nothing fits: cheapest lane
@@ -203,6 +211,18 @@ class PipelineRouter(ServeScheduler):
         handles = [self.submit(r) for r in requests]
         self.drain()
         return [h.result() for h in handles]
+
+
+def _lane_evals(lane: _Lane) -> int:
+    """Total model evals one sample costs on this lane (the routing unit).
+
+    ``Pipeline.evals_per_sample`` when available; bare-engine fallbacks
+    (tests passing minimal pipeline doubles) use ``engine.nfe``, which
+    already counts evals rather than steps.
+    """
+    pipe = lane.pipeline
+    evals = getattr(pipe, "evals_per_sample", None)
+    return int(evals if evals is not None else pipe.engine.nfe)
 
 
 def _bind_lane_runner(run_batch: Callable[[str, Array], Array],

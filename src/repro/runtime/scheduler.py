@@ -216,6 +216,7 @@ class _Flight:
     y: Array                          # device future (JAX async dispatch)
     chunks: list[_Chunk]
     n_rows: int                       # real rows (pad excluded)
+    evals: Optional[Array] = None     # per-row model evals (adaptive lanes)
 
 
 class ServeScheduler:
@@ -284,6 +285,15 @@ class ServeScheduler:
 
     @staticmethod
     def _default_run_batch(pipeline, use_pas: bool) -> Callable[[Array], Array]:
+        if getattr(pipeline, "is_adaptive", False):
+            # adaptive lanes return (y, per-row evals): the scheduler defers
+            # NFE accounting to retire time, when the actual counts are known
+            def run(x_t: Array):
+                y, _, evals = pipeline.sample_async(
+                    x_t, use_pas=use_pas, donate_x=True, want_evals=True)
+                return y, evals
+            return run
+
         def run(x_t: Array) -> Array:
             y, _ = pipeline.sample_async(x_t, use_pas=use_pas, donate_x=True)
             return y
@@ -504,15 +514,21 @@ class ServeScheduler:
             x_t, pad = lane.pipeline.mesh_spec.pad_rows(x_t)
             if len(self._in_flight) >= self.max_in_flight:
                 self._retire(block=True)   # back-pressure: oldest flush lands
-            y = lane.run_batch(x_t)        # async dispatch: returns the future
+            out = lane.run_batch(x_t)      # async dispatch: returns the future
         except BaseException as exc:
             for c in chunks:
                 c.handle._fail(exc)
             raise
-        self._in_flight.append(_Flight(y, chunks, n_rows))
+        # adaptive lanes return (y, per-row evals); the per-row counts ride
+        # the flight and land in nfe_total at retire time (the actual spend
+        # is data-dependent and unknown at dispatch)
+        y, evals = out if isinstance(out, tuple) else (out, None)
+        self._in_flight.append(_Flight(y, chunks, n_rows, evals=evals))
         with self._lock:
             self.stats["batches"] += 1
-            self.stats["nfe_total"] += (n_rows + pad) * lane.pipeline.engine.nfe
+            if evals is None:
+                self.stats["nfe_total"] += ((n_rows + pad)
+                                            * lane.pipeline.engine.nfe)
             self.stats["padded_samples"] += pad
             self.stats[f"flushes_{reason}"] += 1
             self.stats["lane_batches"][lane.key] += 1
@@ -534,6 +550,11 @@ class ServeScheduler:
                 for c in fl.chunks:
                     c.handle._fail(exc)
                 raise
+            if fl.evals is not None:
+                # honest adaptive NFE: evals actually executed, pad rows
+                # included (the device burned them regardless)
+                with self._lock:
+                    self.stats["nfe_total"] += int(np.asarray(fl.evals).sum())
             off = 0
             for c in fl.chunks:
                 c.handle._push(x0[off:off + c.n])

@@ -179,11 +179,17 @@ class DiffusionServer:
         """Hot-swap the ~10 learned parameters (no model reload)."""
         self.pipeline.set_params(params)
 
-    def _run_batch(self, x_t: jnp.ndarray) -> jnp.ndarray:
+    def _run_batch(self, x_t: jnp.ndarray):
         # the flush buffer is staged fresh per flush and never reused, so it
         # is donated to the compiled scan (free initial-state buffer); the
         # return value is the device future (JAX async dispatch) — sync
-        # callers block via np.asarray, the scheduler defers the read
+        # callers block via np.asarray, the scheduler defers the read.
+        # Adaptive pipelines return (y, per-row evals) so the scheduler can
+        # account the data-dependent NFE at retire time.
+        if self.pipeline.is_adaptive:
+            y, _, evals = self.pipeline.sample_async(
+                x_t, use_pas=self.cfg.use_pas, donate_x=True, want_evals=True)
+            return y, evals
         y, _ = self.pipeline.sample_async(x_t, use_pas=self.cfg.use_pas,
                                           donate_x=True)
         return y
@@ -268,13 +274,19 @@ class DiffusionServer:
             x_t = jnp.concatenate([x for _, x in pending], axis=0)
             n_rows = int(x_t.shape[0])
             x_t, pad = mesh.pad_rows(x_t)   # pad-and-mask, DP-divisible
-            x0 = np.asarray(self._run_batch(x_t))
+            out = self._run_batch(x_t)
+            y, evals = out if isinstance(out, tuple) else (out, None)
+            x0 = np.asarray(y)
             off = 0
             for (i, _), n in zip(pending, sizes):
                 parts[i].append(x0[off:off + n])
                 off += n
             self.stats["batches"] += 1
-            self.stats["nfe_total"] += (n_rows + pad) * self.engine.nfe
+            if evals is None:
+                self.stats["nfe_total"] += (n_rows + pad) * self.engine.nfe
+            else:
+                # adaptive: count the evals actually executed per padded row
+                self.stats["nfe_total"] += int(np.asarray(evals).sum())
             self.stats["padded_samples"] += pad
             pending.clear()
             sizes.clear()

@@ -1,0 +1,280 @@
+"""Adaptive-NFE subsystem: error-controlled engine, spec plumbing, serving.
+
+The acceptance contract of the adaptive engine (``repro.engine.adaptive``)
+and its spec/serve integration:
+
+* **spec plumbing** — ``ErrorControlConfig`` JSON round-trips inside
+  ``SamplerSpec``; ``engine_key`` stays the legacy 5-tuple when
+  ``error_control`` is None (existing artifacts/caches unaffected) and
+  extends to a 6-tuple when set;
+* **rtol=0 bit-identity** — a disabled config delegates to the *same
+  compiled object* as the fixed-grid engine, so outputs are bit-identical,
+  plain and PAS-corrected alike;
+* **controller parity** — the compiled fixed-iteration masked scan
+  reproduces the eager single-sample reference loop exactly: same
+  accept/reject counters, matching states;
+* **honest accounting** — per-sample ``nfe == 2 * (n_accept + n_reject)``,
+  bounded by the scan capacity; the active-mask trace is monotone (no lane
+  resumes after finishing); the serve stack's ``nfe_total`` equals the sum
+  of per-sample counters, not a nominal constant.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (DiffusionServer, ErrorControlConfig, Pipeline,
+                       Request, SamplerSpec, ServeConfig)
+from repro.core import analytic, pas
+from repro.core.error_control import adaptive_sample_reference
+from repro.engine import get_adaptive_engine_for_spec, get_engine_for_spec
+
+DIM = 16
+NFE = 8
+
+
+@pytest.fixture(scope="module")
+def gmm():
+    return analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+
+
+def _spec(rtol=0.05, **kw) -> SamplerSpec:
+    return SamplerSpec(solver="ddim", nfe=NFE,
+                       error_control=ErrorControlConfig(rtol=rtol, **kw))
+
+
+def _x(gmm, n=6, seed=0):
+    return gmm.sample_prior(jax.random.key(seed), n, 80.0)
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_error_control_config_roundtrip():
+    ec = ErrorControlConfig(rtol=0.03, atol=0.01, pcoeff=0.2, max_iters=32)
+    assert ErrorControlConfig.from_dict(
+        json.loads(json.dumps(ec.to_dict()))) == ec
+    assert ec.enabled
+    assert not ErrorControlConfig(rtol=0.0).enabled
+
+
+@pytest.mark.parametrize("bad", [
+    dict(h_init=0.0), dict(accept_safety=0.0), dict(accept_safety=3.0),
+    dict(order=0), dict(max_iters=0), dict(rtol=0.1, atol=-1.0),
+])
+def test_error_control_config_validation(bad):
+    with pytest.raises(ValueError):
+        ErrorControlConfig(**bad)
+
+
+def test_spec_roundtrip_with_error_control():
+    spec = _spec(rtol=0.02, max_iters=24)
+    back = SamplerSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.error_control == spec.error_control
+
+
+def test_engine_key_stable_without_error_control():
+    """Fixed-NFE specs keep the legacy 5-tuple key: existing artifacts and
+    engine-cache entries are untouched by the adaptive field."""
+    spec = SamplerSpec(solver="ddim", nfe=NFE)
+    key = spec.engine_key
+    assert len(key) == 5
+    assert key == (spec.solver, spec.nfe, spec.schedule, spec.dtype,
+                   spec.mesh)
+    adaptive_key = _spec().engine_key
+    assert len(adaptive_key) == 6
+    assert adaptive_key[:5] == key
+
+
+def test_spec_from_dict_legacy_payload():
+    """A pre-adaptive serialized spec (no error_control key) still loads."""
+    d = SamplerSpec(solver="ddim", nfe=NFE).to_dict()
+    d.pop("error_control", None)
+    spec = SamplerSpec.from_dict(d)
+    assert spec.error_control is None
+    assert len(spec.engine_key) == 5
+
+
+# ---------------------------------------------------------------------------
+# rtol=0 bit-identity with the fixed-grid engine
+# ---------------------------------------------------------------------------
+
+
+def test_rtol_zero_delegates_to_fixed_engine_bit_identical(gmm):
+    spec = _spec(rtol=0.0)
+    eng = get_adaptive_engine_for_spec(spec)
+    fixed = get_engine_for_spec(spec.replace(error_control=None))
+    assert eng.fixed is fixed          # same compiled object, by construction
+    x_t = _x(gmm)
+    y_a = eng.sample(gmm.eps, x_t)
+    y_f = fixed.sample(gmm.eps, x_t)
+    assert bool(jnp.all(y_a == y_f))
+
+
+def test_rtol_zero_bit_identical_with_pas(gmm):
+    active = np.zeros(NFE, bool)
+    active[[1, 3]] = True
+    coords = np.zeros((NFE, 4), np.float32)
+    coords[1] = [1.0, 0.05, 0.0, 0.0]
+    coords[3] = [0.98, -0.04, 0.0, 0.0]
+    params = pas.PASParams(active=active, coords=jnp.asarray(coords))
+    spec = _spec(rtol=0.0)
+    x_t = _x(gmm)
+    y_a = get_adaptive_engine_for_spec(spec).sample(
+        gmm.eps, x_t, params=params, cfg=spec.pas)
+    y_f = get_engine_for_spec(spec.replace(error_control=None)).sample(
+        gmm.eps, x_t, params=params, cfg=spec.pas)
+    assert bool(jnp.all(y_a == y_f))
+
+
+# ---------------------------------------------------------------------------
+# the compiled scan: mask monotonicity, honest counters, reference parity
+# ---------------------------------------------------------------------------
+
+
+def test_active_mask_monotone_and_counters_consistent(gmm):
+    eng = get_adaptive_engine_for_spec(_spec())
+    x, info = eng.sample_with_info(gmm.eps, _x(gmm, n=8))
+    nfe = np.asarray(info["nfe"])
+    acc = np.asarray(info["n_accept"])
+    rej = np.asarray(info["n_reject"])
+    trace = np.asarray(info["alive_trace"])       # (max_iters, B)
+    ec = _spec().error_control
+    # nfe counts exactly the evals executed: 2 per embedded step, accepted
+    # or rejected, never the scan's fixed-iteration capacity
+    assert np.array_equal(nfe, 2 * (acc + rej))
+    assert np.all(nfe <= 2 * ec.max_iters)
+    assert np.all(nfe >= 2)
+    assert info["scan_evals"] == 2 * ec.max_iters * 8
+    # once a lane goes inactive it never resumes
+    alive_int = trace.astype(np.int8)
+    assert np.all(np.diff(alive_int, axis=0) <= 0)
+    # iterations executed per lane == accepted + rejected proposals
+    assert np.array_equal(alive_int.sum(axis=0), acc + rej)
+    assert np.all(np.asarray(info["finished"]))
+    assert np.allclose(np.asarray(info["t"]), eng.t_min)
+
+
+def test_compiled_matches_eager_reference(gmm):
+    """The compiled masked scan reproduces the eager per-sample loop: the
+    exact accept/reject sequence and matching final states."""
+    spec = _spec()
+    eng = get_adaptive_engine_for_spec(spec)
+    x_t = _x(gmm, n=4, seed=3)
+    x, info = eng.sample_with_info(gmm.eps, x_t)
+    acc = np.asarray(info["n_accept"])
+    rej = np.asarray(info["n_reject"])
+    for b in range(x_t.shape[0]):
+        x_ref, ref = adaptive_sample_reference(
+            gmm.eps, x_t[b], float(eng.t_min), float(eng.t_max),
+            spec.error_control)
+        assert ref["finished"]
+        assert (acc[b], rej[b]) == (ref["n_accept"], ref["n_reject"]), b
+        np.testing.assert_allclose(np.asarray(x[b]), np.asarray(x_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_adaptive_converges_to_teacher(gmm):
+    """Tightening rtol drives the adaptive solution toward the high-NFE
+    teacher while spending more evals."""
+    x_t = _x(gmm, n=8, seed=7)
+    ref = Pipeline.from_spec(SamplerSpec(solver="heun", nfe=80), gmm.eps,
+                             dim=DIM).sample(x_t, use_pas=False)
+
+    def point(rtol):
+        eng = get_adaptive_engine_for_spec(_spec(rtol=rtol, max_iters=96))
+        x, info = eng.sample_with_info(gmm.eps, x_t)
+        err = float(jnp.mean(jnp.linalg.norm(x - ref, axis=-1)))
+        return err, float(np.asarray(info["nfe"]).mean())
+
+    err_loose, nfe_loose = point(0.05)
+    err_tight, nfe_tight = point(0.005)
+    assert err_tight < err_loose
+    assert nfe_tight > nfe_loose
+    assert err_tight < 0.2
+
+
+def test_pas_correction_on_adaptive_grid(gmm):
+    """Gated coords change the adaptive output; all-inactive params don't."""
+    spec = _spec()
+    eng = get_adaptive_engine_for_spec(spec)
+    x_t = _x(gmm)
+    plain, _ = eng.sample_with_info(gmm.eps, x_t)
+    active = np.zeros(NFE, bool)
+    active[[2, 4]] = True
+    coords = np.zeros((NFE, 4), np.float32)
+    coords[2] = [1.0, 0.05, 0.0, 0.0]
+    coords[4] = [0.97, -0.03, 0.02, 0.0]
+    params = pas.PASParams(active=active, coords=jnp.asarray(coords))
+    corrected, info = eng.sample_with_info(gmm.eps, x_t, params=params,
+                                           cfg=spec.pas)
+    assert not np.allclose(np.asarray(plain), np.asarray(corrected))
+    assert np.all(np.asarray(info["finished"]))
+    inert = pas.PASParams(active=np.zeros(NFE, bool),
+                          coords=jnp.zeros((NFE, 4), jnp.float32))
+    uncorrected, _ = eng.sample_with_info(gmm.eps, x_t, params=inert,
+                                          cfg=spec.pas)
+    np.testing.assert_allclose(np.asarray(plain), np.asarray(uncorrected),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pipeline + serve integration
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_adaptive_dispatch_and_evals(gmm):
+    fixed = Pipeline.from_spec(SamplerSpec(solver="heun", nfe=NFE), gmm.eps,
+                               dim=DIM)
+    assert not fixed.is_adaptive
+    assert fixed.evals_per_sample == 2 * NFE       # evals, not steps
+    pipe = Pipeline.from_spec(_spec(), gmm.eps, dim=DIM)
+    assert pipe.is_adaptive
+    assert pipe.evals_per_sample == 2 * pipe.spec.error_control.max_iters
+    x_t = _x(gmm)
+    y = pipe.sample(x_t, use_pas=False)
+    assert y.shape == x_t.shape
+    info = pipe.last_adaptive_info
+    assert info is not None and np.all(np.asarray(info["finished"]))
+    y2, valid, evals = pipe.sample_async(_x(gmm), use_pas=False,
+                                         want_evals=True)
+    assert valid.all() and evals.shape[0] == y2.shape[0]
+    assert np.array_equal(np.asarray(evals), np.asarray(info["nfe"]))
+
+
+def test_serve_nfe_total_sums_actual_evals(gmm):
+    """The serve stack's nfe_total is the per-sample honest counter summed at
+    retire time, identical through the async scheduler and the sync loop."""
+    pipe = Pipeline.from_spec(_spec(), gmm.eps, dim=DIM)
+    reqs = [Request(seed=0, n_samples=4), Request(seed=1, n_samples=3)]
+    srv = DiffusionServer.from_pipeline(pipe)
+    try:
+        outs = srv.serve(reqs)
+    finally:
+        srv.close()
+    sync = DiffusionServer.from_pipeline(
+        pipe, ServeConfig.for_spec(pipe.spec, scheduler="sync"))
+    outs_sync = sync.serve(reqs)
+    assert srv.stats["nfe_total"] == sync.stats["nfe_total"] > 0
+    # every flushed row ran a data-dependent number of evals; the total can
+    # never be the fixed-grid nominal (7 rows x nfe) by construction here
+    assert srv.stats["nfe_total"] >= 2 * srv.stats["samples"]
+    for a, b in zip(outs, outs_sync):
+        assert np.array_equal(a, b)
+
+
+def test_disabled_error_control_pipeline_matches_plain(gmm):
+    """A spec carrying a disabled (rtol=0) config samples bit-identically to
+    one carrying none, through the Pipeline surface."""
+    x_t = _x(gmm)
+    y_none = Pipeline.from_spec(SamplerSpec(solver="ddim", nfe=NFE), gmm.eps,
+                                dim=DIM).sample(x_t, use_pas=False)
+    pipe = Pipeline.from_spec(_spec(rtol=0.0), gmm.eps, dim=DIM)
+    assert not pipe.is_adaptive        # disabled config = fixed-grid path
+    y_zero = pipe.sample(x_t, use_pas=False)
+    assert np.array_equal(np.asarray(y_none), np.asarray(y_zero))

@@ -461,3 +461,142 @@ def test_pipeline_path_is_warning_free(gmm):
             router.serve([Request(seed=0, n_samples=2)])
         finally:
             router.close()
+
+
+# ---------------------------------------------------------------------------
+# lane cost model: total evals per sample (PR-7)
+# ---------------------------------------------------------------------------
+
+
+def test_lane_cost_counts_evals_not_steps(gmm):
+    """A two-eval solver at N steps prices as 2N evals in the slack model —
+    the docstring's 'total model evals per sample' contract, regression per
+    the cost-model audit."""
+    router = PipelineRouter({"euler": _pipe(gmm, 4, solver="ddim"),
+                             "heun": _pipe(gmm, 4, solver="heun")},
+                            cfg=ServeConfig(max_batch=8, use_pas=False),
+                            use_pas=False)
+    try:
+        assert router.lane_cost_ms("euler") == 4 * 1.0
+        assert router.lane_cost_ms("heun") == 2 * 4 * 1.0
+        # a 6ms deadline fits euler (4) but not heun (8)
+        h = router.submit(Request(seed=0, n_samples=1, deadline_ms=6.0))
+        assert h.lane == "euler"
+        router.drain(timeout=60)
+    finally:
+        router.close()
+
+
+def test_adaptive_lane_priced_at_worst_case(gmm):
+    """An adaptive lane routes on its compiled 2*max_iters bound: the slack
+    router must guarantee the deadline, so it prices capacity, not the
+    optimistic mean."""
+    from repro.api import ErrorControlConfig
+
+    adaptive = Pipeline.from_spec(
+        SamplerSpec(solver="ddim", nfe=4,
+                    error_control=ErrorControlConfig(rtol=0.05,
+                                                     max_iters=16)),
+        gmm.eps, dim=DIM)
+    router = PipelineRouter({"fast": _pipe(gmm, FAST_NFE),
+                             "adaptive": adaptive},
+                            cfg=ServeConfig(max_batch=8, use_pas=False),
+                            use_pas=False)
+    try:
+        assert router.lane_cost_ms("adaptive") == 2 * 16 * 1.0
+        # 10ms slack fits fast (2) but not the adaptive bound (32)
+        h = router.submit(Request(seed=0, n_samples=1, deadline_ms=10.0))
+        assert h.lane == "fast"
+        # no deadline: the adaptive lane is the most expensive one
+        h2 = router.submit(Request(seed=1, n_samples=1))
+        assert h2.lane == "adaptive"
+        router.drain(timeout=60)
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# NFELadder: rungs from one artifact family
+# ---------------------------------------------------------------------------
+
+
+def test_nfe_ladder_rungs_and_routing(gmm, tmp_path):
+    from repro.api import NFELadder
+    from repro.api.spec import TeacherSpec
+
+    base = SamplerSpec(solver="ddim", nfe=8,
+                       teacher=TeacherSpec(solver="heun", nfe=16))
+    ladder = NFELadder(base, nfes=(2, 4))
+    assert ladder.keys == ["nfe2", "nfe4", "teacher"]
+    assert ladder.specs["nfe2"].nfe == 2
+    assert ladder.specs["teacher"].solver == "heun"
+    assert ladder.use_pas == {"nfe2": True, "nfe4": True, "teacher": False}
+
+    router = ladder.build_router(gmm.eps, DIM,
+                                 cfg=ServeConfig(max_batch=8, use_pas=False),
+                                 use_pas=False)
+    try:
+        # teacher lane = heun@16 = 32 evals; tight slack routes to a rung
+        assert router.lane_cost_ms("teacher") == 32.0
+        h_tight = router.submit(Request(seed=0, n_samples=1, deadline_ms=3.0))
+        h_slack = router.submit(Request(seed=1, n_samples=1))
+        assert h_tight.lane == "nfe2"
+        assert h_slack.lane == "teacher"
+        router.drain(timeout=60)
+    finally:
+        router.close()
+
+    path = ladder.save_manifest(tmp_path)
+    assert path.name == "ladder.json"
+    back = NFELadder.from_manifest(tmp_path)
+    assert back.specs == ladder.specs
+    assert back.use_pas == ladder.use_pas
+
+
+def test_nfe_ladder_calibrates_pas_rungs_only(gmm, tmp_path):
+    """`calibrate` fills every PAS rung, skips the teacher lane, persists
+    per-rung artifacts + the manifest as one family directory."""
+    from repro.api import NFELadder
+    from repro.api.spec import TeacherSpec
+    from repro.api.artifact import PASArtifact
+
+    base = SamplerSpec(solver="ddim", nfe=4,
+                       teacher=TeacherSpec(solver="heun", nfe=8))
+    ladder = NFELadder(base, nfes=(3, 4))
+    router = ladder.build_router(gmm.eps, DIM,
+                                 cfg=ServeConfig(max_batch=8))
+    try:
+        ladder.calibrate(router, jax.random.key(0), batch=32,
+                         artifact_dir=tmp_path)
+        assert router.pipelines["nfe3"].calibrated
+        assert router.pipelines["nfe4"].calibrated
+        assert not router.pipelines["teacher"].calibrated
+    finally:
+        router.close()
+    assert PASArtifact.exists(tmp_path / "nfe3")
+    assert PASArtifact.exists(tmp_path / "nfe4")
+    assert not PASArtifact.exists(tmp_path / "teacher")
+    assert (tmp_path / "ladder.json").exists()
+
+    # the family round-trips: a fresh router over the artifact dir loads
+    # the calibrated floats without recalibrating
+    ladder2 = NFELadder.from_manifest(tmp_path)
+    router2 = ladder2.build_router(gmm.eps, DIM, artifact_dir=tmp_path,
+                                   cfg=ServeConfig(max_batch=8))
+    try:
+        assert router2.pipelines["nfe3"].calibrated
+        assert not router2.pipelines["teacher"].calibrated
+    finally:
+        router2.close()
+
+
+def test_nfe_ladder_validation():
+    from repro.api import NFELadder
+
+    base = SamplerSpec(solver="ddim", nfe=8)
+    with pytest.raises(ValueError, match="at least one"):
+        NFELadder(base, nfes=())
+    with pytest.raises(ValueError, match="duplicate"):
+        NFELadder(base, nfes=(4, 4))
+    ladder = NFELadder(base, nfes=(4,), teacher_rung=False)
+    assert ladder.keys == ["nfe4"]
