@@ -1,18 +1,30 @@
-"""Distributed PAS: sharded-state PCA/Schmidt/correction via shard_map + psum.
+"""Distributed PAS: sharded-state basis/correction via shard_map + one psum.
 
 The PAS state dimension D (flattened sample: S*E for diffusion-LM serving,
-C*H*W for images) is sharded across the mesh.  Every PAS reduction is over D,
-so the *entire* cross-device cost of PAS is:
+C*H*W for images) is sharded across the mesh.  Every PAS reduction is over D
+and every basis vector lies in the row span of Xp = [Q * mask; d], so the
+*entire* cross-device cost of a corrected step is **one psum of the
+(n+1 x n+1) Gram matrix** (n <= NFE+2, so ~1 KB): the PCA eigenproblem, the
+pinned v1 = d/||d|| (||d|| is the Gram's last diagonal entry), and the
+Gram-Schmidt orthonormalisation all run on the replicated Gram via
+``pca.basis_weights``, and the projection (cs @ W) @ Xp is elementwise along
+D — local by construction.  The tiny psum is issued before any of that
+weight-space compute, so the collective overlaps it instead of serialising
+after it.
 
-  * one psum of an (n+1 x n+1) Gram matrix (n <= NFE+2, so ~1 KB),
-  * ~n_basis^2 scalar psums for Gram-Schmidt inner products,
-  * one scalar psum for ||d||.
+The seed formulation (kept below as ``topk_right_singular_sharded`` /
+``schmidt_sharded`` — the explicit-collective oracles the single-psum path
+is tested against) paid ~n_basis^2 + 2 *sequential* scalar psums per
+corrected step on top of the Gram psum; that serialisation was what made
+PAS overhead grow with device count (ROADMAP "Make sharded PAS actually
+scale").
 
-Everything else is local.  This is the TPU-native formulation of the paper's
-"PCA cost is negligible" claim (DESIGN.md §3).  Two interchangeable paths:
+This is the TPU-native formulation of the paper's "PCA cost is negligible"
+claim (DESIGN.md §3).  Two interchangeable paths:
 
-  * ``pas_basis_sharded`` — explicit collectives, for use inside shard_map
-    (serving integration, and the path the dry-run exercises at 512 devices);
+  * ``pas_basis_sharded`` et al. — explicit collectives, for use inside
+    shard_map (serving integration, and the path the dry-run exercises at
+    512 devices);
   * plain ``core.pca`` under pjit — XLA inserts the same collectives
     automatically (tested equivalent).
 """
@@ -28,7 +40,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.kernels import ops
 from repro.parallel.mesh import shard_map  # the one version-compat shim
 
-from .pca import _DEGENERATE_NORM, _EVAL_FLOOR
+from .pca import _DEGENERATE_NORM, _EVAL_FLOOR, basis_weights
 
 Array = jax.Array
 
@@ -38,6 +50,7 @@ __all__ = [
     "topk_right_singular_sharded",
     "schmidt_sharded",
     "pas_basis_sharded",
+    "batched_pas_weights_sharded",
     "batched_pas_basis_sharded",
     "corrected_direction_sharded",
     "make_sharded_pas_step",
@@ -61,7 +74,12 @@ def _pdot(a: Array, b: Array, axis_name) -> Array:
 
 def topk_right_singular_sharded(x_local: Array, k: int, axis_name,
                                 mask: Array | None = None) -> Array:
-    """Sharded version of pca.topk_right_singular; x_local (n, D_local)."""
+    """Sharded version of pca.topk_right_singular; x_local (n, D_local).
+
+    Legacy explicit-collective oracle: the production corrected step runs
+    the single-psum weight path (``basis_weights`` on ``psum_gram``); this
+    stays as the independently-derived reference it is tested against.
+    """
     if mask is not None:
         x_local = x_local * mask[:, None].astype(x_local.dtype)
     g = psum_gram(x_local, axis_name)            # (n, n) replicated
@@ -77,7 +95,12 @@ def topk_right_singular_sharded(x_local: Array, k: int, axis_name,
 
 
 def schmidt_sharded(vs_local: Array, axis_name, rel_tol: float = 1e-4) -> Array:
-    """Modified Gram-Schmidt on row-sharded vectors (k, D_local)."""
+    """Modified Gram-Schmidt on row-sharded vectors (k, D_local).
+
+    Legacy oracle: ~k^2 sequential scalar psums.  The production path
+    orthonormalises in weight space on the already-replicated Gram
+    (``basis_weights``) with zero additional collectives.
+    """
     k = vs_local.shape[0]
     us = []
     for j in range(k):
@@ -94,36 +117,73 @@ def schmidt_sharded(vs_local: Array, axis_name, rel_tol: float = 1e-4) -> Array:
 
 def pas_basis_sharded(q_local: Array, q_mask: Array, d_local: Array,
                       axis_name, n_basis: int = 4) -> Array:
-    """Sharded pas_basis: buffer (n, D_local) + direction (D_local,) -> (k, D_local)."""
+    """Sharded pas_basis: buffer (n, D_local) + direction (D_local,) -> (k, D_local).
+
+    One Gram psum; the weight-space pipeline runs replicated on the ~1 KB
+    result and the reconstruction W @ Xp is local.
+    """
     xp = jnp.concatenate(
         [q_local * q_mask[:, None].astype(q_local.dtype), d_local[None]], 0)
-    v_pca = topk_right_singular_sharded(xp, n_basis - 1, axis_name)
-    d_norm = jnp.sqrt(_pdot(d_local, d_local, axis_name))
-    v1 = d_local / jnp.maximum(d_norm, _DEGENERATE_NORM)
-    return schmidt_sharded(jnp.concatenate([v1[None], v_pca], 0), axis_name)
+    g = jax.lax.psum(ops.gram(xp), axis_name)        # the ONE collective
+    mask1 = jnp.concatenate(
+        [q_mask.astype(jnp.float32), jnp.ones((1,), jnp.float32)])
+    w = basis_weights(g, n_basis, mask=mask1)
+    return w.astype(xp.dtype) @ xp                   # (n_basis, D_local)
+
+
+def batched_pas_weights_sharded(mesh: Mesh, state_axis: str,
+                                batch_axis: str | None,
+                                n_basis: int = 4) -> Callable:
+    """Batched sharded PAS weights: the engine's corrected-step collective path.
+
+    Returns ``f(q_rows, q_mask, d) -> (w, d_norm)`` over *global* shapes
+    q_rows (cap, B, D), q_mask (cap,), d (B, D) -> w (B, n_basis, cap+1)
+    float32 (replicated over the state axis), d_norm (B,), with B sharded
+    over ``batch_axis`` (if given) and D over ``state_axis``.  Inside the
+    shard_map each device contracts its local Gram tile through
+    ``ops.gram_qd`` and issues the single tiny psum *first*, so the
+    collective overlaps the weight-space eigh/Schmidt compute; the caller
+    then projects with ``ops.fused_pas_project_step`` under pjit — local in
+    D, no further collectives.
+    """
+    bax = batch_axis
+
+    def local(q_rows, q_mask, d):
+        g = jax.lax.psum(ops.gram_qd(q_rows, q_mask, d), state_axis)
+        mask1 = jnp.concatenate(
+            [q_mask.astype(jnp.float32), jnp.ones((1,), jnp.float32)])
+        w = jax.vmap(lambda gg: basis_weights(gg, n_basis, mask=mask1))(g)
+        d_norm = jnp.sqrt(jnp.clip(g[:, -1, -1], 0.0))
+        return w, d_norm
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, bax, state_axis), P(None), P(bax, state_axis)),
+        out_specs=(P(bax, None, None), P(bax)))
 
 
 def batched_pas_basis_sharded(mesh: Mesh, state_axis: str,
                               batch_axis: str | None,
                               n_basis: int = 4) -> Callable:
-    """Batched sharded PAS basis: the engine's corrected-step collective path.
+    """Batched sharded *materialised* basis (calibration's SGD wants U).
 
-    Returns ``f(q_rows, q_mask, d) -> u`` over *global* shapes
-    q_rows (cap, B, D), q_mask (cap,), d (B, D) -> u (B, n_basis, D), with
-    B sharded over ``batch_axis`` (if given) and D over ``state_axis``.
-    Inside the shard_map each device holds its (B_local, D_local) tile and
-    the per-sample PCA/Schmidt reductions run through the explicit psum
-    collectives above — this replaces the replicated ``pas._batched_basis``
-    whenever an engine has a state-sharded mesh bound.
+    Same signature as before the weight-space rework:
+    ``f(q_rows, q_mask, d) -> u`` over global shapes -> (B, n_basis, D),
+    B over ``batch_axis``, D over ``state_axis``.  Internally one Gram psum
+    (``batched_pas_weights_sharded``'s body) + a local W @ Xp contraction —
+    the ~n_basis^2 sequential Schmidt psums of the seed path are gone.
     """
     bax = batch_axis
 
     def local(q_rows, q_mask, d):
-        # q_rows (cap, B_l, D_l), d (B_l, D_l): vmap the per-sample sharded
-        # basis over the local batch; psums batch across the vmap.
-        f = lambda rows, dd: pas_basis_sharded(rows, q_mask, dd, state_axis,
-                                               n_basis)
-        return jax.vmap(f, in_axes=(1, 0), out_axes=0)(q_rows, d)
+        g = jax.lax.psum(ops.gram_qd(q_rows, q_mask, d), state_axis)
+        mask1 = jnp.concatenate(
+            [q_mask.astype(jnp.float32), jnp.ones((1,), jnp.float32)])
+        w = jax.vmap(lambda gg: basis_weights(gg, n_basis, mask=mask1))(g)
+        u = jnp.einsum("bkr,rbd->bkd", w[:, :, :-1],
+                       q_rows.astype(w.dtype))
+        u = u + w[:, :, -1][..., None] * d.astype(w.dtype)[:, None, :]
+        return u.astype(d.dtype)
 
     return shard_map(
         local, mesh=mesh,
@@ -148,6 +208,10 @@ def make_sharded_pas_step(mesh: Mesh, shard_axes, n_basis: int = 4,
     d (D,) are sharded over ``shard_axes`` on their last axis; coords (k,) and
     q_mask (n,) are replicated.  This is the op the serving path calls at the
     corrected steps and that the dry-run lowers at the production mesh.
+
+    Fully fused: one Gram psum, then coordinates fold through the weight
+    matrix ((coords * ||d||) @ W, with ||d|| free from the Gram diagonal)
+    and one local contraction against the buffer rows produces d~.
     """
     axis_name = shard_axes
 
@@ -158,8 +222,17 @@ def make_sharded_pas_step(mesh: Mesh, shard_axes, n_basis: int = 4,
         out_specs=P(shard_axes),
     )
     def step(q_local, q_mask, d_local, coords):
-        u_local = pas_basis_sharded(q_local, q_mask, d_local, axis_name, n_basis)
-        return corrected_direction_sharded(u_local, coords, d_local, axis_name,
-                                           coord_mode)
+        xp = jnp.concatenate(
+            [q_local * q_mask[:, None].astype(q_local.dtype), d_local[None]],
+            0)
+        g = jax.lax.psum(ops.gram(xp), axis_name)    # the ONE collective
+        mask1 = jnp.concatenate(
+            [q_mask.astype(jnp.float32), jnp.ones((1,), jnp.float32)])
+        w = basis_weights(g, n_basis, mask=mask1)    # (n_basis, n+1)
+        cs = coords.astype(w.dtype)
+        if coord_mode == "relative":
+            cs = cs * jnp.sqrt(jnp.clip(g[-1, -1], 0.0))
+        pw = cs @ w                                  # (n+1,)
+        return (pw.astype(xp.dtype) @ xp)            # (D_local,)
 
     return jax.jit(step)

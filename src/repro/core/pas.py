@@ -28,7 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .pca import pas_basis
+from repro.kernels import ops
+
+from .pca import basis_weights
 from .solvers import LinearMultistepSolver, Solver, SolverHist
 
 Array = jax.Array
@@ -121,10 +123,60 @@ class _QBuffer(NamedTuple):
         return _QBuffer(self.rows.at[slot].set(d), self.mask.at[slot].set(1.0))
 
 
+def _batched_weights(q: _QBuffer, d: Array, n_basis: int
+                     ) -> tuple[Array, Array]:
+    """Batched weight-space basis: one Gram pass over D, everything else tiny.
+
+    q.rows (cap, B, D), d (B, D) -> (W (B, n_basis, cap+1) float32 with
+    masked-row columns zeroed, d_norm (B,) float32 read off the Gram
+    diagonal).  This is the ONE basis computation: the replicated engine
+    path, the seed reference (via ``_batched_basis``), and the sharded
+    collective path (``distributed.batched_pas_weights_sharded``) all run
+    ``ops.gram_qd`` + ``pca.basis_weights`` on the same Gram, so their
+    bases can only differ where the Gram itself does (reduction order).
+    """
+    g = ops.gram_qd(q.rows, q.mask, d)                # (B, cap+1, cap+1)
+    mask1 = jnp.concatenate(
+        [q.mask.astype(jnp.float32), jnp.ones((1,), jnp.float32)])
+    w = jax.vmap(lambda gg: basis_weights(gg, n_basis, mask=mask1))(g)
+    d_norm = jnp.sqrt(jnp.clip(g[:, -1, -1], 0.0))
+    return w, d_norm
+
+
+def _materialize_basis(w: Array, rows: Array, d: Array) -> Array:
+    """U = W @ Xp: (B, k, cap+1) weights against (cap, B, D) rows + (B, D) d.
+
+    Rows are consumed unmasked — ``basis_weights`` zeroes the weight columns
+    of invalid rows.  Only calibration (whose SGD reuses U across ~200
+    iterations) materialises the basis; sampling contracts the coordinates
+    against W and projects via ``ops.fused_pas_project_step`` instead.
+    """
+    u = jnp.einsum("bkr,rbd->bkd", w[:, :, :-1], rows.astype(w.dtype))
+    u = u + w[:, :, -1][..., None] * d.astype(w.dtype)[:, None, :]
+    return u.astype(d.dtype)
+
+
 def _batched_basis(q: _QBuffer, d: Array, n_basis: int) -> Array:
-    """vmap pas_basis over the batch axis: q.rows (cap,B,D), d (B,D) -> (B,k,D)."""
-    rows_b = jnp.moveaxis(q.rows, 1, 0)  # (B, cap, D)
-    return jax.vmap(lambda r, dd: pas_basis(r, q.mask, dd, n_basis))(rows_b, d)
+    """Batched materialised basis: q.rows (cap,B,D), d (B,D) -> (B,k,D)."""
+    w, _ = _batched_weights(q, d, n_basis)
+    return _materialize_basis(w, q.rows, d)
+
+
+def _projected_coords(coords_j: Array, w: Array, d_norm: Array,
+                      mode: str) -> Array:
+    """pw (B, cap+1) = cs @ W: the learned coordinates folded through the
+    weight-space basis, with coord_mode's ||d|| scaling read off the Gram
+    diagonal.  Shared by the engine hot path and the seed reference so both
+    run the identical association (d~ = pw @ Xp); reassociating through a
+    materialised basis instead lands within the documented ~1e-2
+    noise-subspace sensitivity, not bitwise.
+    """
+    cs = coords_j[None, :].astype(d_norm.dtype)
+    if mode == "relative":
+        cs = cs * d_norm[:, None]
+    else:
+        cs = jnp.broadcast_to(cs, (d_norm.shape[0], coords_j.shape[0]))
+    return jnp.einsum("bk,bkr->br", cs.astype(w.dtype), w)
 
 
 def _sampling_q_cap(last_active: int, n: int) -> int:
@@ -399,10 +451,11 @@ def pas_sample_trajectory(
     for j in range(n):
         d = eps_fn(x, ts[j])
         if params.active[j]:
-            u = _batched_basis(q, d, cfg.n_basis)
-            d_norm = jax.vmap(jnp.linalg.norm)(d)
-            d = jax.vmap(_corrected_direction, (0, None, 0, None))(
-                u, params.coords[j], d_norm, cfg.coord_mode)
+            w, d_norm = _batched_weights(q, d, cfg.n_basis)
+            pw = _projected_coords(params.coords[j], w, d_norm,
+                                   cfg.coord_mode).astype(d.dtype)
+            d = (jnp.einsum("br,rbd->bd", pw[:, :-1], q.rows)
+                 + pw[:, -1:] * d)
         x_next = solver.phi(x, d, j, hist, eps_fn)
         hist = solver.push(x, d, j, hist)
         if q is not None and j < last_active:

@@ -6,6 +6,17 @@ formulation (DESIGN.md §3) never materialises an SVD of X: it forms the n x n
 Gram matrix G = X X^T (on a mesh: local contraction + one tiny all-reduce),
 eigendecomposes it, and reconstructs right singular vectors v_j = X^T w_j / s_j.
 
+``basis_weights`` pushes that one step further: because *every* PAS basis
+vector is a linear combination of the rows of Xp = [Q * mask; d], the whole
+basis — PCA reconstruction, the pinned v1 = d/||d||, and the Gram-Schmidt
+orthonormalisation — can be computed as an (n_basis, n+1) coefficient matrix
+W from G alone, with every inner product a quadratic form a^T G b.  The basis
+U = W @ Xp never has to be materialised: a corrected sampling step contracts
+the learned coordinates against W (tiny) and applies (cs @ W) @ Xp in the
+fused step kernel, so the per-step D-axis traffic is one Gram pass + one
+projection/update pass, and on a sharded mesh the *only* collective is the
+(n+1)x(n+1) Gram psum.
+
 All functions are pure jnp on a single (n, D) buffer; batching is vmap;
 the sharded variant lives in core/distributed.py.
 """
@@ -20,12 +31,23 @@ __all__ = [
     "gram_matrix",
     "topk_right_singular",
     "schmidt",
+    "basis_weights",
     "pas_basis",
     "cumulative_variance",
 ]
 
 _EVAL_FLOOR = 1e-30
 _DEGENERATE_NORM = 1e-6
+# Trust floor for weight-space eigencomponents, relative to lambda_max.  A
+# float32 Gram stores entries rounded at ~eps * |G| ~ 1.2e-7 * lambda_max, so
+# any eigenvalue below ~100x that floor is quantisation noise: its eigenvector
+# is arbitrary and differs between a psummed and a locally-summed Gram even
+# though both are "correct" to rounding.  Components below the floor carry no
+# measurable signal in *any* f32 Gram formulation, so they are zeroed (inert
+# downstream: their learned coordinate multiplies zero) — this reproduces the
+# seed D-space path, whose materialised Gram-Schmidt residuals fell under the
+# rel_tol floor at exactly these operating points.
+_REL_EVAL_TOL = 1e-6
 
 
 def gram_matrix(x: Array, mask: Array | None = None) -> Array:
@@ -88,17 +110,120 @@ def schmidt(vs: Array, rel_tol: float = 1e-4) -> Array:
     return jnp.stack(us, axis=0)
 
 
+def basis_weights(g: Array, n_basis: int, mask: Array | None = None,
+                  rel_tol: float = 1e-4) -> Array:
+    """PAS basis as row-combination weights: W (n_basis, m) with U = W @ Xp.
+
+    ``g`` is the (m, m) float32 Gram matrix of Xp = [Q * mask; d] (row m-1 is
+    the current direction d).  Every basis vector the paper's PCA() produces
+    lies in the row span of Xp, so the whole pipeline runs on G:
+
+    * PCA reconstruction coefficients a_j = w_j / s_j from ``eigh(G)`` —
+      the same eigenproblem ``topk_right_singular`` solves, with the same
+      zero-singular-value and canonical-sign conventions;
+    * the pinned v1 = d/||d|| is the coefficient vector e_{m-1}/||d|| with
+      ||d|| = sqrt(G[-1, -1]) — no extra reduction over D;
+    * modified Gram-Schmidt in the *eigenbasis coordinates* z = L^1/2 E^T a
+      (E, L from the eigh above — free), where the G-inner product is the
+      Euclidean one: <a, b>_G = z_a . z_b and every norm is a sum of
+      squares.  Computing those norms as raw quadratic forms a^T G a
+      instead cancels catastrophically for near-degenerate residuals
+      (O(|G|) terms collapsing to ~1e-8), which made ``schmidt``'s
+      keep/zero gate flip between a psummed and a locally-summed Gram;
+    * a *trusted-eigenspace truncation* (``_REL_EVAL_TOL``): eigenvalues
+      below 1e-6 of lambda_max are f32 quantisation noise (entries round at
+      eps * lambda_max), so their components are gated to zero and their
+      sqrt(lambda) contributions are dropped from every z — otherwise the
+      pin's coordinates carry mesh-dependent noise into each residual norm
+      right at the keep/zero floor.  The truncated geometry matches the
+      stability of the seed path's materialised D-space norms
+      (mesh-vs-replicated drift ~1e-5 at the acceptance operating points).
+
+    ``mask`` (m,) zeroes the weight columns of invalid buffer rows.  That is
+    numerically a no-op when G was built from masked rows (their G rows are
+    exactly zero) but guarantees masked rows never leak into the projection
+    even when the caller contracts W against *unmasked* row storage — which
+    is exactly what the fused kernel path does.
+    """
+    gf = g.astype(jnp.float32)
+    m = gf.shape[0]
+    k = n_basis - 1
+
+    # PCA coefficients (the topk_right_singular conventions, in weight space)
+    evals, evecs = jnp.linalg.eigh(gf)              # ascending
+    top = jnp.flip(evals[-k:])                      # (k,) descending
+    w = jnp.flip(evecs[:, -k:], axis=1)             # (m, k)
+    s = jnp.sqrt(jnp.clip(top, _EVAL_FLOOR))
+    # trust gate: absolute floor AND the relative f32-Gram noise floor (see
+    # _REL_EVAL_TOL) — components that an f32 Gram cannot measure are zeroed
+    # identically on every mesh instead of amplifying rounding noise by 1/s
+    floor = jnp.maximum(_EVAL_FLOOR * 10, _REL_EVAL_TOL * top[0])
+    scale = jnp.where(top > floor,                  # ok-gate + canonical sign
+                      jnp.where(jnp.sign(jnp.sum(w, axis=0)) == 0, 1.0,
+                                jnp.sign(jnp.sum(w, axis=0))), 0.0)
+    a_pca = (w / s).T * scale[:, None]              # (k, m): v_j = a_pca[j] @ Xp
+
+    # eigenbasis coordinates z(a) = L^1/2 E^T a, *truncated to the trusted
+    # eigenspace*: a_pca_j is w_j / s_j, so z is exactly the j-th top
+    # coordinate axis (sqrt(l_j)/s_j = 1), gated/signed like a_pca.
+    # Truncation matters for the pin's z below: an untrusted eigenvalue is
+    # noise of order eps * lambda_max, and carrying its sqrt into the pin's
+    # coordinates injects mesh-dependent jitter into every Gram-Schmidt
+    # residual right at the keep/zero floor.  Zeroing those directions
+    # measures all inner products only where the Gram carries signal.
+    trusted = evals > jnp.maximum(_EVAL_FLOOR * 10, _REL_EVAL_TOL * evals[-1])
+    sqrt_l = jnp.where(trusted, jnp.sqrt(jnp.clip(evals, 0.0)), 0.0)
+    idx = m - 1 - jnp.arange(k)                     # eigh column of top_j
+    z_pca = ((sqrt_l[idx] / s * scale)[:, None]
+             * jax.nn.one_hot(idx, m, dtype=gf.dtype))
+
+    # pinned v1 = d / max(||d||, eps): coefficient e_{m-1} scaled
+    d_norm = jnp.sqrt(jnp.clip(gf[-1, -1], 0.0))
+    inv_d = 1.0 / jnp.maximum(d_norm, _DEGENERATE_NORM)
+    a1 = jnp.zeros((m,), gf.dtype).at[-1].set(inv_d)
+    z1 = sqrt_l * evecs[-1, :] * inv_d              # z of e_{m-1} / ||d||
+    vs = jnp.concatenate([a1[None], a_pca], axis=0)  # (n_basis, m)
+    zs = jnp.concatenate([z1[None], z_pca], axis=0)
+
+    # modified Gram-Schmidt (the ``schmidt`` semantics) carrying (v, z)
+    # pairs: inner products and norms all live on the stable z side
+    us: list[Array] = []
+    zus: list[Array] = []
+    for j in range(n_basis):
+        v, z = vs[j], zs[j]
+        v_in_norm = jnp.sqrt(jnp.sum(z * z))
+        for u, zu in zip(us, zus):
+            c = jnp.vdot(zu, z)
+            v = v - c * u
+            z = z - c * zu
+        nrm = jnp.sqrt(jnp.sum(z * z))
+        floor = jnp.maximum(rel_tol * v_in_norm, _DEGENERATE_NORM)
+        keep = nrm > floor
+        inv = 1.0 / jnp.maximum(nrm, _DEGENERATE_NORM)
+        us.append(jnp.where(keep, v * inv, 0.0))
+        zus.append(jnp.where(keep, z * inv, 0.0))
+    out = jnp.stack(us, axis=0)                      # (n_basis, m)
+    if mask is not None:
+        out = out * mask[None, :].astype(out.dtype)
+    return out
+
+
 def pas_basis(q_buf: Array, q_mask: Array, d: Array, n_basis: int = 4) -> Array:
     """The paper's PCA() (Alg. 1 lines 2-6): basis U (n_basis, D), u_0 = d/||d||.
 
     q_buf  (n, D): trajectory buffer rows [x_T, d_{t_N}, ..., d_{t_{i+1}}]
     q_mask (n,)  : validity (fixed-capacity buffer, scan-friendly)
     d      (D,)  : current direction to correct
+
+    One Gram pass over D + the weight-space pipeline (``basis_weights``) +
+    one reconstruction contraction — the PCA vectors, pinned v1, and
+    Gram-Schmidt never touch the D axis individually.
     """
     xp = jnp.concatenate([q_buf * q_mask[:, None].astype(q_buf.dtype), d[None]], 0)
-    v_pca = topk_right_singular(xp, n_basis - 1)              # (n_basis-1, D)
-    v1 = d / jnp.maximum(jnp.linalg.norm(d), _DEGENERATE_NORM)
-    return schmidt(jnp.concatenate([v1[None], v_pca], axis=0))  # (n_basis, D)
+    mask1 = jnp.concatenate(
+        [q_mask.astype(jnp.float32), jnp.ones((1,), jnp.float32)])
+    w = basis_weights(gram_matrix(xp), n_basis, mask=mask1)
+    return w.astype(xp.dtype) @ xp                   # (n_basis, D)
 
 
 def cumulative_variance(x: Array, center: bool = True) -> Array:

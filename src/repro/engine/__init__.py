@@ -15,12 +15,14 @@ from .calibration import (CalibrationEngine, calibration_engine_cache_stats,
                           calibration_engine_for_solver,
                           clear_calibration_engine_cache,
                           get_calibration_engine_for_spec)
-from .engine import (SamplingEngine, clear_engine_cache, engine_cache_stats,
+from .engine import (PASShardingFallbackWarning, SamplingEngine,
+                     clear_engine_cache, engine_cache_stats,
                      engine_for_solver, get_engine, get_engine_for_spec)
 
 __all__ = [
     "AdaptiveEngine",
     "CalibrationEngine",
+    "PASShardingFallbackWarning",
     "SamplingEngine",
     "adaptive_engine_cache_stats",
     "calibration_engine_cache_stats",

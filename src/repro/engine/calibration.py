@@ -15,10 +15,12 @@ program per spec and eps model:
 * the N calibration steps are **statically unrolled** (Alg. 1 is inherently
   sequential — a corrected step changes every later state) with the per-step
   eps eval, Q-buffer/PCA basis construction (``SamplingEngine._basis_fn``:
-  the ``core.distributed`` psum collectives whenever the state dim is
-  sharded), the SGD inner ``lax.scan``, and the corrected-vs-plain rollout
-  through the fused step kernels (``kernels.ops.fused_step`` /
-  ``fused_pas_step``) all in the same program;
+  one Gram pass + the weight-space basis of ``pca.basis_weights``, with the
+  single tiny Gram psum of ``core.distributed`` whenever the state dim is
+  sharded; the basis is materialised here — unlike sampling — because the
+  SGD scan reuses U across its ~200 iterations), the SGD inner ``lax.scan``,
+  and the corrected-vs-plain rollout through the fused step kernels
+  (``kernels.ops.fused_step`` / ``fused_pas_step``) all in the same program;
 * the adaptive-search adoption decision is a ``lax.cond`` **on-device** —
   the (x, hist, Q) carries never round-trip host memory, and the
   ``loss_before/loss_after/gain`` diagnostics come back as stacked device

@@ -13,9 +13,16 @@ replaces all of them with one object per (solver, schedule, NFE, dtype):
   multiply-add kernel pass — batch rides natively through the kernel tiles;
 * PAS-corrected sampling compiles the corrected prefix (active steps are few
   by construction — the adaptive search keeps ~10 parameters) with static
-  branches, folds the coordinate application into the same kernel pass, and
-  finishes with the same plain scan for the correction-free tail.  Inactive
-  steps therefore keep the paper's zero-overhead promise;
+  branches and finishes with the same plain scan for the correction-free
+  tail.  Inactive steps therefore keep the paper's zero-overhead promise.
+  A corrected step is two passes over the flattened D axis and nothing else:
+  one Gram tile pass (``kernels.ops.gram_qd``) whose tiny (n+1)^2 output
+  feeds the weight-space basis (``pca.basis_weights`` — PCA + pinned v1 +
+  Gram-Schmidt as an (n_basis, n+1) coefficient matrix, ||d|| read off the
+  Gram diagonal), and one fused projection+update tile pass
+  (``kernels.ops.fused_pas_project_step``) contracting the projected
+  coordinates pw = cs @ W directly against the Q-buffer rows.  The
+  (B, n_basis, D) basis of the seed path is never materialised;
 * engines and their compiled callables are cached:
   ``get_engine(name, ts, dtype)`` is keyed on (solver name, schedule bytes,
   NFE, dtype) and per-engine jitted functions are keyed on the eps-model and
@@ -24,11 +31,15 @@ replaces all of them with one object per (solver, schedule, NFE, dtype):
   ``repro.parallel.MeshSpec`` (which participates in the spec's engine-cache
   key), the jitted scan and PAS prefix carry ``NamedSharding`` on every
   (batch, D) buffer — batch over the DP axis, the flattened state dim over
-  the state axis.  Corrected steps route the PAS basis through the
-  ``core.distributed`` psum collectives (replacing the replicated
-  ``_batched_basis``) whenever the state dim is sharded; with DP-only
-  sharding the partitioned program is bit-identical in fp32 to the
-  single-device engine (tests/test_mesh.py).  All carries (x, hist, Q) live
+  the state axis.  Corrected steps route the PAS Gram through the
+  ``core.distributed`` single-psum collective
+  (``batched_pas_weights_sharded``) whenever the state dim is sharded — the
+  ~1 KB Gram psum is the *only* collective a corrected step pays, issued
+  ahead of the weight-space math so it overlaps local compute; uneven
+  shapes degrade to the replicated weights with a counted, once-warned
+  fallback (``PASShardingFallbackWarning``).  With DP-only sharding the
+  partitioned program is bit-identical in fp32 to the single-device engine
+  (tests/test_mesh.py).  All carries (x, hist, Q) live
   inside one jitted program, so they never round-trip host memory; the serve
   loop additionally donates its flush input buffer (``donate_x=True``).
 
@@ -39,6 +50,7 @@ PAS params on a 2-eval solver raise, as in calibration.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -48,7 +60,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import distributed
 from repro.core import pas as pas_mod
-from repro.core.pas import _batched_basis, _QBuffer
+from repro.core.pas import (_batched_weights, _materialize_basis,
+                            _projected_coords, _QBuffer)
 from repro.core.solvers import LinearMultistepSolver, Solver, TwoEvalSolver
 from repro.kernels import ops
 from repro.parallel.mesh import MeshSpec
@@ -58,12 +71,36 @@ EpsFn = Callable[[Array, Array], Array]
 
 __all__ = [
     "SamplingEngine",
+    "PASShardingFallbackWarning",
     "get_engine",
     "get_engine_for_spec",
     "engine_for_solver",
     "clear_engine_cache",
     "engine_cache_stats",
 ]
+
+
+class PASShardingFallbackWarning(UserWarning):
+    """A mesh-bound engine silently degraded the PAS basis placement.
+
+    Emitted (once per process per reason) when a trace drops the DP spec or
+    falls back to the replicated basis because a shape is not divisible by
+    the mesh — the conditions under which "sharded PAS" quietly stops
+    scaling.  Structured fields: ``reason`` (``uneven_state`` /
+    ``uneven_batch``), ``shape`` (the (B, D) that failed), ``mesh`` (the
+    MeshSpec dict).  Counts are cumulative per engine
+    (``SamplingEngine.basis_fallback_stats``) and repo-wide in
+    ``engine_cache_stats()['basis_fallbacks']``.
+    """
+
+    def __init__(self, msg: str, *, reason: str = "", shape=None, mesh=None):
+        super().__init__(msg)
+        self.reason = reason
+        self.shape = tuple(shape) if shape is not None else None
+        self.mesh = mesh
+
+
+_FALLBACK_WARNED: set[str] = set()  # one warning per reason per process
 
 
 def _fn_key(fn: Callable) -> Any:
@@ -112,6 +149,7 @@ class SamplingEngine:
         self.ts = np.asarray(solver.ts, dtype=np.float64)
         self.nfe = solver.nfe          # evals, not steps: 2x for heun/dpm2
         self._compiled: dict[Any, tuple[Callable, Callable]] = {}
+        self._basis_fallbacks: dict[str, int] = {}
 
         self.mesh_spec = (mesh if mesh is not None and not mesh.is_single
                           else None)
@@ -234,27 +272,82 @@ class SamplingEngine:
             return x
         return self._jit(run, donate)
 
-    def _basis_fn(self, n_basis: int) -> Callable:
-        """(q_rows, q_mask, d) -> u: replicated vmap basis, or the
-        ``core.distributed`` collective path when the state dim is sharded.
+    def _note_basis_fallback(self, reason: str, shape) -> None:
+        """Count (per engine) + warn (once per process per reason) when a
+        trace degrades the sharded basis placement.  Runs at trace time —
+        one count per corrected step per compiled variant, i.e. the number
+        of degraded basis computations baked into compiled programs (a
+        trajectory with two active steps counts twice per trace)."""
+        self._basis_fallbacks[reason] = \
+            self._basis_fallbacks.get(reason, 0) + 1
+        if reason in _FALLBACK_WARNED:
+            return
+        _FALLBACK_WARNED.add(reason)
+        ms = self.mesh_spec
+        detail = {
+            "uneven_state": (
+                f"state dim {shape[1]} is not divisible by the mesh state "
+                f"axis ({ms.state}); the PAS basis runs REPLICATED for this "
+                f"program — sharded PAS is not engaged"),
+            "uneven_batch": (
+                f"batch {shape[0]} is not divisible by dp={ms.dp}; the PAS "
+                f"basis drops its DP spec for this program (state sharding "
+                f"kept; pad the batch to engage DP)"),
+        }[reason]
+        warnings.warn(PASShardingFallbackWarning(
+            f"[{self.name}] PAS basis placement degraded: {detail}. "
+            f"Counts: SamplingEngine.basis_fallback_stats() / "
+            f"engine_cache_stats()['basis_fallbacks'].",
+            reason=reason, shape=shape, mesh=ms.to_dict()), stacklevel=3)
 
-        Shapes are inspected at trace time: shard_map needs evenly divisible
-        axes, so an uneven batch drops its DP spec and an uneven state dim
-        falls back to the replicated basis for that trace only.
+    def basis_fallback_stats(self) -> dict[str, int]:
+        """Per-reason counts of compiled programs whose PAS basis placement
+        degraded (see ``PASShardingFallbackWarning``)."""
+        return dict(self._basis_fallbacks)
+
+    def _weights_fn(self, n_basis: int) -> Callable:
+        """(q_rows, q_mask, d) -> (w, d_norm): the weight-space basis.
+
+        w (B, n_basis, cap+1) float32 with masked-row columns zeroed, d_norm
+        (B,) from the Gram diagonal.  Replicated vmap path, or the
+        ``core.distributed`` single-psum collective path when the state dim
+        is sharded.  Shapes are inspected at trace time: shard_map needs
+        evenly divisible axes, so an uneven batch drops its DP spec and an
+        uneven state dim falls back to the replicated weights for that trace
+        only — both degradations are counted and warned
+        (``PASShardingFallbackWarning``).
         """
-        replicated = lambda rows, mask, d: _batched_basis(
+        replicated = lambda rows, mask, d: _batched_weights(
             _QBuffer(rows, mask), d, n_basis)
         if self.mesh is None or self.mesh_spec.state <= 1:
             return replicated
         ms = self.mesh_spec
 
-        def basis(rows, mask, d):
+        def weights(rows, mask, d):
             if d.shape[1] % ms.state != 0:
+                self._note_basis_fallback("uneven_state", d.shape)
                 return replicated(rows, mask, d)
             bax = (ms.batch_axis
                    if ms.dp > 1 and d.shape[0] % ms.dp == 0 else None)
-            return distributed.batched_pas_basis_sharded(
+            if ms.dp > 1 and bax is None:
+                self._note_basis_fallback("uneven_batch", d.shape)
+            return distributed.batched_pas_weights_sharded(
                 self.mesh, ms.state_axis, bax, n_basis)(rows, mask, d)
+        return weights
+
+    def _basis_fn(self, n_basis: int) -> Callable:
+        """(q_rows, q_mask, d) -> u (B, n_basis, D), materialised.
+
+        Built on ``_weights_fn`` (same Gram, same W — calibration's SGD and
+        the sampling projection can never disagree on the basis); only
+        callers that reuse U across iterations (calibration) should pay the
+        materialisation.
+        """
+        weights = self._weights_fn(n_basis)
+
+        def basis(rows, mask, d):
+            w, _ = weights(rows, mask, d)
+            return _materialize_basis(w, rows, d)
         return basis
 
     def _build_pas(self, eps_fn: EpsFn, active: tuple[bool, ...],
@@ -268,7 +361,7 @@ class SamplingEngine:
         ts = self.ts_jax
         coef = self.coef
         body = self._plain_body(eps_fn)
-        basis = self._basis_fn(n_basis)
+        weights = self._weights_fn(n_basis)
 
         def run(x_t: Array, coords: Array) -> Array:
             x = self._constrain(x_t)
@@ -283,10 +376,17 @@ class SamplingEngine:
                 t = ts[j]
                 d = eps_fn(x, t)
                 if active[j]:
-                    u = basis(q.rows, q.mask, d)               # (B, k, D)
-                    cs = _scaled_coords(coords[j], d, coord_mode)
-                    x, d_used, nat = ops.fused_pas_step(
-                        x, u, cs, hist, coef[j], native_x0=self.native_x0)
+                    # corrected step = two D passes: the Gram contraction
+                    # (inside _weights_fn; on a mesh its ~1 KB psum is the
+                    # only collective and overlaps the weight-space math),
+                    # then the fused project+update tile pass below.  The
+                    # (B, n_basis, D) basis is never materialised and ||d||
+                    # comes off the Gram diagonal for free.
+                    w, d_norm = weights(q.rows, q.mask, d)
+                    pw = _projected_coords(coords[j], w, d_norm, coord_mode)
+                    x, d_used, nat = ops.fused_pas_project_step(
+                        x, q.rows, d, pw, hist, coef[j],
+                        native_x0=self.native_x0)
                     x = self._constrain(x)
                 else:
                     nat = self._native(x, d, t)
@@ -525,4 +625,6 @@ def engine_cache_stats() -> dict[str, int]:
     return {"engines": len(_ENGINES), "hits": _STATS.hits,
             "misses": _STATS.misses,
             "compiled_variants": sum(e.compiled_variants()
-                                     for e in _ENGINES.values())}
+                                     for e in _ENGINES.values()),
+            "basis_fallbacks": sum(sum(e._basis_fallbacks.values())
+                                   for e in _ENGINES.values())}

@@ -10,13 +10,19 @@ direction, and each multiply-add as separate XLA ops with an HBM round-trip
 between the projection and the update; these kernels do the whole step in one
 pass over VMEM-resident tiles of the flattened state.
 
-Two kernels, one coefficient layout:
+Three kernels, one coefficient layout:
 
 * ``fused_step``      — the plain multistep update (inactive PAS steps, and
   every step of an uncorrected sampler).
 * ``fused_pas_step``  — folds the PAS coordinate application (d~ = sum_k
   cs[b, k] * u[b, k, :]) and the native-space mapping into the same tile pass,
   emitting (x_next, d~, native) so the history/Q pushes reuse the tile.
+* ``fused_pas_project_step`` — the weight-space variant: instead of a
+  materialised (B, n_basis, D) basis it takes the projected coordinates
+  pw = cs @ W (B, R+1) (``pca.basis_weights``) and contracts them directly
+  against the Q-buffer rows + current direction in the same tile pass, so a
+  corrected step streams the state exactly once and the basis never exists
+  in HBM.
 
 Coefficient rows are packed ``[alpha, beta_0 .. beta_{K-1}, t]`` (length K+2,
 see engine/engine.py) so one (N, K+2) table drives the whole trajectory scan.
@@ -33,7 +39,7 @@ from jax.experimental import pallas as pl
 
 Array = jax.Array
 
-__all__ = ["fused_step", "fused_pas_step"]
+__all__ = ["fused_step", "fused_pas_step", "fused_pas_project_step"]
 
 _DEF_BLOCK_D = 1024
 
@@ -61,6 +67,30 @@ def _pas_step_kernel(coef_ref, x_ref, u_ref, cs_ref, hist_ref,
         out = out + coef_ref[0, 1 + m] * hist_ref[m - 1]
     x_out[...] = out
     d_out[...] = d
+    nat_out[...] = nat
+
+
+def _pas_project_step_kernel(coef_ref, x_ref, q_ref, d_ref, pw_ref, hist_ref,
+                             x_out, d_out, nat_out, *, k: int,
+                             native_x0: bool):
+    x = x_ref[...]                                     # (B, blk)
+    d = d_ref[...]                                     # (B, blk)
+    pw = pw_ref[...]                                   # (B, R+1)
+    q = q_ref[...]                                     # (R, B, blk)
+    # d~ tile = sum_r pw[:, r] * q[r] + pw[:, -1] * d — contraction over the
+    # R+1 buffer rows, batched over B, elementwise along the tile
+    d_tilde = jax.lax.dot_general(
+        pw[:, :-1], q, (((1,), (0,)), ((0,), (1,))),
+        preferred_element_type=x.dtype) + pw[:, -1:] * d
+    if native_x0:
+        nat = x - coef_ref[0, k + 1] * d_tilde         # t is the last slot
+    else:
+        nat = d_tilde
+    out = coef_ref[0, 0] * x + coef_ref[0, 1] * nat
+    for m in range(1, k):
+        out = out + coef_ref[0, 1 + m] * hist_ref[m - 1]
+    x_out[...] = out
+    d_out[...] = d_tilde
     nat_out[...] = nat
 
 
@@ -136,3 +166,49 @@ def fused_pas_step(x: Array, u: Array, cs: Array, hist: Array, coef: Array, *,
         interpret=interpret,
     )(coef.astype(x.dtype)[None], x_p, u_p, cs.astype(x.dtype), hist_p)
     return x_next[..., :d], d_tilde[..., :d], nat[..., :d]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("native_x0", "block_d", "interpret"))
+def fused_pas_project_step(x: Array, q_rows: Array, d: Array, pw: Array,
+                           hist: Array, coef: Array, *,
+                           native_x0: bool = False,
+                           block_d: int = _DEF_BLOCK_D,
+                           interpret: bool = False
+                           ) -> tuple[Array, Array, Array]:
+    """Weight-space PAS step: projection against the raw Q rows, fused.
+
+    x, d (B, D); q_rows (R, B, D) the engine's Q-buffer carry (unmasked —
+    ``pw`` columns of invalid rows are zero by ``basis_weights`` contract);
+    pw (B, R+1) = cs @ W projected coordinates; hist (H, B, D); coef (K+2,).
+    Returns (x_next, d_tilde, native).  Compared to ``fused_pas_step`` this
+    drops the (B, n_basis, D) materialised-basis input entirely: the tile
+    pass reads x, q_rows, d, hist once and writes the three outputs once.
+    """
+    k = coef.shape[0] - 2
+    b = x.shape[0]
+    r = q_rows.shape[0]
+    h = hist.shape[0]
+    x_p, dim = _pad_d(x, block_d)
+    q_p, _ = _pad_d(q_rows, block_d)
+    d_p, _ = _pad_d(d, block_d)
+    hist_p, _ = _pad_d(hist, block_d)
+    n_blocks = x_p.shape[-1] // block_d
+
+    shape = jax.ShapeDtypeStruct(x_p.shape, x.dtype)
+    x_next, d_tilde, nat = pl.pallas_call(
+        functools.partial(_pas_project_step_kernel, k=k, native_x0=native_x0),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, k + 2), lambda i: (0, 0)),
+            pl.BlockSpec((b, block_d), lambda i: (0, i)),
+            pl.BlockSpec((r, b, block_d), lambda i: (0, 0, i)),
+            pl.BlockSpec((b, block_d), lambda i: (0, i)),
+            pl.BlockSpec((b, r + 1), lambda i: (0, 0)),
+            pl.BlockSpec((h, b, block_d), lambda i: (0, 0, i)),
+        ],
+        out_specs=[pl.BlockSpec((b, block_d), lambda i: (0, i))] * 3,
+        out_shape=[shape, shape, shape],
+        interpret=interpret,
+    )(coef.astype(x.dtype)[None], x_p, q_p, d_p, pw.astype(x.dtype), hist_p)
+    return x_next[..., :dim], d_tilde[..., :dim], nat[..., :dim]

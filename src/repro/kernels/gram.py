@@ -1,10 +1,22 @@
-"""PAS Gram matrix (X X^T) as a Pallas TPU kernel.
+"""PAS Gram kernels (X X^T over a huge feature axis) as Pallas TPU kernels.
 
 The PAS buffer is (n, D) with n ~ 12 and D huge (the flattened, possibly
-device-local sample dimension).  The kernel tiles D into VMEM-sized chunks
-and accumulates the (n x n) f32 product across the sequential grid axis —
-one pass over X, no transposed re-read (vs. the naive X @ X.T which reads X
-twice with a transposed layout).  Masked rows are zeroed on the fly.
+device-local sample dimension).  Both kernels tile D into VMEM-sized chunks
+and accumulate the tiny f32 Gram product across the sequential grid axis —
+one pass over the rows, no transposed re-read (vs. the naive X @ X.T which
+reads X twice with a transposed layout).  Masked rows are zeroed on the fly.
+
+Tail handling: a D that does not divide ``block_d`` is *not* padded host-side
+(the seed version materialised a full padded copy of the buffer per call) —
+the final grid block masks its out-of-range lanes in-kernel, so any
+``block_d`` is legal for any D and the input is never copied.
+
+* ``gram``     — single-buffer Gram (n, D) -> (n, n); the ``psum_gram``
+  building block of the sharded PAS path.
+* ``gram_qd``  — the corrected-step Gram: per-sample Xp = [Q * mask; d] from
+  the engine's (R, B, D) Q-buffer carry + (B, D) direction, -> (B, R+1, R+1).
+  This is the only reduction over D a corrected step performs; on a mesh the
+  caller psums its ~1 KB output and every downstream stage stays local.
 """
 from __future__ import annotations
 
@@ -16,11 +28,25 @@ from jax.experimental import pallas as pl
 
 Array = jax.Array
 
+_DEF_BLOCK_D = 2048
 
-def _gram_kernel(x_ref, mask_ref, o_ref, *, n_blocks: int):
+
+def _masked_tile(x: Array, i, block_d: int, d_total: int) -> Array:
+    """Zero the lanes of tile ``i`` that fall past the true D extent.
+
+    Out-of-range lanes of a partial final block hold unspecified values
+    (Pallas does not zero-fill), so ``where`` — not multiplication, which
+    would keep a NaN a NaN — is required.
+    """
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, x.ndim - 1)
+    return jnp.where(col + i * block_d < d_total, x, 0.0)
+
+
+def _gram_kernel(x_ref, mask_ref, o_ref, *, block_d: int, d_total: int):
     i = pl.program_id(0)
     x = x_ref[...].astype(jnp.float32)           # (n, block_d)
     x = x * mask_ref[...].astype(jnp.float32)[:, None]
+    x = _masked_tile(x, i, block_d, d_total)
     partial = jax.lax.dot_general(x, x, (((1,), (1,)), ((), ())),
                                   preferred_element_type=jnp.float32)
 
@@ -34,19 +60,16 @@ def _gram_kernel(x_ref, mask_ref, o_ref, *, n_blocks: int):
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def gram(x: Array, mask: Array | None = None, *, block_d: int = 2048,
+def gram(x: Array, mask: Array | None = None, *, block_d: int = _DEF_BLOCK_D,
          interpret: bool = False) -> Array:
     """x (n, D) [+ mask (n,)] -> X X^T (n, n) in float32."""
     n, d = x.shape
     if mask is None:
         mask = jnp.ones((n,), jnp.float32)
-    pad = (-d) % block_d
-    if pad:
-        x = jnp.pad(x, ((0, 0), (0, pad)))
-    n_blocks = x.shape[1] // block_d
+    n_blocks = pl.cdiv(d, block_d)
 
     return pl.pallas_call(
-        functools.partial(_gram_kernel, n_blocks=n_blocks),
+        functools.partial(_gram_kernel, block_d=block_d, d_total=d),
         grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec((n, block_d), lambda i: (0, i)),
@@ -56,3 +79,49 @@ def gram(x: Array, mask: Array | None = None, *, block_d: int = 2048,
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
         interpret=interpret,
     )(x, mask.astype(jnp.float32))
+
+
+def _gram_qd_kernel(q_ref, mask_ref, d_ref, o_ref, *,
+                    block_d: int, d_total: int):
+    i = pl.program_id(1)
+    q = q_ref[...][:, 0, :].astype(jnp.float32)       # (R, block_d)
+    q = q * mask_ref[...].astype(jnp.float32)[:, None]
+    dv = d_ref[...].astype(jnp.float32)               # (1, block_d)
+    xp = jnp.concatenate([q, dv], axis=0)             # (R+1, block_d)
+    xp = _masked_tile(xp, i, block_d, d_total)
+    partial = jax.lax.dot_general(xp, xp, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _first():
+        o_ref[0] = partial
+
+    @pl.when(i > 0)
+    def _rest():
+        o_ref[0] = o_ref[0] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gram_qd(q_rows: Array, q_mask: Array, d: Array, *,
+            block_d: int = _DEF_BLOCK_D, interpret: bool = False) -> Array:
+    """Corrected-step Gram: (R, B, D) rows + (B, D) direction -> (B, R+1, R+1).
+
+    Grid is (B, D-blocks) with the block axis minor, so each sample's tiles
+    accumulate sequentially into its (R+1, R+1) output while the row/d tiles
+    stream through VMEM exactly once.
+    """
+    r, b, dim = q_rows.shape
+    n_blocks = pl.cdiv(dim, block_d)
+
+    return pl.pallas_call(
+        functools.partial(_gram_qd_kernel, block_d=block_d, d_total=dim),
+        grid=(b, n_blocks),
+        in_specs=[
+            pl.BlockSpec((r, 1, block_d), lambda j, i: (0, j, i)),
+            pl.BlockSpec((r,), lambda j, i: (0,)),
+            pl.BlockSpec((1, block_d), lambda j, i: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((1, r + 1, r + 1), lambda j, i: (j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r + 1, r + 1), jnp.float32),
+        interpret=interpret,
+    )(q_rows, q_mask.astype(jnp.float32), d)

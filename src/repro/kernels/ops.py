@@ -14,10 +14,11 @@ safe because dispatch is backend-keyed (host-side, trace-time — never on
 array values) and every kernel treats its tiled axes independently: callers
 shard only axes the kernels never reduce over (batch, and the D tiling
 axis), so a shard is just a smaller instance of the same shape contract.
-Kernels that DO reduce (``gram`` over D) are composed with an explicit
-``lax.psum`` by the caller (``distributed.psum_gram``) — the kernel itself
-stays local.  On TPU the per-device shard must still satisfy the kernel's
-tile minimums; size meshes so D_local keeps the lane dim >= 128.
+Kernels that DO reduce (``gram`` / ``gram_qd`` over D) are composed with an
+explicit ``lax.psum`` by the caller (``distributed.psum_gram`` /
+``batched_pas_weights_sharded``) — the kernel itself stays local.  On TPU
+the per-device shard must still satisfy the kernel's tile minimums; size
+meshes so D_local keeps the lane dim >= 128.
 
 Differentiation contract: these ops are *forward-only* — the Pallas kernels
 carry no custom VJPs.  Callers that differentiate (the CalibrationEngine's
@@ -36,8 +37,9 @@ from . import ref
 
 Array = jax.Array
 
-__all__ = ["flash_attention", "fused_pas_step", "fused_step", "gram",
-           "rmsnorm", "ssm_scan", "use_pallas"]
+__all__ = ["flash_attention", "fused_pas_project_step", "fused_pas_step",
+           "fused_step", "gram", "gram_qd", "rmsnorm", "ssm_scan",
+           "use_pallas"]
 
 
 def use_pallas() -> bool:
@@ -91,12 +93,49 @@ def fused_pas_step(x: Array, u: Array, cs: Array, hist: Array, coef: Array, *,
     return ref.fused_pas_step(x, u, cs, hist, coef, native_x0=native_x0)
 
 
-def gram(x: Array, mask: Array | None = None, *, interpret: bool = False) -> Array:
-    """PAS Gram matrix X X^T over a huge feature axis (kernels/gram.py)."""
+def fused_pas_project_step(x: Array, q_rows: Array, d: Array, pw: Array,
+                           hist: Array, coef: Array, *,
+                           native_x0: bool = False, interpret: bool = False
+                           ) -> tuple[Array, Array, Array]:
+    """Weight-space PAS projection + update in one tile pass
+    (kernels/fused_step.py); the corrected-step hot path — the basis is
+    never materialised, ``pw = cs @ basis_weights(gram_qd(...))``."""
+    if interpret or use_pallas():
+        from . import fused_step as fs
+        return fs.fused_pas_project_step(
+            x, q_rows, d, pw, hist, coef, native_x0=native_x0,
+            interpret=interpret or not use_pallas())
+    return ref.fused_pas_project_step(x, q_rows, d, pw, hist, coef,
+                                      native_x0=native_x0)
+
+
+def gram(x: Array, mask: Array | None = None, *, block_d: int | None = None,
+         interpret: bool = False) -> Array:
+    """PAS Gram matrix X X^T over a huge feature axis (kernels/gram.py).
+
+    ``block_d`` sizes the VMEM tile of the Pallas path (any value is legal
+    for any D — the tail block is masked in-kernel); ``None`` keeps the
+    kernel default.  The XLA oracle ignores it (no tiling to size).
+    """
     if interpret or use_pallas():
         from . import gram as gk
-        return gk.gram(x, mask=mask, interpret=interpret or not use_pallas())
+        kw = {} if block_d is None else {"block_d": block_d}
+        return gk.gram(x, mask=mask, interpret=interpret or not use_pallas(),
+                       **kw)
     return ref.gram(x, mask=mask)
+
+
+def gram_qd(q_rows: Array, q_mask: Array, d: Array, *,
+            block_d: int | None = None, interpret: bool = False) -> Array:
+    """Per-sample Gram of the PAS rows [Q * mask; d] (kernels/gram.py):
+    (R, B, D) + (R,) + (B, D) -> (B, R+1, R+1) f32.  The one D reduction a
+    corrected step performs; on a mesh the caller psums this tiny output."""
+    if interpret or use_pallas():
+        from . import gram as gk
+        kw = {} if block_d is None else {"block_d": block_d}
+        return gk.gram_qd(q_rows, q_mask, d,
+                          interpret=interpret or not use_pallas(), **kw)
+    return ref.gram_qd(q_rows, q_mask, d)
 
 
 def rmsnorm(x: Array, scale: Array, eps: float = 1e-6, *,

@@ -12,8 +12,8 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-__all__ = ["attention", "fused_pas_step", "fused_step", "gram", "rmsnorm",
-           "ssm_scan"]
+__all__ = ["attention", "fused_pas_project_step", "fused_pas_step",
+           "fused_step", "gram", "gram_qd", "rmsnorm", "ssm_scan"]
 
 _NEG_INF = -1e30
 
@@ -92,6 +92,39 @@ def gram(x: Array, mask: Array | None = None) -> Array:
     if mask is not None:
         xf = xf * mask[:, None].astype(jnp.float32)
     return xf @ xf.T
+
+
+def gram_qd(q_rows: Array, q_mask: Array, d: Array) -> Array:
+    """Per-sample Gram of the PAS projection rows Xp = [Q * mask; d].
+
+    q_rows: (R, B, D) Q-buffer row storage (batch axis second — the engine
+    carry layout); q_mask: (R,) row validity; d: (B, D) current direction.
+    Returns (B, R+1, R+1) float32 — the one reduction over D a corrected
+    step performs (on a state-sharded mesh the caller psums this tiny
+    output; everything downstream of it is local).
+    """
+    qf = q_rows.astype(jnp.float32) * q_mask.astype(jnp.float32)[:, None, None]
+    xp = jnp.concatenate([qf, d.astype(jnp.float32)[None]], axis=0)
+    return jnp.einsum("rbd,sbd->brs", xp, xp)
+
+
+def fused_pas_project_step(x: Array, q_rows: Array, d: Array, pw: Array,
+                           hist: Array, coef: Array, *,
+                           native_x0: bool = False
+                           ) -> tuple[Array, Array, Array]:
+    """Weight-space PAS projection + native mapping + multistep update, fused.
+
+    ``pw`` (B, R+1) are the projected coordinates cs @ W (``pca.basis_weights``
+    folded against the learned coordinates), so the corrected direction is
+    d~_b = sum_r pw[b, r] * Xp_r — one contraction over the R+1 buffer rows,
+    elementwise along D (shardable with zero collectives).  ``pw`` columns of
+    invalid buffer rows must be zero (basis_weights' mask folding guarantees
+    it), so q_rows is consumed *unmasked*.  Returns (x_next, d_tilde, native).
+    """
+    pwx = pw.astype(x.dtype)
+    d_tilde = jnp.einsum("br,rbd->bd", pwx[:, :-1], q_rows) + pwx[:, -1:] * d
+    nat = x - coef[-1] * d_tilde if native_x0 else d_tilde
+    return fused_step(x, nat, hist, coef), d_tilde, nat
 
 
 def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:

@@ -216,7 +216,9 @@ def test_pas_q_buffer_bounded_matches_old_layout(setup, monkeypatch):
     noise-floor components (arbitrary in *both* layouts — see module
     docstring on eigh's degenerate subspace) may rotate.  The parity
     contract is therefore: (a) floor-clearing basis components bit-equal,
-    (b) trajectories bit-equal whenever coords don't weight the noise floor.
+    (b) trajectories equal to fusion-noise tolerance whenever coords don't
+    weight the noise floor (the two cap layouts are different compiled
+    programs, and bitwise equality only holds within one program).
     """
     gmm, ts, x4 = setup
     sol = solvers.make_solver("ipndm3", ts)
@@ -252,7 +254,13 @@ def test_pas_q_buffer_bounded_matches_old_layout(setup, monkeypatch):
     want_full = np.asarray(_seed_pas_jit(sol, gmm.eps, p, cfg)(x4))
     eng_full = SamplingEngine(sol)           # fresh: no cached bounded program
     got_full = np.asarray(eng_full.sample(gmm.eps, x4, params=p, cfg=cfg))
-    np.testing.assert_array_equal(want_bounded, want_full)
+    # bounded vs full cap are *different compiled programs* (5-row vs 6-row
+    # buffers), so XLA may fuse their float arithmetic differently — the
+    # repo-wide convention is bitwise only for identical programs (see
+    # test_mesh.py's dp-vs-replicated) and float tolerance otherwise; the
+    # buffers' extra rows are mask-zeroed, so the math is the same and the
+    # drift is pure last-bit fusion noise
+    np.testing.assert_allclose(want_bounded, want_full, rtol=0, atol=1e-5)
     np.testing.assert_allclose(got_bounded, got_full, rtol=0, atol=PAS_ATOL)
 
 
