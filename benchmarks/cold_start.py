@@ -1,0 +1,230 @@
+"""Fleet cold start: calibration + first-request wall time, cold vs warm cache.
+
+The ISSUE-9 acceptance metric: with a populated persistent compile cache
+(``repro.engine.compile_cache``), a fresh process must reach "calibrated and
+serving" at >= 2x lower calibration wall time than the same process with no
+cache.  The probe is the full fleet launch path — an ``NFELadder`` of three
+PAS rungs over the GMM oracle, routed through ``PipelineRouter``:
+
+* ``calibrate``   — ``NFELadder.calibrate`` end-to-end (teacher scans,
+  Algorithm-1 programs, final gates; every compile lands inside the timer);
+* ``precompile``  — ``NFELadder.precompile``: AOT-warm each lane's exact
+  flush variant before the queue admits traffic;
+* ``first requests`` — one budget-filling request per lane, timed
+  submit -> result (the latency the first real user sees).
+
+Each arm runs in a *fresh subprocess* (a warm in-process jit cache would
+fake the numbers): ``nocache`` (no cache dir), ``cold_cache`` (empty cache
+dir — pays the compiles AND populates the cache), ``warm_cache`` (same dir
+again — the restart we are optimising).  Results land in root-level
+``BENCH_cold_start.json`` with the per-arm persistent-cache counters so the
+speedup is auditable (cache hits, compile seconds).
+
+  PYTHONPATH=src python -m benchmarks.cold_start [--cache-dir DIR]
+
+``--dry-run`` is the CI smoke: one tiny in-process probe against
+``--cache-dir``, appending to ``<dir>/probe_history.jsonl``; a second
+invocation with ``--expect-cache-hits`` asserts the cache actually hit and
+the wall time dropped (two processes sharing one cache dir = a real
+restart, no BENCH json written).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_cold_start.json"
+HISTORY = "probe_history.jsonl"
+
+NFES = (4, 6, 8)
+
+
+def probe(cache_dir: str | None, *, nfes=NFES, teacher_nfe: int = 40,
+          calib_batch: int = 128, sgd_iters: int = 100,
+          max_batch: int = 16) -> dict:
+    """One cold-start measurement inside THIS process (must be fresh)."""
+    from repro.engine import compile_cache, engine_cache_stats
+    from repro.runtime.ladder import NFELadder
+    from repro.runtime.serve_loop import Request, ServeConfig
+
+    from . import common
+
+    if cache_dir:
+        compile_cache.configure(cache_dir)
+    gmm = common.oracle()
+    cfg = common.default_pas_cfg(n_sgd_iters=sgd_iters)
+    spec = common.spec_for("ipndm4", nfes[-1], teacher_nfe=teacher_nfe,
+                           pas_cfg=cfg)
+    ladder = NFELadder(spec, nfes=nfes, teacher_rung=False)
+    model_key = f"oracle:gmm:{common.DIM}"
+
+    router = ladder.build_router(
+        gmm.eps, common.DIM,
+        cfg=ServeConfig(max_batch=max_batch, deadline_ms=50.0))
+    try:
+        t0 = time.time()
+        ladder.calibrate(router, key=jax.random.key(0), batch=calib_batch)
+        calibrate_s = time.time() - t0
+
+        t0 = time.time()
+        ladder.precompile(router, model_key=model_key)
+        precompile_s = time.time() - t0
+
+        # first request per lane, sized to fill the flush budget so the
+        # latency is program dispatch, not the partial-flush deadline wait
+        first_ms = {}
+        for i, lane in enumerate(router.lane_keys):
+            t0 = time.time()
+            h = router.submit(Request(seed=i, n_samples=max_batch,
+                                      pipeline=lane))
+            jax.block_until_ready(h.result())
+            first_ms[lane] = round((time.time() - t0) * 1e3, 1)
+    finally:
+        router.close()
+
+    lats = sorted(first_ms.values())
+    p95 = lats[min(len(lats) - 1, int(round(0.95 * (len(lats) - 1))))]
+    stats = engine_cache_stats()["persistent"]
+    return {
+        "cache_dir": cache_dir,
+        "nfes": list(nfes), "teacher_nfe": teacher_nfe,
+        "calib_batch": calib_batch, "sgd_iters": sgd_iters,
+        "calibrate_s": round(calibrate_s, 3),
+        "precompile_s": round(precompile_s, 3),
+        "ready_s": round(calibrate_s + precompile_s, 3),
+        "first_request_ms": first_ms,
+        "first_request_p95_ms": p95,
+        "persistent": stats,
+    }
+
+
+def _spawn_probe(arm: str, cache_dir: str | None, extra: list[str]) -> dict:
+    """Run one probe in a fresh interpreter; parse its marker line."""
+    cmd = [sys.executable, "-m", "benchmarks.cold_start", "--probe"]
+    if cache_dir:
+        cmd += ["--cache-dir", cache_dir]
+    cmd += extra
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    t0 = time.time()
+    res = subprocess.run(cmd, cwd=ROOT, env=env, text=True,
+                         capture_output=True)
+    wall = time.time() - t0
+    if res.returncode != 0:
+        sys.stderr.write(res.stdout + res.stderr)
+        raise RuntimeError(f"{arm} probe failed (exit {res.returncode})")
+    line = next(ln for ln in res.stdout.splitlines()
+                if ln.startswith("COLD_START_PROBE_JSON:"))
+    rep = json.loads(line.split(":", 1)[1])
+    rep["process_wall_s"] = round(wall, 3)
+    print(f"  [{arm}] calibrate={rep['calibrate_s']}s "
+          f"precompile={rep['precompile_s']}s "
+          f"first_req_p95={rep['first_request_p95_ms']}ms "
+          f"(process {rep['process_wall_s']}s)")
+    return rep
+
+
+def run(cache_dir: str | None = None) -> dict:
+    """Three fresh-process arms; write BENCH_cold_start.json."""
+    tmp = None
+    if cache_dir is None:
+        tmp = tempfile.TemporaryDirectory(prefix="pas-cold-start-")
+        cache_dir = tmp.name
+    try:
+        print("cold-start bench: 3-rung ladder "
+              f"(nfes={list(NFES)}), cache dir {cache_dir}")
+        arms = {
+            "nocache": _spawn_probe("nocache", None, []),
+            "cold_cache": _spawn_probe("cold_cache", cache_dir, []),
+            "warm_cache": _spawn_probe("warm_cache", cache_dir, []),
+        }
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+    no, warm = arms["nocache"], arms["warm_cache"]
+    report = {
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "arms": arms,
+        "speedup_calibrate_warm_vs_nocache": round(
+            no["calibrate_s"] / warm["calibrate_s"], 2),
+        "speedup_ready_warm_vs_nocache": round(
+            no["ready_s"] / warm["ready_s"], 2),
+        "first_request_p95_ms": {
+            "nocache": no["first_request_p95_ms"],
+            "warm_cache": warm["first_request_p95_ms"],
+        },
+        "warm_persistent_hits": warm["persistent"]["persistent_hits"],
+        "generated": time.strftime("%F %T"),
+    }
+    OUT.write_text(json.dumps(report, indent=1))
+    from . import common
+    common.save_table("cold_start", [report])
+    return report
+
+
+def dry_run(cache_dir: str, expect_cache_hits: bool) -> dict:
+    """CI smoke: tiny in-process probe + history assertion (no BENCH json)."""
+    rep = probe(cache_dir, nfes=(3, 4), teacher_nfe=8, calib_batch=16,
+                sgd_iters=8, max_batch=8)
+    hist_path = Path(cache_dir) / HISTORY
+    history = ([json.loads(ln) for ln in
+                hist_path.read_text().splitlines() if ln.strip()]
+               if hist_path.exists() else [])
+    if expect_cache_hits:
+        if not history:
+            raise SystemExit("--expect-cache-hits: no prior probe in "
+                             f"{hist_path}; run once without it first")
+        hits = rep["persistent"]["persistent_hits"]
+        if hits <= 0:
+            raise SystemExit(
+                f"--expect-cache-hits: persistent_hits={hits} "
+                f"(stats {rep['persistent']})")
+        prev = history[0]["calibrate_s"]
+        if not rep["calibrate_s"] < prev:
+            raise SystemExit(
+                f"--expect-cache-hits: warm calibrate {rep['calibrate_s']}s "
+                f"not below cold {prev}s")
+        print(f"cache hits confirmed: persistent_hits={hits}, "
+              f"calibrate {prev}s -> {rep['calibrate_s']}s")
+    with hist_path.open("a") as f:
+        f.write(json.dumps(rep) + "\n")
+    return rep
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent compile cache dir (default: fresh tmp)")
+    ap.add_argument("--probe", action="store_true",
+                    help="internal: run one measurement in this process")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny in-process probe, no BENCH json (CI smoke)")
+    ap.add_argument("--expect-cache-hits", action="store_true",
+                    help="with --dry-run: assert the cache hit and the wall "
+                         "time dropped vs the first recorded probe")
+    args = ap.parse_args()
+    if args.probe:
+        rep = probe(args.cache_dir)
+        print("COLD_START_PROBE_JSON:" + json.dumps(rep))
+    elif args.dry_run:
+        if not args.cache_dir:
+            ap.error("--dry-run requires --cache-dir")
+        rep = dry_run(args.cache_dir, args.expect_cache_hits)
+        print(json.dumps(rep, indent=1))
+    else:
+        rep = run(cache_dir=args.cache_dir)
+        print(json.dumps(rep, indent=1))
+        print("COLD_START_SPEEDUP="
+              f"{rep['speedup_calibrate_warm_vs_nocache']}x")

@@ -256,6 +256,40 @@ class Pipeline:
             return y, valid, evals
         return y, valid
 
+    def precompile(self, batch: int, *, use_pas: bool = True,
+                   donate_x: bool = True, calibration: bool = False,
+                   cache=None, model_key: Optional[str] = None) -> dict:
+        """AOT-compile the exact variant a serve flush would dispatch.
+
+        ``batch`` is padded to the spec mesh's DP divisor exactly like
+        ``sample_async`` pads flush buffers, so the warmed program is the
+        one the scheduler runs — not a same-batch sibling that would still
+        pay a first-flush compile.  ``use_pas=True`` warms the corrected
+        variant when the pipeline is calibrated (plain otherwise — the
+        corrected program's active-pattern key does not exist before
+        calibration); adaptive specs warm the masked-scan program.
+        ``calibration=True`` additionally AOT-compiles the calibration
+        engine's programs (teacher scan, Algorithm 1, final gate) for this
+        batch.  ``cache``/``model_key`` feed the persistent compile cache
+        (see ``repro.engine.compile_cache``); returns the per-program
+        placement reports.
+        """
+        if self.dim is None:
+            raise ValueError("precompile needs dim; pass dim= to "
+                             "from_spec/load")
+        batch = int(batch)
+        full = batch + self.mesh_spec.pad_batch(batch)
+        params = self.params if use_pas else None
+        eng = self.adaptive_engine if self.is_adaptive else self.engine
+        out = {"sample": eng.aot_compile(
+            self.eps_fn, full, self.dim, params=params, cfg=self.spec.pas,
+            donate_x=donate_x, cache=cache, model_key=model_key)}
+        if calibration:
+            out["calibration"] = self.calibration_engine.aot_compile(
+                self.eps_fn, full, self.dim, cache=cache,
+                model_key=model_key)
+        return out
+
     def trajectory(self, x_t: Optional[Array] = None, *,
                    key: Optional[Array] = None, batch: Optional[int] = None,
                    use_pas: bool = True) -> tuple[Array, Array]:

@@ -8,6 +8,7 @@ shims onto it.  ``SamplingEngine`` (engine.py) compiles Algorithm 2;
 the same mesh and kernels.
 """
 
+from . import compile_cache
 from .adaptive import (AdaptiveEngine, adaptive_engine_cache_stats,
                        clear_adaptive_engine_cache,
                        get_adaptive_engine_for_spec)
@@ -15,6 +16,7 @@ from .calibration import (CalibrationEngine, calibration_engine_cache_stats,
                           calibration_engine_for_solver,
                           clear_calibration_engine_cache,
                           get_calibration_engine_for_spec)
+from .compile_cache import CompileCache
 from .engine import (PASShardingFallbackWarning, SamplingEngine,
                      clear_engine_cache, engine_cache_stats,
                      engine_for_solver, get_engine, get_engine_for_spec)
@@ -22,6 +24,7 @@ from .engine import (PASShardingFallbackWarning, SamplingEngine,
 __all__ = [
     "AdaptiveEngine",
     "CalibrationEngine",
+    "CompileCache",
     "PASShardingFallbackWarning",
     "SamplingEngine",
     "adaptive_engine_cache_stats",
@@ -30,6 +33,7 @@ __all__ = [
     "clear_adaptive_engine_cache",
     "clear_calibration_engine_cache",
     "clear_engine_cache",
+    "compile_cache",
     "engine_cache_stats",
     "engine_for_solver",
     "get_engine",

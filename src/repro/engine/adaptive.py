@@ -34,6 +34,7 @@ construction (asserted in tests/test_adaptive.py).
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Any, Callable, Optional
 
 import jax
@@ -45,8 +46,9 @@ from repro.core.error_control import PIDState, pid_init, pid_propose
 from repro.core.pca import pas_basis
 from repro.kernels import ops
 
-from .engine import (_CacheStats, _compiled_lookup, _fn_key, _lru_lookup,
-                     get_engine_for_spec)
+from . import compile_cache
+from .engine import (_CacheStats, _aot_program, _compiled_lookup, _fn_key,
+                     _lru_lookup, _shape_sig, get_engine_for_spec)
 
 Array = jax.Array
 EpsFn = Callable[[Array, Array], Array]
@@ -83,6 +85,7 @@ class AdaptiveEngine:
         self.t_min = float(self.ts[-1])
         self.t_max = float(self.ts[0])
         self._compiled: dict[Any, tuple[Callable, Callable]] = {}
+        self._aot: dict[Any, Callable] = {}
 
     # -- cost model ----------------------------------------------------------
 
@@ -253,23 +256,12 @@ class AdaptiveEngine:
                        "finished": np.ones((b,), bool), "t": None,
                        "alive_trace": None, "scan_evals": b * self.fixed.nfe}
 
-        use_pas = params is not None and bool(np.asarray(params.active).any())
-        if use_pas:
-            if cfg is None:
-                from repro.core.pas import PASConfig
-                cfg = PASConfig()
-            pas_key = (tuple(bool(a) for a in np.asarray(params.active)),
-                       cfg.coord_mode, int(params.coords.shape[1]))
-            key = ("adaptive-pas", _fn_key(eps_fn), pas_key, donate_x)
-            fn = self._get_compiled(
-                key, lambda: self._build(eps_fn, pas_key, donate_x), eps_fn)
-            out = fn(x_t, jnp.asarray(params.coords, self.dtype))
-        else:
-            key = ("adaptive", _fn_key(eps_fn), donate_x)
-            fn = self._get_compiled(
-                key, lambda: self._build(eps_fn, None, donate_x), eps_fn)
-            out = fn(x_t)
-        x, n_acc, n_rej, t, finished, trace = out
+        key, build, coords = self._variant(eps_fn, params, cfg, donate_x)
+        args = (x_t,) if coords is None else (x_t, coords)
+        fn = self._aot.get((key, _shape_sig(*args)))
+        if fn is None:
+            fn = self._get_compiled(key, build, eps_fn)
+        x, n_acc, n_rej, t, finished, trace = fn(*args)
         info = {
             "nfe": 2 * (n_acc + n_rej),
             "n_accept": n_acc,
@@ -288,11 +280,89 @@ class AdaptiveEngine:
                                      donate_x=donate_x)
         return x
 
+    def _variant(self, eps_fn: EpsFn, params, cfg, donate_x: bool
+                 ) -> tuple[Any, Callable, Optional[Array]]:
+        """(variant key, builder, coords-or-None) — the one mapping from a
+        (params, cfg, donate) triple onto a compiled masked-scan program,
+        shared by ``sample_with_info`` and ``aot_compile``."""
+        if params is not None and bool(np.asarray(params.active).any()):
+            if cfg is None:
+                from repro.core.pas import PASConfig
+                cfg = PASConfig()
+            pas_key = (tuple(bool(a) for a in np.asarray(params.active)),
+                       cfg.coord_mode, int(params.coords.shape[1]))
+            key = ("adaptive-pas", _fn_key(eps_fn), pas_key, donate_x)
+            build = lambda: self._build(eps_fn, pas_key, donate_x)  # noqa: E731
+            return key, build, jnp.asarray(params.coords, self.dtype)
+        key = ("adaptive", _fn_key(eps_fn), donate_x)
+        return key, (lambda: self._build(eps_fn, None, donate_x)), None
+
+    # -- cold start: AOT compile + persistent-cache identity -----------------
+
+    def engine_fingerprint(self) -> str:
+        """Fixed-engine fingerprint extended with the controller config —
+        everything ``spec.engine_key`` adds for adaptive specs."""
+        h = hashlib.sha256()
+        h.update(self.fixed.engine_fingerprint().encode())
+        h.update(repr(self.ec).encode())
+        return h.hexdigest()[:16]
+
+    def _persist_key(self, model_key: Optional[str], program: str,
+                     static_desc, sig) -> Optional[str]:
+        if model_key is None:
+            return None
+        return "|".join([str(model_key), self.engine_fingerprint(), program,
+                         repr(static_desc), repr(sig)])
+
+    def aot_compile(self, eps_fn: EpsFn, batch: int, dim: int, *,
+                    params=None, cfg=None, donate_x: bool = False,
+                    cache: Optional[compile_cache.CompileCache] = None,
+                    model_key: Optional[str] = None) -> dict:
+        """Lower + compile the masked-scan program ahead of time.
+
+        Mirrors ``SamplingEngine.aot_compile`` for the error-controlled
+        path: the exact variant ``sample_with_info`` would dispatch for
+        (params, cfg, donate_x) is compiled (or restored from a serialized
+        executable) at (batch, dim), stashed for direct dispatch on single
+        devices, and reported with per-device memory and collective counts.
+        With error control disabled the spec's fixed engine *is* the
+        sampler, so this delegates to its ``aot_compile``.
+        """
+        if not self.ec.enabled:
+            return self.fixed.aot_compile(
+                eps_fn, batch, dim, params=params, cfg=cfg,
+                donate_x=donate_x, cache=cache, model_key=model_key)
+        key, build, coords = self._variant(eps_fn, params, cfg, donate_x)
+        fn = self._get_compiled(key, build, eps_fn)
+        arg_specs = [jax.ShapeDtypeStruct((batch, dim), self.dtype)]
+        if coords is not None:
+            arg_specs.append(jax.ShapeDtypeStruct(coords.shape, coords.dtype))
+        sig = tuple((tuple(s.shape), jnp.dtype(s.dtype).name)
+                    for s in arg_specs)
+        if cache is None:
+            cache = compile_cache.active()
+        fixed = self.fixed
+        out = {
+            "program": key[0],
+            "devices": fixed.mesh.size if fixed.mesh is not None else 1,
+            "mesh": (fixed.mesh_spec.to_dict()
+                     if fixed.mesh_spec is not None else None),
+            "batch": batch, "dim": dim,
+        }
+        out.update(_aot_program(
+            self._aot, (key, sig), fn, arg_specs, cache=cache,
+            persist_key=self._persist_key(model_key, key[0], key[2:], sig),
+            executable_ok=fixed.mesh is None, serialize_ok=not donate_x))
+        return out
+
     def _get_compiled(self, key, build, eps_fn) -> Callable:
         return _compiled_lookup(self._compiled, key, build, eps_fn)
 
     def compiled_variants(self) -> int:
         return len(self._compiled)
+
+    def aot_variants(self) -> int:
+        return len(self._aot)
 
 
 # ---------------------------------------------------------------------------
@@ -329,4 +399,6 @@ def adaptive_engine_cache_stats() -> dict[str, int]:
     return {"engines": len(_ADAPTIVE), "hits": _STATS.hits,
             "misses": _STATS.misses,
             "compiled_variants": sum(e.compiled_variants()
-                                     for e in _ADAPTIVE.values())}
+                                     for e in _ADAPTIVE.values()),
+            "aot_variants": sum(e.aot_variants()
+                                for e in _ADAPTIVE.values())}

@@ -47,6 +47,7 @@ same adoption metric); parity is asserted in tests/test_calibration_engine.py
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Any, Callable, Optional
 
 import jax
@@ -59,8 +60,10 @@ from repro.core.solvers import LinearMultistepSolver, Solver, SolverHist
 
 from repro.kernels import ops
 
-from .engine import (SamplingEngine, _CacheStats, _compiled_lookup,
-                     _engine_for_solver, _fn_key, _lru_lookup, _scaled_coords,
+from . import compile_cache
+from .engine import (SamplingEngine, _CacheStats, _aot_program,
+                     _compiled_lookup, _engine_for_solver, _fn_key,
+                     _lru_lookup, _scaled_coords, _shape_sig,
                      get_engine_for_spec)
 
 Array = jax.Array
@@ -107,6 +110,7 @@ class CalibrationEngine:
         self.cfg = cfg
         self.nfe = self.solver.nfe
         self._compiled: dict[Any, tuple[Callable, Callable]] = {}
+        self._aot: dict[Any, Callable] = {}
 
     def _require_lms(self) -> None:
         """Calibration (not teacher building) needs a 1-eval solver, checked
@@ -241,18 +245,30 @@ class CalibrationEngine:
         for j in drop_order:
             rows.append(m.copy())
             m[j] = False
-        masks = np.stack(rows)                       # (K, N) candidates
+        k_cand = len(rows)
+        # pad the candidate block to a static (N, N) shape (repeat the last
+        # real row): the gate compiles once per eps model instead of once
+        # per adopted-step count, and its AOT shape is known before any
+        # calibration ran; padded rows are sliced off below
+        while len(rows) < self.nfe:
+            rows.append(rows[-1].copy())
+        masks = np.stack(rows)                       # (N, N) candidates
 
         # plain baseline through the spec's cached SamplingEngine: one
         # engine lookup, the same compiled plain scan sampling uses
         x_plain = self.sampling.sample(eps_fn, x_gate)
         e_plain = float(jnp.mean(jnp.linalg.norm(x_plain - gt_end, axis=-1)))
 
-        gate = self._get_compiled(("gate", _fn_key(eps_fn)),
-                                  lambda: self._build_gate(eps_fn), eps_fn)
-        es = np.asarray(gate(x_gate, gt_end,
-                             jnp.asarray(params.coords, self.sampling.dtype),
-                             jnp.asarray(masks)))
+        key = ("gate", _fn_key(eps_fn))
+        args = (x_gate, gt_end,
+                jnp.asarray(params.coords, self.sampling.dtype),
+                jnp.asarray(masks))
+        gate = self._aot.get((key, _shape_sig(*args)))
+        if gate is None:
+            gate = self._get_compiled(key,
+                                      lambda: self._build_gate(eps_fn),
+                                      eps_fn)
+        es = np.asarray(gate(*args))[:k_cand]
 
         for c, e in enumerate(es):
             if e <= e_plain * (1.0 + 1e-4):
@@ -301,9 +317,14 @@ class CalibrationEngine:
         mesh; only the (N+1) states aligned to the student grid are
         materialised, gt[0] = x_t.
         """
-        fn = self._get_compiled(("teacher", _fn_key(eps_fn)),
+        key = ("teacher", _fn_key(eps_fn))
+        x_t = self.sampling.shard(x_t)
+        aot_fn = self._aot.get((key, _shape_sig(x_t)))
+        if aot_fn is not None:
+            return aot_fn(x_t)
+        fn = self._get_compiled(key,
                                 lambda: self._build_teacher(eps_fn), eps_fn)
-        return fn(self.sampling.shard(x_t))
+        return fn(x_t)
 
     # -- public API ----------------------------------------------------------
 
@@ -335,9 +356,11 @@ class CalibrationEngine:
         else:
             x_gate = None
 
-        fn = self._get_compiled(("calibrate", _fn_key(eps_fn), donate),
-                                lambda: self._build_calibrate(eps_fn, donate),
-                                eps_fn)
+        key = ("calibrate", _fn_key(eps_fn), donate)
+        fn = self._aot.get((key, _shape_sig(x_t, gt)))
+        if fn is None:
+            fn = self._get_compiled(
+                key, lambda: self._build_calibrate(eps_fn, donate), eps_fn)
         active_d, coords_d, l2p_d, l2c_d, final_d, _ = fn(x_t, gt)
         # one device->host transfer for the adoption pattern + diagnostics
         active, l2p, l2c, final_l2 = jax.device_get(
@@ -358,6 +381,104 @@ class CalibrationEngine:
         diag["n_stored_params"] = params.n_stored_params
         diag["final_l2_to_gt"] = float(final_l2)
         return params, diag
+
+    # -- cold start: AOT compile + persistent-cache identity -----------------
+
+    def engine_fingerprint(self) -> str:
+        """Stable identity of this engine's compiled-program family.
+
+        The sampling engine's fingerprint (solver, schedule, dtype, mesh)
+        extended with the two calibration knobs the engine cache keys on
+        (PASConfig, teacher), so a restored executable can never cross
+        (spec, config, teacher) triples.
+        """
+        h = hashlib.sha256()
+        h.update(self.sampling.engine_fingerprint().encode())
+        h.update(repr(self.cfg).encode())
+        teacher = self.spec.teacher if self.spec is not None else None
+        h.update(repr(teacher).encode())
+        return h.hexdigest()[:16]
+
+    def _persist_key(self, model_key: Optional[str], program: str,
+                     static_desc, sig) -> Optional[str]:
+        """Executable-serialization key (None without a caller-named model;
+        see ``SamplingEngine._persist_key`` for the contract)."""
+        if model_key is None:
+            return None
+        return "|".join([str(model_key), self.engine_fingerprint(),
+                         "cal-" + program, repr(static_desc), repr(sig)])
+
+    def aot_compile(self, eps_fn: EpsFn, batch: int, dim: int, *,
+                    donate: bool = True,
+                    cache: Optional[compile_cache.CompileCache] = None,
+                    model_key: Optional[str] = None) -> dict:
+        """Lower + compile Algorithm 1 ahead of time; report placement.
+
+        The calibration-side mirror of ``SamplingEngine.aot_compile``: for a
+        (batch, dim) problem it AOT-compiles the nested-teacher scan
+        (spec-bound engines only — solver-bound engines take ``gt``
+        explicitly), the fused Algorithm-1 step program, and the final-state
+        gate, reporting per-device memory and collective counts per program.
+        ``donate`` selects the calibrate variant exactly as
+        ``calibrate(donate=...)`` would dispatch it — the default matches
+        ``Pipeline.calibrate``'s key-based path, including the forced
+        no-donate fallback when the gate would need the whole batch back.
+
+        On a single device the executables are stashed for direct dispatch
+        by the next same-shape ``calibrate``/``teacher_trajectory`` call;
+        with a compile cache active (``cache`` defaults to
+        ``compile_cache.active()``) they are serialized under
+        (``model_key``, engine fingerprint, program, shapes) and restored by
+        later processes, skipping trace+lower+compile entirely.
+        """
+        self._require_lms()
+        eng, cfg, n = self.sampling, self.cfg, self.nfe
+        if cache is None:
+            cache = compile_cache.active()
+        executable_ok = eng.mesh is None
+        n_val = int(round(batch * cfg.val_fraction))
+        if donate and cfg.final_gate and n_val == 0:
+            donate = False               # calibrate() forces the same fallback
+        dt = eng.dtype
+        x_sds = jax.ShapeDtypeStruct((batch, dim), dt)
+        out = {
+            "devices": eng.mesh.size if eng.mesh is not None else 1,
+            "mesh": (eng.mesh_spec.to_dict() if eng.mesh_spec is not None
+                     else None),
+            "batch": batch, "dim": dim, "programs": {},
+        }
+
+        def program(name, key, build, arg_specs, static_desc=(),
+                    serialize_ok=True):
+            sig = tuple((tuple(s.shape), jnp.dtype(s.dtype).name)
+                        for s in arg_specs)
+            fn = self._get_compiled(key, build, eps_fn)
+            out["programs"][name] = _aot_program(
+                self._aot, (key, sig), fn, arg_specs, cache=cache,
+                persist_key=self._persist_key(model_key, name, static_desc,
+                                              sig),
+                executable_ok=executable_ok, serialize_ok=serialize_ok)
+
+        if self.spec is not None:
+            program("teacher", ("teacher", _fn_key(eps_fn)),
+                    lambda: self._build_teacher(eps_fn), [x_sds])
+        program("calibrate", ("calibrate", _fn_key(eps_fn), donate),
+                lambda: self._build_calibrate(eps_fn, donate),
+                [x_sds, jax.ShapeDtypeStruct((n + 1, batch, dim), dt)],
+                static_desc=(donate,), serialize_ok=not donate)
+        if cfg.final_gate:
+            vb = n_val if n_val > 0 else batch
+            program("gate", ("gate", _fn_key(eps_fn)),
+                    lambda: self._build_gate(eps_fn),
+                    [jax.ShapeDtypeStruct((vb, dim), dt),
+                     jax.ShapeDtypeStruct((vb, dim), dt),
+                     jax.ShapeDtypeStruct((n, cfg.n_basis), dt),
+                     jax.ShapeDtypeStruct((n, n), jnp.bool_)])
+        return out
+
+    def aot_variants(self) -> int:
+        """Number of AOT executables stashed for direct dispatch."""
+        return len(self._aot)
 
 
 # ---------------------------------------------------------------------------
@@ -422,4 +543,6 @@ def calibration_engine_cache_stats() -> dict[str, int]:
     return {"engines": len(_CAL_ENGINES), "hits": _STATS.hits,
             "misses": _STATS.misses,
             "compiled_variants": sum(e.compiled_variants()
-                                     for e in _CAL_ENGINES.values())}
+                                     for e in _CAL_ENGINES.values()),
+            "aot_variants": sum(e.aot_variants()
+                                for e in _CAL_ENGINES.values())}

@@ -1,0 +1,306 @@
+"""Persistent compilation cache: a serve fleet pays compilation once.
+
+The fused engines front-load big XLA compiles — ~8.6s for the end-to-end
+CalibrationEngine program (BENCH_calibration_fusion.json recorded
+``speedup_cold`` at an honest 0.64x: a cold process was *slower* than the
+legacy eager loop), and every router/ladder lane pays its own first-flush
+compile.  A freshly launched fleet therefore serves its worst latencies
+exactly when traffic arrives.  This module removes the per-process compile
+tax with two complementary layers:
+
+* **the XLA persistent cache** (``configure(cache_dir)``) — JAX's on-disk
+  compilation cache, keyed on the lowered HLO + compile options.  It is
+  content-addressed, so it is *always safe*: a different model, jax
+  version, or backend lowers to different HLO and simply misses.  Every
+  ``jax.jit`` call and every ``.lower().compile()`` in the process goes
+  through it, so a warm cache accelerates the jit hot paths and the AOT
+  pre-warm paths alike.  Hits/misses are counted via JAX's monitoring
+  events and surface in ``cache_stats()`` (re-exported through
+  ``repro.engine.engine_cache_stats()['persistent']``).
+
+* **executable serialization** (``save_executable``/``load_executable``) —
+  ``jax.experimental.serialize_executable`` export/import of AOT-compiled
+  programs.  Restoring a serialized executable skips tracing *and*
+  lowering entirely (the XLA cache still pays both), which is what makes a
+  warm ``CalibrationEngine.aot_compile``/``PipelineRouter.precompile``
+  nearly free.  Unlike the HLO-keyed layer this one never sees the
+  computation, so entries are keyed on (engine fingerprint, program kind,
+  shapes, caller-supplied ``model_key``) plus a jax/backend fingerprint
+  — any mismatch (jax upgraded, backend changed, device count changed,
+  blob tampered/truncated) is a *counted* stale miss that falls back to
+  recompilation, never a crash.  Callers that cannot name their eps model
+  (``model_key=None``) skip this layer and keep only the always-safe XLA
+  cache.
+
+Layout under ``cache_dir``::
+
+    <cache_dir>/xla/           the JAX persistent compilation cache
+    <cache_dir>/executables/   <sha256-key>.bin   pickled (payload, trees)
+                               <sha256-key>.json  fingerprint + checksum
+
+One process-wide cache is active at a time (``configure``/``active``);
+engines take an explicit ``cache=`` handle too so tests can isolate
+directories.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pickle
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+
+__all__ = [
+    "CompileCache",
+    "configure",
+    "active",
+    "deactivate",
+    "cache_stats",
+    "reset_cache_stats",
+]
+
+_ENTRY_VERSION = 1
+
+
+def runtime_fingerprint() -> dict:
+    """The (jax, backend) identity a serialized executable is only valid for.
+
+    Serialized executables embed device topology and jaxlib ABI; any drift
+    here invalidates the blob (the XLA-level cache handles its own keying
+    and needs none of this).
+    """
+    import jaxlib
+
+    return {
+        "jax": jax.__version__,
+        "jaxlib": getattr(jaxlib, "__version__", "unknown"),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+    }
+
+
+@dataclasses.dataclass
+class _Stats:
+    """Process-wide counters (shared by every ``CompileCache`` instance)."""
+
+    persistent_hits: int = 0        # XLA disk-cache hits (monitoring events)
+    persistent_misses: int = 0      # XLA disk-cache misses
+    executable_hits: int = 0        # serialized executables restored
+    executable_misses: int = 0      # no entry on disk
+    executable_stale: int = 0       # entry rejected: fingerprint/checksum/
+    #                                 deserialization failure -> recompile
+    executable_saves: int = 0
+    compile_seconds: float = 0.0    # wall seconds spent in lower+compile
+    deserialize_seconds: float = 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["compile_seconds"] = round(d["compile_seconds"], 3)
+        d["deserialize_seconds"] = round(d["deserialize_seconds"], 3)
+        return d
+
+
+_STATS = _Stats()
+_STATS_LOCK = threading.Lock()
+_ACTIVE: Optional["CompileCache"] = None
+_LISTENER_INSTALLED = False
+
+
+def _on_monitoring_event(event: str, *args, **kw) -> None:
+    if event == "/jax/compilation_cache/cache_hits":
+        with _STATS_LOCK:
+            _STATS.persistent_hits += 1
+    elif event == "/jax/compilation_cache/cache_misses":
+        with _STATS_LOCK:
+            _STATS.persistent_misses += 1
+
+
+def _install_listener() -> None:
+    """Count XLA disk-cache hits/misses via JAX's monitoring events.
+
+    Installed once per process, on first ``configure``; counting is the only
+    observability JAX offers here (the cache itself is internal to
+    ``jax._src.compiler``).
+    """
+    global _LISTENER_INSTALLED
+    if _LISTENER_INSTALLED:
+        return
+    try:
+        from jax._src import monitoring
+        monitoring.register_event_listener(_on_monitoring_event)
+        _LISTENER_INSTALLED = True
+    except Exception:                                    # pragma: no cover
+        pass                  # older jax: stats stay zero, nothing breaks
+
+
+def record_compile_seconds(seconds: float) -> None:
+    """Attribute wall-clock compile time to the process counters."""
+    with _STATS_LOCK:
+        _STATS.compile_seconds += float(seconds)
+
+
+class CompileCache:
+    """One cache directory: the XLA disk cache + serialized executables."""
+
+    def __init__(self, cache_dir: str | Path):
+        self.cache_dir = Path(cache_dir)
+        self.xla_dir = self.cache_dir / "xla"
+        self.exec_dir = self.cache_dir / "executables"
+        self.cache_dir.mkdir(parents=True, exist_ok=True)
+
+    # -- the XLA persistent cache -------------------------------------------
+
+    def enable_xla_cache(self, *, min_compile_seconds: float = 0.0) -> None:
+        """Point JAX's persistent compilation cache at ``<dir>/xla``.
+
+        ``min_compile_seconds=0`` caches every program — the engine programs
+        this repo compiles are each worth persisting, and serve fleets would
+        otherwise miss the small per-lane variants that add up to the
+        first-flush stall.
+        """
+        self.xla_dir.mkdir(parents=True, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", str(self.xla_dir))
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          float(min_compile_seconds))
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        # jax memoizes its cache-used decision on the FIRST compile of the
+        # process (compilation_cache._cache_checked): configuring after any
+        # jit has run would otherwise silently disable the disk cache for
+        # the process lifetime.  reset_cache() restores the pristine state
+        # so the next compile re-evaluates against the dir set above.
+        try:
+            from jax._src import compilation_cache
+            compilation_cache.reset_cache()
+        except Exception:                                # pragma: no cover
+            pass          # future jax: memoization gone or API moved
+        _install_listener()
+
+    # -- executable serialization --------------------------------------------
+
+    def _entry_paths(self, key: str) -> tuple[Path, Path]:
+        digest = hashlib.sha256(key.encode()).hexdigest()
+        return (self.exec_dir / f"{digest}.bin",
+                self.exec_dir / f"{digest}.json")
+
+    def save_executable(self, key: str, compiled: Any) -> Optional[Path]:
+        """Serialize an AOT-compiled executable under ``key``.
+
+        Returns the blob path, or ``None`` when this executable type cannot
+        be serialized on this backend (a skip, never an error: the XLA-level
+        cache still covers it).
+        """
+        from jax.experimental.serialize_executable import serialize
+        try:
+            payload, in_tree, out_tree = serialize(compiled)
+            blob = pickle.dumps((payload, in_tree, out_tree))
+        except Exception:
+            return None
+        self.exec_dir.mkdir(parents=True, exist_ok=True)
+        bin_path, meta_path = self._entry_paths(key)
+        bin_path.write_bytes(blob)
+        meta_path.write_text(json.dumps({
+            "version": _ENTRY_VERSION,
+            "key": key,
+            "fingerprint": runtime_fingerprint(),
+            "sha256": hashlib.sha256(blob).hexdigest(),
+        }, indent=1, sort_keys=True))
+        with _STATS_LOCK:
+            _STATS.executable_saves += 1
+        return bin_path
+
+    def load_executable(self, key: str) -> Optional[Callable]:
+        """Restore the executable saved under ``key``; ``None`` on any miss.
+
+        Every rejection path — absent entry, version/fingerprint mismatch,
+        checksum failure on a tampered/truncated blob, a deserialization
+        error — is counted (``executable_misses`` / ``executable_stale``)
+        and falls back to ``None`` so the caller recompiles; nothing here
+        ever raises on bad cache state.
+        """
+        bin_path, meta_path = self._entry_paths(key)
+        if not (bin_path.exists() and meta_path.exists()):
+            with _STATS_LOCK:
+                _STATS.executable_misses += 1
+            return None
+        t0 = time.perf_counter()
+        try:
+            meta = json.loads(meta_path.read_text())
+            blob = bin_path.read_bytes()
+            if (meta.get("version") != _ENTRY_VERSION
+                    or meta.get("key") != key
+                    or meta.get("fingerprint") != runtime_fingerprint()
+                    or meta.get("sha256")
+                    != hashlib.sha256(blob).hexdigest()):
+                raise ValueError("stale cache entry")
+            from jax.experimental.serialize_executable import \
+                deserialize_and_load
+            payload, in_tree, out_tree = pickle.loads(blob)
+            fn = deserialize_and_load(payload, in_tree, out_tree)
+        except Exception:
+            with _STATS_LOCK:
+                _STATS.executable_stale += 1
+            return None
+        with _STATS_LOCK:
+            _STATS.executable_hits += 1
+            _STATS.deserialize_seconds += time.perf_counter() - t0
+        return fn
+
+    def __repr__(self) -> str:
+        return f"CompileCache({str(self.cache_dir)!r})"
+
+
+# ---------------------------------------------------------------------------
+# the process-wide active cache
+# ---------------------------------------------------------------------------
+
+
+def configure(cache_dir: str | Path, *,
+              min_compile_seconds: float = 0.0) -> CompileCache:
+    """Activate a cache directory for this process (the ``--cache-dir`` hook).
+
+    Wires the XLA persistent cache immediately; engines pick the active
+    cache up by default for their executable-serialization paths
+    (``aot_compile(cache=...)`` overrides per call).
+    """
+    global _ACTIVE
+    cache = CompileCache(cache_dir)
+    cache.enable_xla_cache(min_compile_seconds=min_compile_seconds)
+    _ACTIVE = cache
+    return cache
+
+
+def active() -> Optional[CompileCache]:
+    """The process-wide cache set by ``configure`` (None when unset)."""
+    return _ACTIVE
+
+
+def deactivate() -> None:
+    """Forget the active cache (tests); the XLA cache dir stays configured."""
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def cache_stats() -> dict:
+    """Process-wide persistent-cache counters, one dict.
+
+    ``persistent_hits``/``persistent_misses`` are XLA disk-cache events;
+    the ``executable_*`` counters track the serialized-executable layer;
+    ``compile_seconds`` accumulates wall time the engines spent in
+    lower+compile (so a fleet can tell a warm start from a cold one at a
+    glance).
+    """
+    with _STATS_LOCK:
+        out = _STATS.to_dict()
+    out["cache_dir"] = str(_ACTIVE.cache_dir) if _ACTIVE else None
+    return out
+
+
+def reset_cache_stats() -> None:
+    """Zero the process-wide counters (restart-simulation in tests)."""
+    with _STATS_LOCK:
+        _STATS.__init__()

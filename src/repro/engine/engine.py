@@ -50,6 +50,8 @@ PAS params on a 2-eval solver raise, as in calibration.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import time
 import warnings
 from typing import Any, Callable, Optional
 
@@ -66,6 +68,8 @@ from repro.core.solvers import LinearMultistepSolver, Solver, TwoEvalSolver
 from repro.kernels import ops
 from repro.parallel.mesh import MeshSpec
 
+from . import compile_cache
+
 Array = jax.Array
 EpsFn = Callable[[Array, Array], Array]
 
@@ -78,6 +82,89 @@ __all__ = [
     "clear_engine_cache",
     "engine_cache_stats",
 ]
+
+
+def _shape_sig(*arrays) -> tuple:
+    """Hashable (shape, dtype) signature of a concrete argument list."""
+    return tuple((tuple(a.shape), jnp.dtype(a.dtype).name) for a in arrays)
+
+
+def _collective_counts(hlo: str) -> dict[str, int]:
+    """Count collective ops in compiled HLO text (the placement report)."""
+    colls = {name: hlo.count(f" {name}(") + hlo.count(f" {name}-start(")
+             for name in ("all-reduce", "all-gather", "reduce-scatter",
+                          "collective-permute", "all-to-all")}
+    return {k: v for k, v in colls.items() if v}
+
+
+def _compiled_report(compiled) -> dict:
+    """Collectives + per-device memory of one AOT-compiled executable."""
+    out: dict = {}
+    try:
+        out["collectives"] = _collective_counts(compiled.as_text())
+    except Exception:                      # deserialized executables may not
+        out["collectives"] = None          # expose HLO text; report honestly
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    if ma is not None:
+        out["memory_per_device_bytes"] = {
+            "arguments": ma.argument_size_in_bytes,
+            "outputs": ma.output_size_in_bytes,
+            "temps": ma.temp_size_in_bytes,
+        }
+    return out
+
+
+def _aot_program(aot_store: dict, store_key, jitted_fn, arg_specs, *,
+                 cache: Optional[compile_cache.CompileCache] = None,
+                 persist_key: Optional[str] = None,
+                 executable_ok: bool = True,
+                 serialize_ok: bool = True) -> dict:
+    """AOT lower+compile one jitted program (or restore its serialized
+    executable), stash it for direct dispatch, and report on it.
+
+    The shared engine-AOT primitive: tries the executable-serialization
+    layer first (skips tracing *and* lowering; only with both a cache and a
+    caller-supplied ``persist_key`` — see ``compile_cache``), else pays one
+    timed ``.lower().compile()`` (which the XLA persistent cache makes
+    cheap when warm) and serializes the result for the next process.
+    ``executable_ok=False`` compiles and reports without stashing — mesh
+    engines keep jit dispatch (AOT executables pin input shardings), and
+    still win across processes through the XLA-level cache.
+    ``serialize_ok=False`` opts a program out of the serialization layer
+    entirely (no save, no load): deserialized executables lose the
+    donation bookkeeping jit tracks for live buffers, and calling one that
+    donates an input corrupts the freed buffer — donating variants rely on
+    the XLA-level cache alone, which restores the *compilation* and lets
+    the live jit/AOT machinery own donation.
+    """
+    report: dict = {}
+    fn = None
+    if not serialize_ok:
+        persist_key = None
+    if cache is not None and persist_key is not None:
+        fn = cache.load_executable(persist_key)
+        if fn is not None:
+            report["source"] = "deserialized"
+            report.update(_compiled_report(fn))
+    if fn is None:
+        t0 = time.perf_counter()
+        compiled = jitted_fn.lower(*arg_specs).compile()
+        dt = time.perf_counter() - t0
+        compile_cache.record_compile_seconds(dt)
+        report["source"] = "compiled"
+        report["compile_seconds"] = round(dt, 3)
+        report.update(_compiled_report(compiled))
+        if cache is not None and persist_key is not None:
+            report["serialized"] = (
+                cache.save_executable(persist_key, compiled) is not None)
+        fn = compiled
+    if executable_ok:
+        aot_store[store_key] = fn
+    report["dispatchable"] = executable_ok
+    return report
 
 
 class PASShardingFallbackWarning(UserWarning):
@@ -149,6 +236,7 @@ class SamplingEngine:
         self.ts = np.asarray(solver.ts, dtype=np.float64)
         self.nfe = solver.nfe          # evals, not steps: 2x for heun/dpm2
         self._compiled: dict[Any, tuple[Callable, Callable]] = {}
+        self._aot: dict[Any, Callable] = {}   # (variant, shapes) -> executable
         self._basis_fallbacks: dict[str, int] = {}
 
         self.mesh_spec = (mesh if mesh is not None and not mesh.is_single
@@ -425,6 +513,20 @@ class SamplingEngine:
                 "array is deleted). Double-buffered flushes must stage a "
                 "fresh buffer per dispatch — never reuse one an in-flight "
                 "flush owns (see runtime.scheduler.ServeScheduler._flush).")
+        key, build, coords = self._variant(eps_fn, params, cfg, donate_x)
+        args = (x_t,) if coords is None else (x_t, coords)
+        aot_fn = self._aot.get((key, _shape_sig(*args)))
+        if aot_fn is not None:
+            return aot_fn(*args)
+        fn = self._get_compiled(key, build, eps_fn)
+        return fn(*args)
+
+    def _variant(self, eps_fn: EpsFn, params, cfg, donate_x: bool
+                 ) -> tuple[Any, Callable, Optional[Array]]:
+        """(variant key, builder, coords-or-None): the one place a
+        (params, cfg, donate) triple maps onto a compiled-program key, so
+        ``sample``, ``aot_compile`` and the fleet pre-warm paths can never
+        target different programs."""
         if params is not None and bool(np.asarray(params.active).any()):
             if cfg is None:
                 from repro.core.pas import PASConfig
@@ -432,46 +534,84 @@ class SamplingEngine:
             key = ("pas", _fn_key(eps_fn),
                    tuple(bool(a) for a in np.asarray(params.active)),
                    cfg.coord_mode, int(params.coords.shape[1]), donate_x)
-            fn = self._get_compiled(key, lambda: self._build_pas(
-                eps_fn, key[2], cfg.coord_mode, key[4], donate_x), eps_fn)
-            return fn(x_t, jnp.asarray(params.coords, self.dtype))
-
+            build = lambda: self._build_pas(                       # noqa: E731
+                eps_fn, key[2], cfg.coord_mode, key[4], donate_x)
+            return key, build, jnp.asarray(params.coords, self.dtype)
         key = ("plain", _fn_key(eps_fn), donate_x)
-        fn = self._get_compiled(
-            key, lambda: self._build_plain(eps_fn, donate_x), eps_fn)
-        return fn(x_t)
+        return key, (lambda: self._build_plain(eps_fn, donate_x)), None
 
-    def aot_compile(self, eps_fn: EpsFn, batch: int, dim: int) -> dict:
-        """Lower + compile the plain program ahead of time; report placement.
+    # -- cold start: AOT compile + persistent-cache identity -----------------
 
-        This is the serve dry-run: under a virtual host mesh
-        (``XLA_FLAGS=--xla_force_host_platform_device_count=N``) it exercises
-        the exact partitioned program the mesh engine runs in production and
-        returns {devices, per-device memory, collective op counts} without
-        executing a single model eval.
+    def engine_fingerprint(self) -> str:
+        """Stable identity of this engine's compiled-program family.
+
+        Hashes (solver name, schedule bytes, dtype, mesh) — everything the
+        engine key carries — into the persistent executable-cache key, so a
+        restored executable can never cross engines.
         """
-        fn = self._get_compiled(("plain", _fn_key(eps_fn), False),
-                                lambda: self._build_plain(eps_fn), eps_fn)
-        x_spec = jax.ShapeDtypeStruct((batch, dim), self.dtype)
-        compiled = fn.lower(x_spec).compile()
-        hlo = compiled.as_text()
-        colls = {name: hlo.count(f" {name}(") + hlo.count(f" {name}-start(")
-                 for name in ("all-reduce", "all-gather", "reduce-scatter",
-                              "collective-permute", "all-to-all")}
+        h = hashlib.sha256()
+        h.update(self.name.encode())
+        h.update(self.ts.tobytes())
+        h.update(self.dtype.name.encode())
+        if self.mesh_spec is not None:
+            h.update(repr(sorted(self.mesh_spec.to_dict().items())).encode())
+        return h.hexdigest()[:16]
+
+    def _persist_key(self, model_key: Optional[str], program: str,
+                     static_desc, sig) -> Optional[str]:
+        """Executable-serialization key, or None when the caller did not
+        name the eps model (serialized programs bake the model in; without
+        a caller-supplied identity only the HLO-keyed XLA cache is safe)."""
+        if model_key is None:
+            return None
+        return "|".join([str(model_key), self.engine_fingerprint(), program,
+                         repr(static_desc), repr(sig)])
+
+    def aot_compile(self, eps_fn: EpsFn, batch: int, dim: int, *,
+                    params=None, cfg=None, donate_x: bool = False,
+                    cache: Optional[compile_cache.CompileCache] = None,
+                    model_key: Optional[str] = None) -> dict:
+        """Lower + compile a sampling program ahead of time; report placement.
+
+        This is the serve dry-run *and* the fleet pre-warm primitive: under
+        a virtual host mesh
+        (``XLA_FLAGS=--xla_force_host_platform_device_count=N``) it
+        exercises the exact partitioned program the mesh engine runs in
+        production and returns {devices, per-device memory, collective op
+        counts} without executing a single model eval.  ``params``/``cfg``/
+        ``donate_x`` select the exact variant ``sample`` would dispatch
+        (default: the plain no-donate program, the historical behaviour).
+
+        On a single device the compiled executable is stashed so the next
+        same-shape ``sample`` call dispatches it directly (no jit re-trace);
+        with a ``compile_cache`` active (``cache`` defaults to
+        ``compile_cache.active()``) the executable is additionally
+        serialized under (``model_key``, engine fingerprint, variant,
+        shapes) and restored by later processes, skipping trace+lower+
+        compile entirely.  ``model_key=None`` skips serialization (the
+        XLA-level persistent cache still applies — it keys on HLO content
+        and is always safe).
+        """
+        key, build, coords = self._variant(eps_fn, params, cfg, donate_x)
+        fn = self._get_compiled(key, build, eps_fn)
+        arg_specs = [jax.ShapeDtypeStruct((batch, dim), self.dtype)]
+        if coords is not None:
+            arg_specs.append(jax.ShapeDtypeStruct(coords.shape, coords.dtype))
+        sig = tuple((tuple(s.shape), jnp.dtype(s.dtype).name)
+                    for s in arg_specs)
+        if cache is None:
+            cache = compile_cache.active()
         out = {
+            "program": key[0],
             "devices": self.mesh.size if self.mesh is not None else 1,
             "mesh": (self.mesh_spec.to_dict() if self.mesh_spec is not None
                      else None),
             "batch": batch, "dim": dim,
-            "collectives": {k: v for k, v in colls.items() if v},
         }
-        ma = compiled.memory_analysis()
-        if ma is not None:
-            out["memory_per_device_bytes"] = {
-                "arguments": ma.argument_size_in_bytes,
-                "outputs": ma.output_size_in_bytes,
-                "temps": ma.temp_size_in_bytes,
-            }
+        out.update(_aot_program(
+            self._aot, (key, sig), fn, arg_specs, cache=cache,
+            persist_key=self._persist_key(model_key, key[0], key[2:], sig),
+            executable_ok=self.mesh is None, serialize_ok=not donate_x))
         return out
 
     def _get_compiled(self, key, build, eps_fn) -> Callable:
@@ -481,6 +621,10 @@ class SamplingEngine:
     def compiled_variants(self) -> int:
         """Number of distinct (model, correction-pattern) programs cached."""
         return len(self._compiled)
+
+    def aot_variants(self) -> int:
+        """Number of AOT executables stashed for direct dispatch."""
+        return len(self._aot)
 
 
 # ---------------------------------------------------------------------------
@@ -615,16 +759,23 @@ def clear_engine_cache() -> None:
     _STATS.hits = _STATS.misses = 0
 
 
-def engine_cache_stats() -> dict[str, int]:
+def engine_cache_stats() -> dict:
     """Cache shape + per-engine compiled-program totals.
 
     ``compiled_variants`` sums ``compiled_variants()`` over every live cache
     entry, so mesh-keyed engines (which otherwise look identical in the
     ``engines`` count) are observable in the pipeline-smoke CI log.
+    ``aot_variants`` counts executables stashed for direct dispatch by the
+    pre-warm paths, and ``persistent`` carries the process-wide
+    ``compile_cache`` counters (XLA disk-cache hits/misses, serialized-
+    executable hits/stale fallbacks, wall seconds spent compiling) so a
+    fleet log can tell a warm start from a cold one.
     """
     return {"engines": len(_ENGINES), "hits": _STATS.hits,
             "misses": _STATS.misses,
             "compiled_variants": sum(e.compiled_variants()
                                      for e in _ENGINES.values()),
+            "aot_variants": sum(e.aot_variants() for e in _ENGINES.values()),
             "basis_fallbacks": sum(sum(e._basis_fallbacks.values())
-                                   for e in _ENGINES.values())}
+                                   for e in _ENGINES.values()),
+            "persistent": compile_cache.cache_stats()}

@@ -2,6 +2,8 @@
 touches jax device state)."""
 from __future__ import annotations
 
+import math
+
 import jax
 
 __all__ = ["make_production_mesh", "make_mesh"]
@@ -17,7 +19,25 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mes
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """Single pod: (data=16, model=16) = 256 chips (v5e-256).
-    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips.
+
+    Validated against the local device table up front: ``jax.make_mesh``'s
+    own failure on a small host is an opaque reshape error, so mismatches
+    raise here with the fix spelled out (mirroring
+    ``repro.parallel.MeshSpec.build``).
+    """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    have = jax.device_count()
+    if have < need:
+        raise ValueError(
+            f"make_production_mesh(multi_pod={multi_pod}) needs {need} "
+            f"devices for mesh {dict(zip(axes, shape))} but this process "
+            f"sees {have}. Run on a "
+            f"{'2-pod v5e-256' if multi_pod else 'v5e-256'} slice, or "
+            f"simulate one on CPU with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}; for "
+            f"small hosts build a right-sized mesh via "
+            f"repro.parallel.MeshSpec(dp=..., state=...).build() instead.")
     return make_mesh(shape, axes)

@@ -59,6 +59,7 @@ from __future__ import annotations
 import argparse
 import json
 import re
+import time
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +71,7 @@ from repro.api import (DiffusionServer, ErrorControlConfig, MeshSpec,
                        Request, ServeConfig, load_trace, poisson_arrivals,
                        replay)
 from repro.core import PASConfig, two_mode_gmm
-from repro.engine import engine_cache_stats
+from repro.engine import compile_cache, engine_cache_stats
 
 
 def parse_mesh(value: str) -> tuple[int, int]:
@@ -177,6 +178,18 @@ def _calibrated_pipeline(cfg: ServeConfig, eps_fn, dim: int,
     return pipe
 
 
+def _precompile_router(args, router: PipelineRouter) -> None:
+    """Warm every router lane's flush variant when --precompile is set."""
+    if not args.precompile:
+        return
+    t0 = time.perf_counter()
+    rep = router.precompile(model_key=args.model_key)
+    sources = {lane: {b: r["sample"].get("source") for b, r in by_b.items()}
+               for lane, by_b in rep.items()}
+    print(f"precompiled {len(rep)} lane(s) in "
+          f"{time.perf_counter() - t0:.2f}s: {sources}")
+
+
 # traffic-module class deadlines: what upfront router requests default to
 # when --deadline-ms is not given (the slack router routes on these)
 _CLASS_DEADLINE_MS = {"interactive": 25.0, "batch": 250.0}
@@ -215,6 +228,7 @@ def _serve_router(args, cfg: ServeConfig, eps_fn, dim: int) -> None:
     if not args.no_pas:
         router.calibrate_all(jax.random.key(0), batch=args.calibrate_batch,
                              artifact_dir=args.artifact_dir)
+    _precompile_router(args, router)
     _drive_router(args, router)
 
 
@@ -234,6 +248,11 @@ def _serve_ladder(args, cfg: ServeConfig, eps_fn, dim: int) -> None:
         ladder.calibrate(router, jax.random.key(0),
                          batch=args.calibrate_batch,
                          artifact_dir=args.artifact_dir)
+    if args.precompile:
+        t0 = time.perf_counter()
+        rep = ladder.precompile(router, model_key=args.model_key)
+        print(f"precompiled {len(rep)} ladder lane(s) in "
+              f"{time.perf_counter() - t0:.2f}s")
     _drive_router(args, router)
 
 
@@ -354,8 +373,17 @@ def main() -> None:
                     help="submit requests individually and report streamed "
                          "chunk arrival + latency percentiles")
     ap.add_argument("--lower-only", action="store_true",
-                    help="AOT-lower + compile the partitioned program and "
-                         "report placement/collectives; no sampling")
+                    help="AOT-lower + compile the partitioned programs "
+                         "(sampling, calibration, adaptive with --adaptive) "
+                         "and report placement/collectives; no sampling")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent compile cache directory (the XLA disk "
+                         "cache + serialized AOT executables); a warm cache "
+                         "removes the per-process compile tax")
+    ap.add_argument("--precompile", action="store_true",
+                    help="warm every lane's flush program (and the "
+                         "calibration programs when calibration runs on "
+                         "launch) before admitting traffic")
     args = ap.parse_args()
 
     if args.stream and args.scheduler != "async":
@@ -376,9 +404,6 @@ def main() -> None:
         ap.error("--adaptive is per-sample step-count adaptation on the "
                  "single-pipeline server; router lanes are fixed rungs "
                  "(use --nfe-ladder for per-request adaptation)")
-    if args.adaptive and args.lower_only:
-        ap.error("--lower-only compiles the fixed-grid program; it cannot "
-                 "combine with --adaptive")
     if args.pipelines is not None:
         keys = [k for k, _, _ in args.pipelines]
         if len(set(keys)) != len(keys):
@@ -387,10 +412,22 @@ def main() -> None:
         args.dp, args.state_shard = args.mesh
     mesh = MeshSpec(dp=args.dp, state=args.state_shard)
 
+    if args.cache_dir:
+        # wire the persistent compile cache before anything compiles: the
+        # XLA disk cache covers every jit/AOT compile from here on, and the
+        # AOT paths below additionally serialize/restore whole executables
+        compile_cache.configure(args.cache_dir)
+        print(f"compile cache: {args.cache_dir} (xla + executables)")
+
     if args.mode == "oracle":
         eps_fn, dim = _oracle_eps(args.dim)
     else:
         eps_fn, dim = _diffusion_lm_eps(args.arch)
+    # the eps model's identity in the executable-serialization key: oracle
+    # eps is fully determined by its dim; a zoo backbone by (arch, seq dim)
+    model_key = (f"oracle:gmm:{dim}" if args.mode == "oracle"
+                 else f"diffusion:{args.arch}:{dim}")
+    args.model_key = model_key
 
     cfg = ServeConfig(nfe=args.nfe, solver=args.solver,
                       t_min=args.t_min, t_max=args.t_max,
@@ -403,12 +440,27 @@ def main() -> None:
                       slack_ms_per_eval=args.slack_ms_per_eval)
 
     if args.lower_only:
-        # the serve dry-run: compile (never run) the partitioned program —
-        # under XLA_FLAGS=--xla_force_host_platform_device_count=N this is
-        # the exact lowered program a real N-device mesh executes
+        # the serve dry-run: compile (never run) the partitioned programs —
+        # under XLA_FLAGS=--xla_force_host_platform_device_count=N these are
+        # the exact lowered programs a real N-device mesh executes.  The
+        # sampling scan, the calibration-side programs (teacher, Algorithm
+        # 1, final gate), and — with --adaptive — the masked adaptive scan
+        # are all covered, so the dry-run predicts the whole launch, not
+        # just the serve flush
         pipe = Pipeline.from_spec(cfg.to_spec(), eps_fn, dim=dim)
         batch = args.max_batch + mesh.pad_batch(args.max_batch)
-        info = pipe.engine.aot_compile(eps_fn, batch=batch, dim=dim)
+        info = {"sampling": pipe.engine.aot_compile(
+            eps_fn, batch=batch, dim=dim, model_key=model_key)}
+        cal_batch = (args.calibrate_batch
+                     + mesh.pad_batch(args.calibrate_batch))
+        info["calibration"] = pipe.calibration_engine.aot_compile(
+            eps_fn, cal_batch, dim, model_key=model_key)
+        if args.adaptive:
+            ec = ErrorControlConfig(rtol=args.rtol, atol=args.atol)
+            adaptive = Pipeline.from_spec(
+                cfg.to_spec().replace(error_control=ec), eps_fn, dim=dim)
+            info["adaptive"] = adaptive.adaptive_engine.aot_compile(
+                eps_fn, batch, dim, model_key=model_key)
         print(json.dumps(info, indent=1))
         print("LOWER_OK")
         return
@@ -438,6 +490,12 @@ def main() -> None:
         cfg = dataclasses.replace(cfg, spec=pipe.spec)
         print(f"adaptive sampling: rtol={ec.rtol} atol={ec.atol} "
               f"(worst case {pipe.evals_per_sample} evals/sample)")
+    if args.precompile:
+        t0 = time.perf_counter()
+        rep = pipe.precompile(args.max_batch, use_pas=not args.no_pas,
+                              model_key=model_key)
+        print(f"precompiled flush program in {time.perf_counter() - t0:.2f}s "
+              f"(source: {rep['sample'].get('source')})")
     server = DiffusionServer.from_pipeline(pipe, cfg)
 
     reqs = [Request(seed=i, n_samples=16) for i in range(args.requests)]

@@ -104,6 +104,20 @@ class NFELadder:
             self.specs, eps_fn, dim, artifact_dir=artifact_dir, cfg=cfg,
             use_pas=use_pas, **kw)
 
+    def precompile(self, router, batches: Optional[Iterable[int]] = None, *,
+                   calibration: bool = False, cache=None,
+                   model_key: Optional[str] = None) -> dict:
+        """Warm every rung lane of ``router`` before admitting traffic.
+
+        Thin delegation to ``PipelineRouter.precompile`` — each rung's
+        exact flush variant (its DP-padded ``max_batch`` bucket plus any
+        extra ``batches``, the rung's ``use_pas`` setting) is AOT-compiled
+        on the caller's thread; ``calibration=True`` also warms the PAS
+        rungs' calibration programs for calibrate-on-launch fleets.
+        """
+        return router.precompile(batches, calibration=calibration,
+                                 cache=cache, model_key=model_key)
+
     def calibrate(self, router, key: Array, batch: int = 256,
                   artifact_dir=None) -> "NFELadder":
         """Calibrate every PAS rung lane of ``router`` (teacher rung skipped

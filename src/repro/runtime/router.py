@@ -94,7 +94,7 @@ class PipelineRouter(ServeScheduler):
             runner = (self._default_run_batch(pipe, pas) if run_batch is None
                       else _bind_lane_runner(run_batch, key))
             lanes.append(_Lane(key=str(key), pipeline=pipe, max_batch=budget,
-                               run_batch=runner))
+                               run_batch=runner, use_pas=pas))
         if budgets:
             raise ValueError(
                 f"budgets for unknown lanes: {sorted(budgets)} "
@@ -160,6 +160,40 @@ class PipelineRouter(ServeScheduler):
             if artifact_dir is not None:
                 pipe.save(Path(artifact_dir) / name)
         return self
+
+    # -- fleet pre-warming ---------------------------------------------------
+
+    def precompile(self, batches: Optional[Iterable[int]] = None, *,
+                   calibration: bool = False, cache=None,
+                   model_key: Optional[str] = None) -> dict:
+        """Warm every lane's flush program before the queue admits traffic.
+
+        For each lane this AOT-compiles the exact (batch-bucket, dtype,
+        mesh) variant its flush executor dispatches — ``donate_x=True``,
+        the lane's ``use_pas`` setting, the adaptive engine for adaptive
+        lanes — at the lane's DP-padded ``max_batch`` budget, plus any
+        extra ``batches`` buckets (for deployments whose deadline flushes
+        routinely fire below budget).  Runs on the *caller's* thread: the
+        scheduler thread keeps servicing its (empty) queue, and once this
+        returns the first real flush dispatches a warm program instead of
+        stalling the lane on an ~8s first-flush compile.
+
+        ``calibration=True`` also warms each lane's calibration programs
+        (for fleets that calibrate on launch); ``cache``/``model_key``
+        feed the persistent compile cache so later processes skip the
+        compile entirely.  Returns {lane: {batch: report}}.
+        """
+        extra = [int(b) for b in (batches or [])]
+        report: dict = {}
+        for key, lane in self._lanes.items():
+            lane_rep = {}
+            for b in dict.fromkeys([lane.max_batch, *extra]):
+                lane_rep[b] = lane.pipeline.precompile(
+                    b, use_pas=lane.use_pas, donate_x=True,
+                    calibration=calibration, cache=cache,
+                    model_key=model_key)
+            report[key] = lane_rep
+        return report
 
     # -- introspection -------------------------------------------------------
 

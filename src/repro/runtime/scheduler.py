@@ -202,6 +202,7 @@ class _Lane:
     pipeline: object
     max_batch: int
     run_batch: Callable[[Array], Array]
+    use_pas: bool = True             # what the default flush executor passes
     pending: list[_Chunk] = dataclasses.field(default_factory=list)
     pending_rows: int = 0
 
@@ -245,7 +246,8 @@ class ServeScheduler:
                      max_batch=self.max_batch,
                      run_batch=(run_batch if run_batch is not None
                                 else self._default_run_batch(pipeline,
-                                                             use_pas)))
+                                                             use_pas)),
+                     use_pas=use_pas)
         self._init_core([lane], deadline_ms=deadline_ms,
                         max_in_flight=max_in_flight, stats=stats,
                         default_priority=default_priority)

@@ -1,0 +1,264 @@
+"""Persistent compile cache + fleet pre-warm (ISSUE 9).
+
+The restart-simulation contract: a process that dies and relaunches against
+the same cache directory must (a) restore serialized AOT executables that
+sample *bit-identically* to what the first process compiled, and (b) reject
+any stale entry — wrong runtime fingerprint, tampered blob — as a counted
+miss that falls back to recompilation, never a crash.  In-process restarts
+are simulated by clearing every engine cache + the stats counters and
+rebuilding engines from specs (fresh jit closures, so nothing hits the
+in-memory trace caches).
+
+Donation hazard (see ``engine._aot_program``): deserialized executables
+must never be used for donating variants — these tests only serialize
+``donate=False`` programs, matching the engines' own ``serialize_ok``
+policy.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import PASConfig, SamplerSpec, ScheduleSpec, TeacherSpec
+from repro.core import analytic
+from repro.engine import (clear_calibration_engine_cache, clear_engine_cache,
+                          compile_cache, engine_cache_stats,
+                          get_calibration_engine_for_spec, get_engine_for_spec)
+from repro.engine.compile_cache import CompileCache
+
+DIM, NFE, BATCH = 8, 4, 8
+T_MIN, T_MAX = 0.01, 3.0
+MODEL_KEY = "oracle:gmm:test"
+
+
+def _spec() -> SamplerSpec:
+    return SamplerSpec(
+        solver="ipndm4", nfe=NFE,
+        schedule=ScheduleSpec(t_min=T_MIN, t_max=T_MAX),
+        teacher=TeacherSpec(solver="heun", nfe=8),
+        pas=PASConfig(n_basis=2, n_sgd_iters=8, val_fraction=0.25))
+
+
+@pytest.fixture()
+def gmm():
+    return analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+
+
+@pytest.fixture()
+def cache(tmp_path):
+    """An isolated active cache; restores pristine global state after."""
+    prev = {k: getattr(jax.config, k) for k in
+            ("jax_compilation_cache_dir",
+             "jax_persistent_cache_min_compile_time_secs",
+             "jax_persistent_cache_min_entry_size_bytes")}
+    c = compile_cache.configure(tmp_path / "cache")
+    compile_cache.reset_cache_stats()
+    clear_engine_cache()
+    clear_calibration_engine_cache()
+    yield c
+    compile_cache.deactivate()
+    compile_cache.reset_cache_stats()
+    clear_engine_cache()
+    clear_calibration_engine_cache()
+    for k, v in prev.items():
+        jax.config.update(k, v)
+
+
+def _restart():
+    """Simulate a process restart: drop every in-process engine/program
+    cache and zero the counters (the disk cache is what survives)."""
+    clear_engine_cache()
+    clear_calibration_engine_cache()
+    compile_cache.reset_cache_stats()
+
+
+# ---------------------------------------------------------------------------
+# executable round-trip: bit-identical across a simulated restart
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_executable_roundtrip_bit_identical(gmm, cache):
+    spec = _spec()
+    x = gmm.sample_prior(jax.random.key(0), BATCH, T_MAX)
+
+    eng = get_engine_for_spec(spec)
+    rep = eng.aot_compile(gmm.eps, BATCH, DIM, model_key=MODEL_KEY)
+    assert rep["source"] == "compiled" and rep["dispatchable"]
+    assert rep["serialized"] is True
+    assert compile_cache.cache_stats()["executable_saves"] >= 1
+    y_cold = np.asarray(eng.sample(gmm.eps, x))
+
+    _restart()
+    eng2 = get_engine_for_spec(spec)
+    assert eng2 is not eng
+    rep2 = eng2.aot_compile(gmm.eps, BATCH, DIM, model_key=MODEL_KEY)
+    assert rep2["source"] == "deserialized"
+    y_warm = np.asarray(eng2.sample(gmm.eps, x))
+
+    assert np.array_equal(y_cold, y_warm)          # bit-identical, not close
+    stats = engine_cache_stats()["persistent"]
+    assert stats["executable_hits"] >= 1
+    assert stats["executable_stale"] == 0
+
+
+def test_calibration_executables_roundtrip_bit_identical(gmm, cache):
+    spec = _spec()
+    x = gmm.sample_prior(jax.random.key(1), BATCH, T_MAX)
+
+    ceng = get_calibration_engine_for_spec(spec)
+    rep = ceng.aot_compile(gmm.eps, BATCH, DIM, donate=False,
+                           model_key=MODEL_KEY)
+    assert set(rep["programs"]) == {"teacher", "calibrate", "gate"}
+    assert all(p["source"] == "compiled" for p in rep["programs"].values())
+    gt_cold = np.asarray(ceng.teacher_trajectory(gmm.eps, x))
+    p_cold, _ = ceng.calibrate(gmm.eps, x, jnp.asarray(gt_cold), donate=False)
+    coords_cold = np.asarray(p_cold.coords)
+
+    _restart()
+    ceng2 = get_calibration_engine_for_spec(spec)
+    rep2 = ceng2.aot_compile(gmm.eps, BATCH, DIM, donate=False,
+                             model_key=MODEL_KEY)
+    assert all(p["source"] == "deserialized"
+               for p in rep2["programs"].values())
+    gt_warm = np.asarray(ceng2.teacher_trajectory(gmm.eps, x))
+    p_warm, _ = ceng2.calibrate(gmm.eps, x, jnp.asarray(gt_warm),
+                                donate=False)
+
+    assert np.array_equal(gt_cold, gt_warm)
+    assert np.array_equal(coords_cold, np.asarray(p_warm.coords))
+    assert np.array_equal(np.asarray(p_cold.active),
+                          np.asarray(p_warm.active))
+    assert engine_cache_stats()["persistent"]["executable_hits"] >= 3
+
+
+def test_donating_variants_skip_serialization(gmm, cache):
+    """Donating programs must never enter the executable layer (deserialized
+    executables lose jit's donation bookkeeping — calling one corrupts the
+    freed buffer); they rely on the XLA-level disk cache alone."""
+    spec = _spec()
+    eng = get_engine_for_spec(spec)
+    rep = eng.aot_compile(gmm.eps, BATCH, DIM, donate_x=True,
+                          model_key=MODEL_KEY)
+    assert rep["source"] == "compiled"
+    assert "serialized" not in rep
+    saves = compile_cache.cache_stats()["executable_saves"]
+
+    _restart()
+    eng2 = get_engine_for_spec(spec)
+    rep2 = eng2.aot_compile(gmm.eps, BATCH, DIM, donate_x=True,
+                            model_key=MODEL_KEY)
+    assert rep2["source"] == "compiled"            # never deserialized
+    stats = compile_cache.cache_stats()
+    assert stats["executable_hits"] == 0
+    assert stats["executable_saves"] == saves == 0
+
+
+def test_xla_persistent_cache_hits_after_restart(gmm, cache):
+    """The HLO-keyed XLA disk cache covers what serialization cannot: a
+    restarted process recompiling the identical program takes counted
+    persistent hits (the acceptance counter for warm fleets)."""
+    spec = _spec()
+    eng = get_engine_for_spec(spec)
+    eng.aot_compile(gmm.eps, BATCH, DIM, donate_x=True, model_key=MODEL_KEY)
+
+    _restart()
+    eng2 = get_engine_for_spec(spec)
+    eng2.aot_compile(gmm.eps, BATCH, DIM, donate_x=True, model_key=MODEL_KEY)
+    stats = engine_cache_stats()["persistent"]
+    assert stats["persistent_hits"] > 0
+    assert stats["cache_dir"] == str(cache.cache_dir)
+
+
+# ---------------------------------------------------------------------------
+# stale entries: counted misses, graceful recompile, never a crash
+# ---------------------------------------------------------------------------
+
+
+def _toy_compiled():
+    return (jax.jit(lambda v: v * 2.0 + 1.0)
+            .lower(jax.ShapeDtypeStruct((4,), jnp.float32)).compile())
+
+
+def test_stale_entries_fall_back_without_crashing(tmp_path):
+    compile_cache.reset_cache_stats()
+    c = CompileCache(tmp_path)
+    if c.save_executable("k", _toy_compiled()) is None:
+        pytest.skip("backend cannot serialize executables")
+    bin_path, meta_path = c._entry_paths("k")
+
+    # pristine entry restores and runs
+    fn = c.load_executable("k")
+    assert fn is not None
+    np.testing.assert_allclose(fn(jnp.ones(4)), np.full(4, 3.0))
+
+    # absent key: a counted plain miss
+    assert c.load_executable("other") is None
+
+    # runtime-fingerprint mismatch (jax upgraded / device count changed)
+    meta = json.loads(meta_path.read_text())
+    good = meta_path.read_text()
+    meta["fingerprint"]["jax"] = "0.0.0"
+    meta_path.write_text(json.dumps(meta))
+    assert c.load_executable("k") is None
+
+    # tampered/truncated blob: checksum rejects it
+    meta_path.write_text(good)
+    bin_path.write_bytes(bin_path.read_bytes()[:-7] + b"garbage")
+    assert c.load_executable("k") is None
+
+    # unreadable meta: still just a stale miss
+    meta_path.write_text("{not json")
+    assert c.load_executable("k") is None
+
+    stats = compile_cache.cache_stats()
+    assert stats["executable_hits"] == 1
+    assert stats["executable_misses"] == 1
+    assert stats["executable_stale"] == 3
+    compile_cache.reset_cache_stats()
+
+
+def test_stale_entry_recompiles_through_engine(gmm, cache):
+    """A tampered entry behind a real engine: counted stale, then the engine
+    recompiles and still samples correctly."""
+    spec = _spec()
+    eng = get_engine_for_spec(spec)
+    eng.aot_compile(gmm.eps, BATCH, DIM, model_key=MODEL_KEY)
+    blobs = list(cache.exec_dir.glob("*.bin"))
+    assert blobs
+    for b in blobs:
+        b.write_bytes(b"corrupt")
+
+    _restart()
+    eng2 = get_engine_for_spec(spec)
+    rep = eng2.aot_compile(gmm.eps, BATCH, DIM, model_key=MODEL_KEY)
+    assert rep["source"] == "compiled"             # fell back, no crash
+    stats = compile_cache.cache_stats()
+    assert stats["executable_stale"] >= 1
+    x = gmm.sample_prior(jax.random.key(2), BATCH, T_MAX)
+    assert np.isfinite(np.asarray(eng2.sample(gmm.eps, x))).all()
+
+
+def test_model_key_none_skips_executable_layer(gmm, cache):
+    spec = _spec()
+    eng = get_engine_for_spec(spec)
+    rep = eng.aot_compile(gmm.eps, BATCH, DIM)     # no model_key
+    assert rep["source"] == "compiled"
+    assert "serialized" not in rep
+    assert compile_cache.cache_stats()["executable_saves"] == 0
+
+
+# ---------------------------------------------------------------------------
+# stats surface
+# ---------------------------------------------------------------------------
+
+
+def test_engine_cache_stats_exposes_persistent_counters():
+    stats = engine_cache_stats()
+    assert "aot_variants" in stats
+    per = stats["persistent"]
+    for k in ("persistent_hits", "persistent_misses", "executable_hits",
+              "executable_misses", "executable_stale", "executable_saves",
+              "compile_seconds", "deserialize_seconds", "cache_dir"):
+        assert k in per
