@@ -20,6 +20,7 @@ from .compile_cache import CompileCache
 from .engine import (PASShardingFallbackWarning, SamplingEngine,
                      clear_engine_cache, engine_cache_stats,
                      engine_for_solver, get_engine, get_engine_for_spec)
+from .zoo import ZooCalibrationEngine, calibrate_zoo
 
 __all__ = [
     "AdaptiveEngine",
@@ -27,6 +28,8 @@ __all__ = [
     "CompileCache",
     "PASShardingFallbackWarning",
     "SamplingEngine",
+    "ZooCalibrationEngine",
+    "calibrate_zoo",
     "adaptive_engine_cache_stats",
     "calibration_engine_cache_stats",
     "calibration_engine_for_solver",

@@ -130,7 +130,13 @@ class CalibrationEngine:
 
     # -- the fused Algorithm 1 program --------------------------------------
 
-    def _build_calibrate(self, eps_fn: EpsFn, donate: bool) -> Callable:
+    def _calibrate_body(self, eps_fn: EpsFn) -> Callable:
+        """The unjitted Algorithm-1 program body ``run(x_t, gt) -> outputs``.
+
+        ``_build_calibrate`` jits it directly; ``engine.zoo`` embeds many
+        spec bodies into ONE jitted program (the batched zoo recalibration),
+        so nothing in here may jit, dispatch, or touch the host.
+        """
         solver, cfg, eng = self.solver, self.cfg, self.sampling
         n = self.nfe
         ts = solver.ts_jax
@@ -196,7 +202,11 @@ class CalibrationEngine:
             return (jnp.stack(actives), jnp.stack(coords),
                     jnp.stack(l2ps), jnp.stack(l2cs), final_l2, x)
 
-        return jax.jit(run, donate_argnums=(0,) if donate else ())
+        return run
+
+    def _build_calibrate(self, eps_fn: EpsFn, donate: bool) -> Callable:
+        return jax.jit(self._calibrate_body(eps_fn),
+                       donate_argnums=(0,) if donate else ())
 
     # -- the fused final-state gate -----------------------------------------
 
@@ -361,7 +371,22 @@ class CalibrationEngine:
         if fn is None:
             fn = self._get_compiled(
                 key, lambda: self._build_calibrate(eps_fn, donate), eps_fn)
-        active_d, coords_d, l2p_d, l2c_d, final_d, _ = fn(x_t, gt)
+        outputs = fn(x_t, gt)
+        if x_gate is None and cfg.final_gate:
+            x_gate = x_t[va]
+        return self._postprocess(eps_fn, outputs, x_gate, gt[-1][va])
+
+    def _postprocess(self, eps_fn: EpsFn, outputs, x_gate, gt_end
+                     ) -> tuple[PASParams, dict]:
+        """Host-side half of ``calibrate``: device outputs -> (params, diag).
+
+        Shared with ``engine.zoo``, whose single compiled program returns
+        one ``outputs`` tuple per spec; the final gate (when configured)
+        runs through this engine's own compiled gate program on the
+        ``x_gate`` validation slice against ``gt_end``.
+        """
+        cfg = self.cfg
+        active_d, coords_d, l2p_d, l2c_d, final_d, _ = outputs
         # one device->host transfer for the adoption pattern + diagnostics
         active, l2p, l2c, final_l2 = jax.device_get(
             (active_d, l2p_d, l2c_d, final_d))
@@ -372,10 +397,8 @@ class CalibrationEngine:
                 "gain": [float(a - c) for a, c in zip(l2p, l2c)]}
 
         if cfg.final_gate and active.any():
-            if x_gate is None:
-                x_gate = x_t[va]
             params, diag["final_gate_dropped"] = self._final_gate(
-                eps_fn, x_gate, gt[-1][va], params)
+                eps_fn, x_gate, gt_end, params)
 
         diag["corrected_steps_paper_index"] = params.corrected_paper_steps()
         diag["n_stored_params"] = params.n_stored_params

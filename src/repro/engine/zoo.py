@@ -1,0 +1,307 @@
+"""Zoo-wide batched calibration: one teacher trajectory, one compiled run.
+
+Recalibrating a (solver, NFE) zoo after a model drop used to pay the paper's
+SS3.3 nested teacher trajectory once PER SPEC — by far the dominant cost
+(the teacher runs a 2-eval solver on an m-times-refined grid).  But a zoo
+sharing one schedule family doesn't need per-spec teachers: the polynomial
+schedule (eq. 19) is closed under sub-indexing, so the grid with
+``L = lcm(nfes)`` student intervals contains every rung's grid as a strided
+subset.  ``ZooCalibrationEngine`` therefore
+
+* builds ONE teacher trajectory on the L-interval shared grid, refined at
+  least as finely as the finest per-spec teacher would have been (the
+  shared refinement ``m`` satisfies ``L*(m+1) >= n_s*(m_s+1)`` for every
+  spec — see ``_shared_refinement``), and emits the L+1 aligned states;
+* strides that trajectory per spec (``gt_s = gt_shared[::L//n_s]``); and
+* batches every spec's Algorithm-1 program into ONE jitted run: each spec's
+  ``CalibrationEngine._calibrate_body`` is inlined into a single compiled
+  program (one trace, one dispatch, one diagnostics transfer), and groups
+  of specs that are shape-compatible (same NFE, same native space — i.e.
+  differing only in solver coefficient tables) are **vmapped over a spec
+  axis**, so their per-step eps evals execute as one batched backbone call.
+
+The teacher-eval ledger (``teacher_evals`` / per-spec sum) is what
+``benchmarks/backbone_mesh.py`` records: teacher evals are counted once,
+not once per spec.
+
+Numerics: the sequential path reuses each spec's own ``_calibrate_body``
+verbatim (bit-identical program to per-spec calibration given the same
+``gt``).  The vmapped path re-expresses the corrected step through
+``solver.phi`` with traced coefficient tables — the same contraction the
+fused kernels implement — and is asserted against the per-spec path in
+tests/test_zoo_calibration.py (same adopted steps, coords allclose).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pas as pas_mod
+from repro.core.pas import LOSS_FNS, PASParams, _QBuffer
+
+from .calibration import CalibrationEngine, get_calibration_engine_for_spec
+from .engine import _fn_key, _scaled_coords
+
+Array = jax.Array
+EpsFn = Callable[[Array, Array], Array]
+
+__all__ = ["ZooCalibrationEngine", "calibrate_zoo"]
+
+
+def _lcm(values) -> int:
+    out = 1
+    for v in values:
+        out = out * v // math.gcd(out, v)
+    return out
+
+
+class ZooCalibrationEngine:
+    """Calibrate many specs on one schedule family against ONE teacher.
+
+    ``specs`` maps lane keys to ``repro.api.SamplerSpec``s that must agree
+    on everything except (solver, nfe): same polynomial schedule, same
+    PASConfig, teacher, dtype, and mesh.  Each spec still gets its own
+    cached ``CalibrationEngine`` (so the final gate, artifacts, and any
+    later per-spec recalibration are unchanged); the zoo engine only
+    replaces the teacher build and the Algorithm-1 dispatch.
+    """
+
+    def __init__(self, specs: Mapping[str, Any]):
+        if not specs:
+            raise ValueError("ZooCalibrationEngine needs at least one spec")
+        self.specs = dict(specs)
+        base = next(iter(self.specs.values()))
+        for k, s in self.specs.items():
+            for field in ("schedule", "pas", "teacher", "dtype", "mesh"):
+                if getattr(s, field) != getattr(base, field):
+                    raise ValueError(
+                        f"zoo specs must share {field}; {k!r} has "
+                        f"{getattr(s, field)!r} != {getattr(base, field)!r}")
+        if base.schedule.kind != "polynomial":
+            raise ValueError(
+                "zoo calibration shares one teacher via schedule-family "
+                "nesting, which needs the polynomial family (closed under "
+                f"sub-indexing); got {base.schedule.kind!r}")
+        self.engines: dict[str, CalibrationEngine] = {
+            k: get_calibration_engine_for_spec(s) for k, s in self.specs.items()}
+        for eng in self.engines.values():
+            eng._require_lms()
+        self.nfes = {k: s.nfe for k, s in self.specs.items()}
+        self.L = _lcm(self.nfes.values())
+        self.strides = {k: self.L // n for k, n in self.nfes.items()}
+        # the shared-grid spec: same solver family as base (the teacher
+        # build only uses its schedule + teacher), L student intervals.
+        # When the shared grid is already at least teacher-fine, refine one
+        # extra level (2L) instead of degrading below any rung's teacher —
+        # 2L >= n*ceil(T/n) for every rung (T <= L, n <= L).
+        self._shared_spec = base.replace(nfe=self.L)
+        if base.teacher.nfe <= self.L:
+            self._shared_spec = self._shared_spec.replace(
+                teacher=dataclasses.replace(base.teacher, nfe=2 * self.L))
+        self._teacher_engine = get_calibration_engine_for_spec(
+            self._shared_spec)
+        self._compiled: dict[Any, Callable] = {}
+
+    # -- the teacher-eval ledger --------------------------------------------
+
+    @property
+    def teacher_evals(self) -> int:
+        """Model evals the ONE shared teacher trajectory costs."""
+        _, t_ts, _ = self._shared_spec.teacher_grid()
+        return self._shared_spec.make_teacher(t_ts).nfe
+
+    @property
+    def teacher_evals_per_spec(self) -> dict[str, int]:
+        """What each spec's own teacher would have cost (the old path)."""
+        out = {}
+        for k, s in self.specs.items():
+            _, t_ts, _ = s.teacher_grid()
+            out[k] = s.make_teacher(t_ts).nfe
+        return out
+
+    # -- shared teacher ------------------------------------------------------
+
+    def shared_teacher(self, eps_fn: EpsFn, x_t: Array) -> Array:
+        """The one teacher trajectory, (L+1, B, D) on the shared grid.
+
+        Refinement note (``_shared_refinement`` in the module docstring):
+        with ``m = teacher_refinement(L, teacher.nfe)`` the refined grid has
+        ``L*(m+1)`` steps; since every rung NFE divides L, a standard
+        ceiling inequality gives ``L*ceil(T/L) >= n*ceil(T/n)`` — the
+        shared trajectory is always at least as refined as any per-spec
+        teacher, so rung quality can only improve.
+        """
+        return self._teacher_engine.teacher_trajectory(eps_fn, x_t)
+
+    def gt_for(self, key: str, gt_shared: Array) -> Array:
+        """Stride the shared trajectory onto one spec's student grid."""
+        return gt_shared[::self.strides[key]]
+
+    # -- the one compiled zoo program ---------------------------------------
+
+    def _vmap_groups(self) -> list[list[str]]:
+        """Group keys whose Algorithm-1 bodies can share one vmapped trace.
+
+        Shape-compatible = same NFE and same native space (solver tables
+        vmap after K-padding).  The vmapped body skips per-step sharding
+        constraints, so it is only used on the trivial mesh; sharded zoos
+        run every body sequentially inside the same compiled program.
+        """
+        groups: dict[tuple, list[str]] = {}
+        for k, eng in self.engines.items():
+            single = eng.sampling.mesh is None
+            sig = (eng.nfe, eng.solver.native) if single else ("seq", k)
+            groups.setdefault(sig, []).append(k)
+        return list(groups.values())
+
+    def _vmapped_group(self, keys: list[str], eps_fn: EpsFn) -> Callable:
+        """One vmapped Algorithm-1 body over the stacked spec axis.
+
+        Specs in the group differ only in their (alpha, beta) coefficient
+        tables; betas are zero-padded to the widest history K (zero-beta
+        terms are exact no-ops in ``phi``).  The corrected step runs
+        through ``solver.phi`` on the traced tables — the same linear
+        contraction ``ops.fused_pas_step`` fuses — instead of the
+        closure-constant kernels, which is what makes the spec axis
+        mappable.
+        """
+        engines = [self.engines[k] for k in keys]
+        base = engines[0]
+        cfg, n = base.cfg, base.nfe
+        ts = base.solver.ts_jax
+        for e in engines[1:]:
+            if not np.array_equal(e.solver.ts, base.solver.ts):
+                raise AssertionError("grouped specs must share the grid")
+        kmax = max(int(e.solver.beta.shape[1]) for e in engines)
+
+        def pad(b):
+            b = jnp.asarray(b)
+            return jnp.pad(b, ((0, 0), (0, kmax - b.shape[1])))
+
+        alphas = jnp.stack([jnp.asarray(e.solver.alpha) for e in engines])
+        betas = jnp.stack([pad(e.solver.beta) for e in engines])
+        basis = base.sampling._basis_fn(cfg.n_basis)
+        solver0 = base.solver
+
+        def one(alpha, beta, x_t, gt):
+            sol = dataclasses.replace(solver0, alpha=alpha, beta=beta)
+            sgd = pas_mod._sgd_loop(sol, cfg, LOSS_FNS[cfg.loss])
+            b = x_t.shape[0]
+            n_val = int(round(b * cfg.val_fraction))
+            tr = slice(n_val, None)
+            va = slice(0, n_val) if n_val > 0 else slice(None)
+            x = x_t
+            hist = sol.init_hist(x_t)
+            q = _QBuffer.create(x_t, cap=n + 1)
+            actives, coords, l2ps, l2cs = [], [], [], []
+            for j in range(n):
+                t = ts[j]
+                d = eps_fn(x, t)
+                u = basis(q.rows, q.mask, d)
+                d_norm = jax.vmap(jnp.linalg.norm)(d)
+                c0 = pas_mod._init_coords(d, cfg.coord_mode, cfg.n_basis)
+                c_opt = sgd(c0, x[tr], u[tr], d_norm[tr],
+                            pas_mod._hist_slice(hist, tr), gt[j + 1][tr], j)
+                cs = _scaled_coords(c_opt, d, cfg.coord_mode)
+                d_tilde = jnp.einsum("bk,bkd->bd", cs, u).astype(d.dtype)
+                x_corr = sol.phi(x, d_tilde, j, hist)
+                x_plain = sol.phi(x, d, j, hist)
+                l2_plain = jnp.mean((x_plain[va] - gt[j + 1][va]) ** 2)
+                l2_corr = jnp.mean((x_corr[va] - gt[j + 1][va]) ** 2)
+                adopt = (l2_plain - (l2_corr + cfg.tolerance)) > 0.0
+                x_new, d_used, c_used = jax.lax.cond(
+                    adopt,
+                    lambda: (x_corr, d_tilde, c_opt),
+                    lambda: (x_plain, d, jnp.zeros_like(c_opt)))
+                hist = sol.push(x, d_used, j, hist)
+                q = q.push(d_used, j + 1)
+                x = x_new
+                actives.append(adopt)
+                coords.append(c_used)
+                l2ps.append(l2_plain)
+                l2cs.append(l2_corr)
+            final_l2 = jnp.mean((x - gt[-1]) ** 2)
+            return (jnp.stack(actives), jnp.stack(coords),
+                    jnp.stack(l2ps), jnp.stack(l2cs), final_l2, x)
+
+        mapped = jax.vmap(one, in_axes=(0, 0, None, None))
+        return lambda x_t, gt: mapped(alphas, betas, x_t, gt)
+
+    def _build_zoo(self, eps_fn: EpsFn) -> Callable:
+        groups = self._vmap_groups()
+        parts: list[tuple[list[str], Callable, bool]] = []
+        for keys in groups:
+            if len(keys) > 1:
+                parts.append((keys, self._vmapped_group(keys, eps_fn), True))
+            else:
+                parts.append(
+                    (keys, self.engines[keys[0]]._calibrate_body(eps_fn),
+                     False))
+        strides = self.strides
+
+        def run(x_t, gt_shared):
+            outs = {}
+            for keys, body, mapped in parts:
+                if mapped:
+                    stacked = body(x_t, gt_shared[::strides[keys[0]]])
+                    for i, k in enumerate(keys):
+                        outs[k] = jax.tree_util.tree_map(
+                            lambda leaf: leaf[i], stacked)
+                else:
+                    k = keys[0]
+                    outs[k] = body(x_t, gt_shared[::strides[k]])
+            return outs
+
+        return jax.jit(run)
+
+    # -- public API ----------------------------------------------------------
+
+    def calibrate(self, eps_fn: EpsFn, x_t: Array
+                  ) -> dict[str, tuple[PASParams, dict]]:
+        """Calibrate every spec: one teacher, one compiled Algorithm-1 run.
+
+        Returns ``{key: (params, diag)}`` with the usual per-spec
+        diagnostics plus a ``"zoo"`` entry recording the shared-teacher
+        ledger.  Per-spec final gates (small val-slice programs) still run
+        through each spec's own engine afterwards.
+        """
+        base_eng = next(iter(self.engines.values()))
+        x_t = base_eng.sampling.shard(x_t)
+        gt_shared = self.shared_teacher(eps_fn, x_t)
+
+        fkey = _fn_key(eps_fn)
+        fn = self._compiled.get(fkey)
+        if fn is None:
+            fn = self._build_zoo(eps_fn)
+            self._compiled[fkey] = fn
+        outs = fn(x_t, gt_shared)
+
+        shared_evals = self.teacher_evals
+        per_spec = self.teacher_evals_per_spec
+        ledger = {"teacher_shared": True,
+                  "teacher_evals": shared_evals,
+                  "teacher_evals_per_spec_sum": sum(per_spec.values()),
+                  "shared_grid_nfe": self.L}
+        results: dict[str, tuple[PASParams, dict]] = {}
+        for k, eng in self.engines.items():
+            gt_k = self.gt_for(k, gt_shared)
+            b = int(x_t.shape[0])
+            n_val = int(round(b * eng.cfg.val_fraction))
+            va = slice(0, n_val) if n_val > 0 else slice(None)
+            params, diag = eng._postprocess(
+                eps_fn, outs[k], x_t[va] if eng.cfg.final_gate else None,
+                gt_k[-1][va])
+            diag["zoo"] = dict(ledger)
+            results[k] = (params, diag)
+        return results
+
+
+def calibrate_zoo(specs: Mapping[str, Any], eps_fn: EpsFn, x_t: Array
+                  ) -> dict[str, tuple[PASParams, dict]]:
+    """One-call zoo calibration: shared teacher + one compiled Alg-1 run."""
+    return ZooCalibrationEngine(specs).calibrate(eps_fn, x_t)

@@ -17,17 +17,31 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mes
     return jax.make_mesh(shape, axes)
 
 
-def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+def make_production_mesh(*, multi_pod: bool = False,
+                         tp: int = 1) -> jax.sharding.Mesh:
     """Single pod: (data=16, model=16) = 256 chips (v5e-256).
     Multi-pod: (pod=2, data=16, model=16) = 512 chips.
+
+    ``tp`` carves backbone tensor parallelism out of the state ("model")
+    axis — the chip count stays fixed, the state axis shrinks to ``16/tp``
+    and a trailing "tensor" axis of size ``tp`` appears (the axis
+    ``repro.models.eps`` places attention-head / ff / expert shards on).
+    ``tp`` must divide 16.
 
     Validated against the local device table up front: ``jax.make_mesh``'s
     own failure on a small host is an opaque reshape error, so mismatches
     raise here with the fix spelled out (mirroring
     ``repro.parallel.MeshSpec.build``).
     """
+    if tp < 1 or 16 % tp:
+        raise ValueError(
+            f"tp must be a positive divisor of the 16-wide state axis, "
+            f"got {tp}")
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if tp > 1:
+        shape = shape[:-1] + (16 // tp, tp)
+        axes = axes[:-1] + ("model", "tensor")
     need = math.prod(shape)
     have = jax.device_count()
     if have < need:

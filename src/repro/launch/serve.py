@@ -2,7 +2,10 @@
 
 Modes:
   --mode oracle     analytic GMM eps (default; instant)
-  --mode diffusion  reduced zoo backbone in diffusion-LM mode (--arch ...)
+  --mode diffusion  reduced zoo backbone in diffusion-LM mode (--arch ...,
+                    --seq/--model-seed set geometry + weight seed; the
+                    backbone comes from ``repro.models.get_eps_model`` —
+                    one shared param tree across every lane of the launch)
 
 The sampler is built through ``repro.api``: one ``SamplerSpec``, one
 ``Pipeline``.  With ``--artifact-dir`` the calibrated ~10 parameters are
@@ -12,8 +15,10 @@ an artifact calibrated under one ``--mesh`` reloads onto any other.
 
 Sharded serving: ``--dp N`` shards the flush batch over N data-parallel
 devices, ``--state-shard M`` shards the flattened state dim over M devices
-(PAS reductions go through the ``core.distributed`` collectives), and
-``--mesh NxM`` sets both at once.  ``--lower-only`` AOT-lowers and compiles
+(PAS reductions go through the ``core.distributed`` collectives), ``--tp T``
+tensor-shards the diffusion backbone's weights (attention heads / ff dims /
+experts; requires ``--mode diffusion``), and ``--mesh DPxSTATE[xTP]`` sets
+all at once.  ``--lower-only`` AOT-lowers and compiles
 the partitioned sampling program and reports placement/collectives without
 executing — run it under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (or more) to exercise
@@ -33,7 +38,9 @@ coordinates transfer to the adaptive grid, so one artifact family serves
 both.  ``--nfe-ladder N1,N2,...`` instead serves a ``runtime.ladder``
 ladder: PAS-corrected fixed rungs at those step counts plus a teacher-grade
 lane, auto-populating the ``PipelineRouter`` so deadline slack picks the
-step count per request.
+step count per request.  Uncalibrated rungs are calibrated zoo-wide
+(``repro.engine.zoo``): one shared teacher trajectory on the
+lcm-of-rung-NFEs grid, every rung's Algorithm 1 in one compiled run.
 
 Routing: any repeatable ``--pipeline KEY=SOLVER@NFE`` switches the launch
 onto the multi-lane ``PipelineRouter`` — one submit queue over a zoo of
@@ -47,7 +54,8 @@ per-priority latency percentiles and per-lane flush counts.
 
   PYTHONPATH=src python -m repro.launch.serve --nfe 10 --solver ddim \
       [--t-min 0.002] [--t-max 80.0] [--max-batch 256] [--artifact-dir DIR] \
-      [--calibrate-batch B] [--dp N] [--state-shard M | --mesh NxM] \
+      [--calibrate-batch B] [--dp N] [--state-shard M] [--tp T] \
+      [--mesh DPxSTATE[xTP]] [--seq L] [--model-seed S] \
       [--scheduler {async,sync}] [--deadline-ms MS] [--stream] \
       [--pipeline KEY=SOLVER@NFE ...] [--priority CLASS] \
       [--arrival {upfront,poisson,trace}] [--rate R] [--duration S] \
@@ -62,7 +70,6 @@ import re
 import time
 
 import jax
-import jax.numpy as jnp
 
 # the serving types resolve through repro.api too (lazily, PEP 562): the
 # public surface is the only import boundary launchers use
@@ -74,23 +81,26 @@ from repro.core import PASConfig, two_mode_gmm
 from repro.engine import compile_cache, engine_cache_stats
 
 
-def parse_mesh(value: str) -> tuple[int, int]:
-    """Parse a ``--mesh DPxSTATE`` grid, rejecting malformed values.
+def parse_mesh(value: str) -> tuple[int, int, int]:
+    """Parse a ``--mesh DPxSTATE[xTP]`` grid, rejecting malformed values.
 
     The old ``str.partition("x")`` parsing silently accepted ``8`` (as
     dp=8, state defaulted) and ``x4`` (empty dp -> crash later); both now
     fail at the argparse boundary with the expected format spelled out.
+    The optional third component is backbone tensor parallelism
+    (``MeshSpec.tp``; ``--mesh 2x1x4`` = dp=2, state=1, tp=4).
     """
-    m = re.fullmatch(r"(\d+)x(\d+)", value.strip())
+    m = re.fullmatch(r"(\d+)x(\d+)(?:x(\d+))?", value.strip())
     if not m:
         raise argparse.ArgumentTypeError(
-            f"expected DPxSTATE (two positive integers joined by 'x', e.g. "
-            f"8x1 or 2x4), got {value!r}")
+            f"expected DPxSTATE or DPxSTATExTP (positive integers joined by "
+            f"'x', e.g. 8x1, 2x4 or 2x1x4), got {value!r}")
     dp, state = int(m.group(1)), int(m.group(2))
-    if dp < 1 or state < 1:
+    tp = int(m.group(3)) if m.group(3) else 1
+    if dp < 1 or state < 1 or tp < 1:
         raise argparse.ArgumentTypeError(
-            f"mesh axes must be >= 1, got dp={dp} state={state}")
-    return dp, state
+            f"mesh axes must be >= 1, got dp={dp} state={state} tp={tp}")
+    return dp, state, tp
 
 
 def parse_nfe_list(value: str) -> tuple[int, ...]:
@@ -127,21 +137,24 @@ def _oracle_eps(dim: int):
 
 
 def _diffusion_lm_eps(arch: str, seq: int = 32):
-    from repro import models
-    from repro.configs import get_config
-    from repro.diffusion import EDMConfig, eps_from_denoiser, precondition
-    cfg = get_config(arch).reduced()
-    params = models.init_params(jax.random.key(0), cfg,
-                                with_diffusion_head=True)
-    d_state = seq * cfg.d_model
+    """Deprecated shim — use ``repro.models.eps.build_eps`` instead.
 
-    def raw_fn(x_flat, c_noise):
-        x = x_flat.reshape(-1, seq, cfg.d_model)
-        out = models.denoise(params, x, jnp.exp(4.0 * c_noise), cfg)
-        return out.reshape(x_flat.shape)
-
-    return jax.jit(eps_from_denoiser(
-        precondition(raw_fn, EDMConfig(sigma_data=1.0)))), d_state
+    The private helper this launcher used to carry (replicated params,
+    hardcoded ``seq=32`` / ``jax.random.key(0)``) was promoted to the
+    first-class ``repro.models.eps`` module, which additionally places
+    params and per-layer activations on the launch mesh (``MeshSpec.tp``
+    backbone tensor parallelism).  This wrapper reproduces the exact old
+    (eps_fn, dim) contract — bit-identical outputs — and will be removed;
+    see README "Real backbones on the mesh".
+    """
+    import warnings
+    warnings.warn(
+        "launch.serve._diffusion_lm_eps is deprecated; use "
+        "repro.models.eps.build_eps(arch, seq=..., seed=..., mesh=...)",
+        DeprecationWarning, stacklevel=2)
+    from repro.models import build_eps
+    model = build_eps(arch, seq=seq, seed=0)
+    return model.fn, model.dim
 
 
 def _calibrated_pipeline(cfg: ServeConfig, eps_fn, dim: int,
@@ -300,6 +313,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="oracle", choices=["oracle", "diffusion"])
     ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--seq", type=int, default=32,
+                    help="backbone sequence length for --mode diffusion "
+                         "(state dim = seq * d_model)")
+    ap.add_argument("--model-seed", type=int, default=0,
+                    help="backbone init seed for --mode diffusion")
     ap.add_argument("--solver", default="ddim")
     ap.add_argument("--nfe", type=int, default=10)
     ap.add_argument("--no-pas", action="store_true")
@@ -321,9 +339,14 @@ def main() -> None:
     ap.add_argument("--state-shard", type=int, default=1,
                     help="state-dim mesh axis (D sharding; PAS reductions "
                          "run through core.distributed collectives)")
-    ap.add_argument("--mesh", default=None, metavar="DPxSTATE",
+    ap.add_argument("--tp", type=int, default=1,
+                    help="backbone tensor-parallel mesh axis (--mode "
+                         "diffusion: shards eps-model weights/activations "
+                         "via repro.models.eps; composes with --dp)")
+    ap.add_argument("--mesh", default=None, metavar="DPxSTATE[xTP]",
                     type=parse_mesh,
-                    help="shorthand setting both axes, e.g. --mesh 8x1")
+                    help="shorthand setting all axes, e.g. --mesh 8x1 or "
+                         "--mesh 2x1x4")
     ap.add_argument("--pipeline", action="append", dest="pipelines",
                     metavar="KEY=SOLVER@NFE", type=parse_pipeline,
                     help="add one router lane (repeatable); any --pipeline "
@@ -409,8 +432,11 @@ def main() -> None:
         if len(set(keys)) != len(keys):
             ap.error(f"duplicate --pipeline keys: {keys}")
     if args.mesh is not None:
-        args.dp, args.state_shard = args.mesh
-    mesh = MeshSpec(dp=args.dp, state=args.state_shard)
+        args.dp, args.state_shard, args.tp = args.mesh
+    if args.tp > 1 and args.mode != "diffusion":
+        ap.error("--tp shards the eps backbone; it requires --mode diffusion "
+                 "(the oracle eps has no weights to shard)")
+    mesh = MeshSpec(dp=args.dp, state=args.state_shard, tp=args.tp)
 
     if args.cache_dir:
         # wire the persistent compile cache before anything compiles: the
@@ -421,12 +447,18 @@ def main() -> None:
 
     if args.mode == "oracle":
         eps_fn, dim = _oracle_eps(args.dim)
+        model_key = f"oracle:gmm:{dim}"
     else:
-        eps_fn, dim = _diffusion_lm_eps(args.arch)
-    # the eps model's identity in the executable-serialization key: oracle
-    # eps is fully determined by its dim; a zoo backbone by (arch, seq dim)
-    model_key = (f"oracle:gmm:{dim}" if args.mode == "oracle"
-                 else f"diffusion:{args.arch}:{dim}")
+        # the first-class eps module: ONE shared param tree (every router /
+        # ladder lane reuses it), placed on the launch mesh with --tp
+        # backbone tensor parallelism composing with sampling DP
+        from repro.models import get_eps_model
+        eps_model = get_eps_model(args.arch, seq=args.seq,
+                                  seed=args.model_seed, mesh=mesh)
+        eps_fn, dim = eps_model.fn, eps_model.dim
+        # the eps model's identity in the executable-serialization key
+        # (placement excluded — engine fingerprints hash the mesh)
+        model_key = eps_model.model_key
     args.model_key = model_key
 
     cfg = ServeConfig(nfe=args.nfe, solver=args.solver,
@@ -437,7 +469,8 @@ def main() -> None:
                       mesh=mesh,
                       scheduler=args.scheduler,
                       deadline_ms=args.deadline_ms,
-                      slack_ms_per_eval=args.slack_ms_per_eval)
+                      slack_ms_per_eval=args.slack_ms_per_eval,
+                      seq=args.seq, model_seed=args.model_seed)
 
     if args.lower_only:
         # the serve dry-run: compile (never run) the partitioned programs —
@@ -527,7 +560,7 @@ def main() -> None:
     print(f"served {server.stats['samples']} samples / "
           f"{server.stats['requests']} requests in "
           f"{server.stats['batches']} batches "
-          f"(mesh dp={mesh.dp} state={mesh.state}, "
+          f"(mesh dp={mesh.dp} state={mesh.state} tp={mesh.tp}, "
           f"{server.stats['padded_samples']} pad rows, "
           f"{server.stats['nfe_total']} evals), "
           f"{server.stats['wall_s']:.2f}s")

@@ -1,5 +1,9 @@
+from .eps import (EPS_TP_TOL, EpsModel, build_eps, clear_eps_cache,
+                  eps_axis_rules, get_eps_model)
 from .model import (Cache, decode_step, denoise, forward, init_params,
                     lm_loss, param_specs, prefill)
 
 __all__ = ["Cache", "decode_step", "denoise", "forward", "init_params",
-           "lm_loss", "param_specs", "prefill"]
+           "lm_loss", "param_specs", "prefill",
+           "EPS_TP_TOL", "EpsModel", "build_eps", "clear_eps_cache",
+           "eps_axis_rules", "get_eps_model"]

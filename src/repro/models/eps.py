@@ -1,0 +1,208 @@
+"""Mesh-placed eps models: zoo backbones as first-class diffusion eps fns.
+
+This module promotes ``launch/serve``'s old private ``_diffusion_lm_eps``
+helper into the real model/engine boundary: ``build_eps`` turns any zoo
+architecture (``repro.configs.get_config``) into an :class:`EpsModel` — an
+``eps(x_flat, t)`` callable in the EDM convention the engines consume, plus
+the *one shared parameter tree* every lane / engine / ladder rung built from
+it reuses.
+
+Tensor parallelism composes with sampling DP here, not in the engines:
+
+* **Params** are materialized once with the placement-free jitted
+  initializer and then ``device_put`` onto per-leaf shardings from
+  ``parallel.sharding.param_partition_specs``, so every placement of the
+  same (arch, seq, seed) sees the bit-identical weight tree — tp=1, tp=4
+  and the old replicated helper all agree (see ``_materialize_params`` for
+  why init-then-place rather than sharded ``out_shardings``).
+* **Activations** are constrained per layer: the zoo models already call
+  ``parallel.sharding.constrain`` at every block; the eps closure enters an
+  ``axis_rules`` context *inside its own body*, which is active whenever an
+  engine traces the eps — including inside ``SamplingEngine`` /
+  ``CalibrationEngine`` / ``AdaptiveEngine`` scans — so the backbone's TP
+  collectives nest inside the compiled sampling program.
+* **Engine buffers** stay (B, D) sharded over (dp, state) only; the TP axis
+  (``MeshSpec.tp`` / mesh axis "tensor") is invisible to the solver math.
+  Entering/leaving the backbone resharsd activations between the engine
+  layout and the TP layout; XLA inserts the collectives.
+
+Mesh tolerance: TP reshards weight contractions (heads / ff / expert dims),
+which reassociates the reductions, so TP-vs-replicated outputs agree to
+floating-point tolerance, not bitwise — see ``EPS_TP_TOL`` and
+tests/test_backbone_mesh.py.  dp/state placement of the *engine* buffers
+remains bit-exact, as before.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.parallel.mesh import MeshSpec
+from repro.parallel.sharding import AxisRules, axis_rules, param_partition_specs
+
+from . import model as _model
+
+__all__ = ["EpsModel", "EPS_TP_TOL", "build_eps", "get_eps_model",
+           "eps_axis_rules", "clear_eps_cache"]
+
+# documented mesh tolerance for TP-vs-replicated eps outputs (fp32, reduced
+# configs): TP reassociates head/ff/expert reductions.  Engine-level
+# dp/state placement stays bit-exact; only backbone TP pays this.
+EPS_TP_TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def eps_axis_rules(mesh: jax.sharding.Mesh, spec: MeshSpec) -> AxisRules:
+    """Logical->physical rules for a backbone running inside the sampler.
+
+    The backbone's "batch" rides the engine's data-parallel axis, its
+    "model"/"expert" (TP/EP) dims ride the dedicated ``tp_axis`` ("tensor").
+    The engine's *state* axis is deliberately absent: it shards the
+    flattened (B, D) sample dim, which has no meaning inside the backbone.
+    """
+    return AxisRules(mesh=mesh,
+                     batch=(spec.batch_axis,),
+                     model=(spec.tp_axis,),
+                     fsdp=(),
+                     expert=(spec.tp_axis,))
+
+
+@dataclasses.dataclass(frozen=True)
+class EpsModel:
+    """A mesh-placed zoo backbone wrapped as a diffusion eps function.
+
+    ``fn(x_flat, t) -> eps`` follows the engine convention: ``x_flat`` is
+    the flattened ``(B, dim)`` state, ``t`` the sigma/time vector.  All
+    consumers share ``params`` — one tree, materialized once, placed on the
+    launch mesh (replicated when ``mesh.tp == 1``, TP-sharded otherwise).
+    """
+
+    fn: Callable[..., Any]
+    dim: int
+    params: Any
+    cfg: Any
+    arch: str
+    seq: int
+    seed: int
+    mesh_spec: MeshSpec
+
+    @property
+    def model_key(self) -> str:
+        """Identity for the persistent executable-serialization cache.
+
+        Placement (mesh/tp) is *not* part of the model identity — the
+        engine fingerprint already hashes the full ``MeshSpec`` — so the
+        key names exactly what determines the weights: arch, geometry, seed.
+        """
+        return f"diffusion:{self.arch}:seq{self.seq}:seed{self.seed}:{self.dim}"
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(p.size) for p in jax.tree_util.tree_leaves(self.params))
+
+
+def _materialize_params(cfg, seed: int, mesh_spec: MeshSpec):
+    """Init the param tree, then place it onto the launch mesh.
+
+    The initializer always runs as the plain jitted program — the same
+    random stream regardless of placement — and the tree is then
+    ``device_put`` onto per-leaf ``NamedSharding``s computed from
+    ``param_partition_specs`` under :func:`eps_axis_rules`.  Init-then-place
+    (rather than ``jax.jit(init, out_shardings=...)``) is deliberate: with
+    the default (non-partitionable) threefry, sharded out_shardings let the
+    SPMD partitioner split the RNG computation non-value-preservingly on
+    meshes with a replicated axis (observed: dp>1 x tp>1 flipped the
+    row-sharded leaves), and opting into ``jax_threefry_partitionable``
+    changes the stream itself, breaking parity with pre-mesh checkpoints.
+    Value identity across placements is the contract the parity tests pin.
+    """
+    init = lambda k: _model.init_params(k, cfg, with_diffusion_head=True)
+    key = jax.random.key(seed)
+    params = jax.jit(init)(key)
+    if mesh_spec.is_single:
+        return params
+    mesh = mesh_spec.build()
+    rules = eps_axis_rules(mesh, mesh_spec)
+    abstract = jax.eval_shape(init, key)
+    pspecs = param_partition_specs(abstract, rules)
+    shardings = jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda s: isinstance(s, jax.sharding.PartitionSpec))
+    return jax.device_put(params, shardings)
+
+
+def build_eps(arch: str, *, seq: int = 32, seed: int = 0,
+              mesh: Optional[MeshSpec] = None, reduced: bool = True,
+              sigma_data: float = 1.0) -> EpsModel:
+    """Build a mesh-placed diffusion-LM eps function from a zoo arch.
+
+    The backbone runs in diffusion mode (sigma-FiLM conditioning + EDM
+    preconditioning, ``sigma = exp(4 * c_noise)`` — the same convention the
+    old ``launch/serve._diffusion_lm_eps`` used).  ``seq`` and ``seed`` are
+    finally configurable (they were hardcoded to 32 / key(0)); ``mesh``
+    places params and activations, with ``mesh.tp`` sharding the backbone.
+    """
+    from repro.diffusion import EDMConfig, eps_from_denoiser, precondition
+
+    mesh_spec = mesh or MeshSpec()
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    if seq < 1:
+        raise ValueError(f"seq must be >= 1, got {seq}")
+    params = _materialize_params(cfg, seed, mesh_spec)
+    dim = seq * cfg.d_model
+    rules = (None if mesh_spec.is_single
+             else eps_axis_rules(mesh_spec.build(), mesh_spec))
+
+    def raw_fn(x_flat, c_noise):
+        x = x_flat.reshape(-1, seq, cfg.d_model)
+        out = _model.denoise(params, x, jnp.exp(4.0 * c_noise), cfg)
+        return out.reshape(x_flat.shape)
+
+    eps0 = eps_from_denoiser(precondition(raw_fn, EDMConfig(sigma_data=sigma_data)))
+
+    if rules is None:
+        fn = jax.jit(eps0)
+    else:
+        # the rules context is entered inside the traced body, so the
+        # per-layer constrain() calls bind whether the eps is called
+        # directly, jitted, or traced inside an engine's compiled scan
+        def fn(x_flat, t):
+            with axis_rules(rules):
+                return eps0(x_flat, t)
+
+    return EpsModel(fn=fn, dim=dim, params=params, cfg=cfg, arch=arch,
+                    seq=seq, seed=seed, mesh_spec=mesh_spec)
+
+
+# ---------------------------------------------------------------------------
+# the shared-tree cache: every lane of a ladder/router built from the same
+# (arch, seq, seed, mesh) gets the SAME EpsModel — one param tree, one eps
+# closure, one engine `_fn_key` — instead of a per-lane re-init
+# ---------------------------------------------------------------------------
+
+_EPS_CACHE: dict[tuple, EpsModel] = {}
+_EPS_CACHE_CAP = 8
+
+
+def get_eps_model(arch: str, *, seq: int = 32, seed: int = 0,
+                  mesh: Optional[MeshSpec] = None,
+                  reduced: bool = True) -> EpsModel:
+    """Cached :func:`build_eps` — the one-shared-param-tree entry point."""
+    key = (arch, seq, seed, mesh or MeshSpec(), reduced)
+    hit = _EPS_CACHE.get(key)
+    if hit is not None:
+        return hit
+    model = build_eps(arch, seq=seq, seed=seed, mesh=mesh, reduced=reduced)
+    if len(_EPS_CACHE) >= _EPS_CACHE_CAP:
+        _EPS_CACHE.pop(next(iter(_EPS_CACHE)))
+    _EPS_CACHE[key] = model
+    return model
+
+
+def clear_eps_cache() -> None:
+    _EPS_CACHE.clear()

@@ -15,7 +15,12 @@ mesh produce bit-identical fp32 samples (tests/test_mesh.py), and a
 
 Axis conventions match ``repro.parallel.sharding.AxisRules``: the batch axis
 is data-parallel ("data"), the state axis shards the flattened sample dim D
-("model") and is what the ``core.distributed`` collectives reduce over.
+("model") and is what the ``core.distributed`` collectives reduce over, and
+the tensor-parallel axis ("tensor") shards backbone weights *inside* the eps
+function (``repro.models.eps``) — engine (B, D) buffers are never sharded
+over it, so its collectives nest freely inside the sampling scan.  (The
+state axis predates real backbones and kept its historical "model" name;
+backbone TP lives on "tensor".)
 """
 from __future__ import annotations
 
@@ -44,35 +49,43 @@ def compat_make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
 
 @dataclasses.dataclass(frozen=True)
 class MeshSpec:
-    """A (dp, state) sampling mesh: batch-DP x state-dim sharding.
+    """A (dp, state, tp) sampling mesh: batch-DP x state-dim x backbone-TP.
 
     ``dp`` shards the batch axis of every (B, D) sampling buffer;
     ``state`` shards the flattened state dim D (the axis every PAS reduction
-    runs over — see ``core.distributed``).  The default (1, 1) is the
+    runs over — see ``core.distributed``); ``tp`` shards the *backbone*
+    (eps-model weights and per-layer activations via
+    ``parallel.sharding.AxisRules`` — see ``repro.models.eps``) and never
+    touches the engine's (B, D) buffers.  The default (1, 1, 1) is the
     single-device spec: engines bound to it compile exactly the pre-mesh
-    program and no mesh is constructed at all.
+    program and no mesh is constructed at all.  When ``tp == 1`` the built
+    mesh is the legacy two-axis (dp, state) mesh, so every existing spec
+    hashes, fingerprints, and compiles exactly as before.
     """
 
     dp: int = 1
     state: int = 1
     batch_axis: str = "data"
     state_axis: str = "model"
+    tp: int = 1
+    tp_axis: str = "tensor"
 
     def __post_init__(self):
         object.__setattr__(self, "dp", int(self.dp))
         object.__setattr__(self, "state", int(self.state))
-        if self.dp < 1 or self.state < 1:
+        object.__setattr__(self, "tp", int(self.tp))
+        if self.dp < 1 or self.state < 1 or self.tp < 1:
             raise ValueError(f"mesh axes must be >= 1, got dp={self.dp} "
-                             f"state={self.state}")
-        if self.batch_axis == self.state_axis:
-            raise ValueError(f"batch_axis and state_axis must differ, both "
-                             f"{self.batch_axis!r}")
+                             f"state={self.state} tp={self.tp}")
+        names = (self.batch_axis, self.state_axis, self.tp_axis)
+        if len(set(names)) != 3:
+            raise ValueError(f"mesh axis names must be distinct, got {names}")
 
     # -- geometry ----------------------------------------------------------
 
     @property
     def n_devices(self) -> int:
-        return self.dp * self.state
+        return self.dp * self.state * self.tp
 
     @property
     def is_single(self) -> bool:
@@ -80,16 +93,25 @@ class MeshSpec:
         return self.n_devices == 1
 
     def build(self) -> Mesh:
-        """Construct the device mesh (requires dp*state visible devices)."""
+        """Construct the device mesh (requires dp*state*tp visible devices).
+
+        ``tp == 1`` builds the historical two-axis (dp, state) mesh —
+        bit-identical programs and cache keys for every pre-TP spec; only a
+        genuine tensor-parallel request grows the third axis.
+        """
         avail = len(jax.devices())
         if avail < self.n_devices:
             raise ValueError(
-                f"MeshSpec(dp={self.dp}, state={self.state}) needs "
-                f"{self.n_devices} devices but only {avail} are visible "
+                f"MeshSpec(dp={self.dp}, state={self.state}, tp={self.tp}) "
+                f"needs {self.n_devices} devices but only {avail} are visible "
                 f"(hint: XLA_FLAGS=--xla_force_host_platform_device_count="
                 f"{self.n_devices} for a virtual host mesh)")
-        return compat_make_mesh((self.dp, self.state),
-                                (self.batch_axis, self.state_axis))
+        if self.tp == 1:
+            return compat_make_mesh((self.dp, self.state),
+                                    (self.batch_axis, self.state_axis))
+        return compat_make_mesh(
+            (self.dp, self.state, self.tp),
+            (self.batch_axis, self.state_axis, self.tp_axis))
 
     # -- shardings ---------------------------------------------------------
 

@@ -1,3 +1,4 @@
+from .ladder import NFELadder
 from .router import PipelineRouter
 from .scheduler import PRIORITIES, ServeHandle, ServeScheduler
 from .serve_loop import DiffusionServer, Request, ServeConfig
@@ -5,7 +6,8 @@ from .traffic import (Arrival, load_trace, poisson_arrivals, replay,
                       save_trace)
 from .train_loop import StragglerMonitor, TrainLoopConfig, run_train_loop
 
-__all__ = ["Arrival", "DiffusionServer", "PRIORITIES", "PipelineRouter",
+__all__ = ["Arrival", "DiffusionServer", "NFELadder", "PRIORITIES",
+           "PipelineRouter",
            "Request", "ServeConfig", "ServeHandle", "ServeScheduler",
            "StragglerMonitor", "TrainLoopConfig", "load_trace",
            "poisson_arrivals", "replay", "run_train_loop", "save_trace"]

@@ -119,9 +119,19 @@ class NFELadder:
                                  cache=cache, model_key=model_key)
 
     def calibrate(self, router, key: Array, batch: int = 256,
-                  artifact_dir=None) -> "NFELadder":
+                  artifact_dir=None, *,
+                  shared_teacher: bool = True) -> "NFELadder":
         """Calibrate every PAS rung lane of ``router`` (teacher rung skipped
         — it serves uncorrected) and persist the artifact family.
+
+        ``shared_teacher=True`` (the default) routes all uncalibrated PAS
+        rungs through ``repro.engine.zoo``: since every rung shares the base
+        spec's schedule family, ONE teacher trajectory on the
+        lcm-of-rung-NFEs grid serves the whole ladder and every rung's
+        Algorithm 1 runs in one compiled program — a model drop recalibrates
+        the full ladder for roughly the cost of one spec (the zoo ledger
+        lands in each rung's ``diag["zoo"]``).  ``shared_teacher=False``
+        (or a non-polynomial schedule) falls back to per-rung calibration.
 
         With ``artifact_dir``, each calibrated rung saves its
         ``PASArtifact`` under ``<dir>/<key>/`` and the ladder manifest is
@@ -129,6 +139,19 @@ class NFELadder:
         ``NFELadder.from_manifest(dir)`` + ``build_router(...,
         artifact_dir=dir)`` rebuilds the calibrated router.
         """
+        todo = [name for name in self.keys
+                if self.use_pas[name] and not router.pipelines[name].calibrated]
+        zoo_keys = (todo if shared_teacher and len(todo) > 1
+                    and self.base_spec.schedule.kind == "polynomial" else [])
+        if zoo_keys:
+            from repro.engine.zoo import ZooCalibrationEngine
+            zoo = ZooCalibrationEngine(
+                {name: router.pipelines[name].spec for name in zoo_keys})
+            first = router.pipelines[zoo_keys[0]]
+            results = zoo.calibrate(first.eps_fn, first.prior(key, batch))
+            for name in zoo_keys:
+                params, diag = results[name]
+                router.pipelines[name].set_params(params, diag)
         for name in self.keys:
             if not self.use_pas[name]:
                 continue

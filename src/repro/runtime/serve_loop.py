@@ -82,6 +82,11 @@ class ServeConfig:
     default_priority: str = "batch"       # class for Request.priority=None
     route_by: str = "slack"               # "slack" | "explicit" lane routing
     slack_ms_per_eval: float = 1.0        # deadline-slack cost model, ms/eval
+    # diffusion-mode backbone geometry (``launch/serve --mode diffusion``;
+    # ``repro.models.eps.build_eps`` consumes these — the oracle mode and
+    # the sampler spec ignore them)
+    seq: int = 32                         # backbone sequence length
+    model_seed: int = 0                   # backbone init seed
 
     def __post_init__(self):
         if self.scheduler not in ("async", "sync"):
@@ -102,6 +107,8 @@ class ServeConfig:
         if self.slack_ms_per_eval <= 0:
             raise ValueError(
                 f"slack_ms_per_eval must be > 0, got {self.slack_ms_per_eval}")
+        if self.seq < 1:
+            raise ValueError(f"seq must be >= 1, got {self.seq}")
 
     def to_spec(self) -> SamplerSpec:
         """The declarative sampler description this config serves."""

@@ -368,13 +368,14 @@ def test_serve_config_validation():
 
 
 @pytest.mark.parametrize("value,expect", [
-    ("8x1", (8, 1)), ("2x4", (2, 4)), (" 1x1 ", (1, 1))])
+    ("8x1", (8, 1, 1)), ("2x4", (2, 4, 1)), (" 1x1 ", (1, 1, 1)),
+    ("2x1x4", (2, 1, 4))])
 def test_parse_mesh_accepts_valid_grids(value, expect):
     assert parse_mesh(value) == expect
 
 
-@pytest.mark.parametrize("value", ["8", "x4", "8x", "2x3x4", "axb", "-1x2",
-                                   "0x2", "2x0", ""])
+@pytest.mark.parametrize("value", ["8", "x4", "8x", "2x3x4x5", "axb", "-1x2",
+                                   "0x2", "2x0", "2x1x0", ""])
 def test_parse_mesh_rejects_malformed(value):
     with pytest.raises(argparse.ArgumentTypeError):
         parse_mesh(value)

@@ -1,0 +1,198 @@
+"""Zoo-wide batched calibration: one teacher, one compiled Algorithm-1 run.
+
+The fast tests pin the host-side contracts: spec validation, the lcm grid
+and its per-spec strides (the polynomial family is closed under
+sub-indexing), the shared-teacher refinement bump, the teacher-eval ledger,
+and the vmap grouping rule.  The slow tests compile the real programs and
+assert the numerics contract from ``repro.engine.zoo``: given the same
+ground-truth trajectory, the zoo program reproduces each spec's own
+``_calibrate_body`` — sequential bodies bit-exactly, vmapped groups within
+float tolerance — and ``NFELadder.calibrate`` rides the shared-teacher path
+end to end (artifact family included).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.api import PASConfig, SamplerSpec, ScheduleSpec, TeacherSpec
+from repro.core import analytic
+from repro.engine.zoo import ZooCalibrationEngine, _lcm, calibrate_zoo
+from repro.runtime import NFELadder
+
+DIM = 16
+
+
+@pytest.fixture(scope="module")
+def gmm():
+    return analytic.two_mode_gmm(DIM, sep=6.0, var=0.25)
+
+
+def _spec(solver="ddim", nfe=2, teacher_nfe=12, sgd=30, **kw):
+    return SamplerSpec(solver=solver, nfe=nfe,
+                       teacher=TeacherSpec(nfe=teacher_nfe),
+                       pas=PASConfig(n_sgd_iters=sgd), **kw)
+
+
+# ---------------------------------------------------------------------------
+# host-side contracts (no compilation)
+# ---------------------------------------------------------------------------
+
+
+def test_zoo_validation():
+    with pytest.raises(ValueError, match="at least one"):
+        ZooCalibrationEngine({})
+    with pytest.raises(ValueError, match="share teacher"):
+        ZooCalibrationEngine({"a": _spec(nfe=2, teacher_nfe=12),
+                              "b": _spec(nfe=3, teacher_nfe=24)})
+    with pytest.raises(ValueError, match="polynomial"):
+        ZooCalibrationEngine({"a": _spec(
+            nfe=2, schedule=ScheduleSpec(kind="linear"))})
+
+
+def test_lcm_and_strided_grid_nesting():
+    assert _lcm((5, 8, 10)) == 40
+    zoo = ZooCalibrationEngine({"n2": _spec(nfe=2), "n3": _spec(nfe=3)})
+    assert zoo.L == 6 and zoo.strides == {"n2": 3, "n3": 2}
+    # the polynomial grid with L intervals contains every rung grid as a
+    # strided subset — this nesting is what makes ONE teacher sufficient
+    ts_shared = np.asarray(zoo._teacher_engine.solver.ts)
+    for k, eng in zoo.engines.items():
+        np.testing.assert_allclose(ts_shared[::zoo.strides[k]],
+                                   np.asarray(eng.solver.ts),
+                                   rtol=1e-12, atol=1e-12)
+
+
+def test_teacher_eval_ledger():
+    """nfes (5, 8, 10) under a heun@100 teacher: the shared trajectory costs
+    240 evals where the per-spec path paid 608 — counted once, not per spec."""
+    zoo = ZooCalibrationEngine({f"nfe{n}": _spec(nfe=n, teacher_nfe=100)
+                                for n in (5, 8, 10)})
+    assert zoo.L == 40
+    assert zoo.teacher_evals == 240
+    per = zoo.teacher_evals_per_spec
+    assert sum(per.values()) == 608
+    assert zoo.teacher_evals < sum(per.values())
+
+
+def test_shared_teacher_refined_past_coarse_teacher():
+    """When the shared L-grid is already at least teacher-fine, the zoo bumps
+    the shared teacher to 2L rather than degrade below any rung's teacher."""
+    zoo = ZooCalibrationEngine({"n4": _spec(nfe=4, teacher_nfe=8),
+                                "n6": _spec(nfe=6, teacher_nfe=8)})
+    assert zoo.L == 12
+    assert zoo._shared_spec.teacher.nfe == 24
+    # every rung's own refined-teacher step count is dominated
+    grid_steps = zoo.teacher_evals
+    for k in zoo.specs:
+        assert grid_steps >= zoo.teacher_evals_per_spec[k]
+
+
+def test_vmap_grouping_rule(monkeypatch):
+    zoo = ZooCalibrationEngine({"d4": _spec("ddim", 4),
+                                "i4": _spec("ipndm2", 4),
+                                "d8": _spec("ddim", 8)})
+    groups = sorted(sorted(g) for g in zoo._vmap_groups())
+    assert groups == [["d4", "i4"], ["d8"]]
+    # sharded zoos never vmap (the vmapped body skips per-step sharding
+    # constraints); a bound mesh forces every body sequential
+    for eng in zoo.engines.values():
+        monkeypatch.setattr(eng.sampling, "mesh", object(), raising=True)
+    assert all(len(g) == 1 for g in zoo._vmap_groups())
+
+
+# ---------------------------------------------------------------------------
+# compiled parity (slow)
+# ---------------------------------------------------------------------------
+
+
+def _reference(zoo, key, eps_fn, x_t, gt_shared):
+    """The per-spec path fed the SAME ground truth: each engine's own
+    ``_calibrate_body`` + ``_postprocess``, exactly what ``calibrate()``
+    would run spec by spec."""
+    eng = zoo.engines[key]
+    gt_k = zoo.gt_for(key, gt_shared)
+    outs = jax.jit(eng._calibrate_body(eps_fn))(x_t, gt_k)
+    b = int(x_t.shape[0])
+    n_val = int(round(b * eng.cfg.val_fraction))
+    va = slice(0, n_val) if n_val > 0 else slice(None)
+    return eng._postprocess(eps_fn, outs,
+                            x_t[va] if eng.cfg.final_gate else None,
+                            gt_k[-1][va])
+
+
+@pytest.mark.slow
+def test_zoo_matches_per_spec_given_same_gt(gmm):
+    zoo = ZooCalibrationEngine({"n2": _spec(nfe=2), "n3": _spec(nfe=3)})
+    x = gmm.sample_prior(jax.random.key(0), 64, 80.0)
+    results = zoo.calibrate(gmm.eps, x)
+    gt = zoo.shared_teacher(gmm.eps, x)
+    for key in ("n2", "n3"):
+        params, diag = results[key]
+        p_ref, d_ref = _reference(zoo, key, gmm.eps, x, gt)
+        np.testing.assert_array_equal(np.asarray(params.active),
+                                      np.asarray(p_ref.active))
+        np.testing.assert_array_equal(np.asarray(params.coords),
+                                      np.asarray(p_ref.coords))
+        assert diag["zoo"]["teacher_shared"] is True
+        assert (diag["zoo"]["teacher_evals"]
+                < diag["zoo"]["teacher_evals_per_spec_sum"])
+        assert (diag["corrected_steps_paper_index"]
+                == d_ref["corrected_steps_paper_index"])
+        assert diag["final_l2_to_gt"] == d_ref["final_l2_to_gt"]
+
+
+@pytest.mark.slow
+def test_vmapped_group_parity(gmm):
+    """Same-NFE specs share one vmapped trace; the traced-coefficient-table
+    body must match each spec's own closure-constant body."""
+    specs = {"d3": _spec("ddim", 3), "i3": _spec("ipndm2", 3)}
+    zoo = ZooCalibrationEngine(specs)
+    assert [sorted(g) for g in zoo._vmap_groups()] == [["d3", "i3"]]
+    x = gmm.sample_prior(jax.random.key(1), 64, 80.0)
+    results = zoo.calibrate(gmm.eps, x)
+    gt = zoo.shared_teacher(gmm.eps, x)
+    for key in specs:
+        params, _ = results[key]
+        p_ref, _ = _reference(zoo, key, gmm.eps, x, gt)
+        np.testing.assert_array_equal(np.asarray(params.active),
+                                      np.asarray(p_ref.active))
+        np.testing.assert_allclose(np.asarray(params.coords),
+                                   np.asarray(p_ref.coords),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_calibrate_zoo_helper(gmm):
+    x = gmm.sample_prior(jax.random.key(2), 32, 80.0)
+    out = calibrate_zoo({"n2": _spec(nfe=2)}, gmm.eps, x)
+    params, diag = out["n2"]
+    assert params.active.shape == (2,)
+    assert diag["zoo"]["shared_grid_nfe"] == 2
+
+
+@pytest.mark.slow
+def test_ladder_rides_shared_teacher(gmm, tmp_path):
+    ladder = NFELadder(_spec(nfe=6), nfes=(2, 3))
+    router = ladder.build_router(gmm.eps, dim=DIM)
+    ladder.calibrate(router, key=jax.random.key(0), batch=64,
+                     artifact_dir=tmp_path)
+    for name in ("nfe2", "nfe3"):
+        pipe = router.pipelines[name]
+        assert pipe.calibrated
+        assert pipe.diag["zoo"]["teacher_shared"] is True
+        assert (tmp_path / name).exists()
+    # the artifact family round-trips into an identically calibrated router
+    reloaded = NFELadder.from_manifest(tmp_path)
+    router2 = reloaded.build_router(gmm.eps, dim=DIM, artifact_dir=tmp_path)
+    for name in ("nfe2", "nfe3"):
+        np.testing.assert_array_equal(
+            np.asarray(router.pipelines[name].params.coords),
+            np.asarray(router2.pipelines[name].params.coords))
+    # opting out (or a single uncalibrated rung) falls back to per-rung
+    ladder_f = NFELadder(_spec(nfe=6), nfes=(2, 3))
+    router_f = ladder_f.build_router(gmm.eps, dim=DIM)
+    ladder_f.calibrate(router_f, key=jax.random.key(0), batch=64,
+                       shared_teacher=False)
+    pipe_f = router_f.pipelines["nfe2"]
+    assert pipe_f.calibrated and "zoo" not in pipe_f.diag
